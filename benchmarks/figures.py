@@ -1,0 +1,221 @@
+"""Paper-figure reproductions: one function per table/figure.
+
+Each returns a dict of results; benchmarks/run.py prints the CSV summary and
+tests/test_paper_claims.py asserts the paper's headline claims against them.
+All use the analytic step-level simulator (the paper's own Section 2 cost
+model) — see DESIGN.md S8 for the Astra-Sim/ns-3 -> analytic mapping.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+import time
+
+from repro.core import (CostModel, PAPER_DEFAULT, baselines, collective_time,
+                        gbps, num_steps, plan)
+
+KB, MB = 1024.0, 1024.0 ** 2
+US, MS = 1e-6, 1e-3
+
+
+def _bridge(kind, n, m, cm):
+    return baselines.bridge(kind, n, m, cm, paper_faithful=True).total
+
+
+def table1():
+    """Table 1: reconfiguration schedules for n=64, R in {1,2}."""
+    from repro.core import (ag_transmission_optimal, periodic_a2a,
+                            rs_transmission_optimal)
+    rows = {}
+    for R in (1, 2):
+        rows[f"a2a_R{R}"] = periodic_a2a(64, R).x
+        rows[f"rs_R{R}"] = rs_transmission_optimal(64, R).x
+        rows[f"ag_R{R}"] = ag_transmission_optimal(64, R).x
+    return rows
+
+
+def fig1():
+    """Cumulative AllReduce cost: Bruck(+subrings) vs HD, R=0,1,2, delta=0."""
+    n, m = 64, 4 * MB
+    cm = PAPER_DEFAULT.replace(delta=0.0)
+    out = {}
+    for R in (0, 1, 2):
+        hd = baselines.r_hd("ar", n, m, cm, R)
+        br = baselines.bridge_allreduce_fixed_R(n, m, cm, R)
+        out[f"hd_R{R}"] = hd.cumulative()
+        out[f"bruck_R{R}"] = br.cumulative()
+        out[f"final_hd_R{R}"] = hd.total
+        out[f"final_bruck_R{R}"] = br.total
+    return out
+
+
+def fig2():
+    """Static-ring completion-time split for RING vs BRUCK (AR and A2A)."""
+    n = 64
+    cm = PAPER_DEFAULT
+    out = {}
+    for m in (16 * KB, 1 * MB, 64 * MB):
+        ring_ar = baselines.ring("ar", n, m, cm)
+        bruck_ar = (baselines.s_bruck("rs", n, m, cm)
+                    + baselines.s_bruck("ag", n, m, cm))
+        bruck_a2a = baselines.s_bruck("a2a", n, m, cm)
+        for name, t in (("ring_ar", ring_ar), ("bruck_ar", bruck_ar),
+                        ("bruck_a2a", bruck_a2a)):
+            out[f"{name}_m{int(m / KB)}KB"] = {
+                "startup": t.startup, "hops": t.hop_latency,
+                "transmission": t.transmission, "total": t.total}
+    return out
+
+
+def fig5(n=64):
+    """A2A speedups over S-BRUCK (5a) and over min(S,G)-BRUCK (5b)."""
+    cm0 = PAPER_DEFAULT
+    msizes = [64 * KB, 1 * MB, 16 * MB, 128 * MB]
+    deltas = [1 * US, 10 * US, 100 * US, 1 * MS, 5 * MS]
+    grid_s, grid_both = {}, {}
+    for m, d in itertools.product(msizes, deltas):
+        cm = cm0.replace(delta=d)
+        t_b = _bridge("a2a", n, m, cm)
+        t_s = baselines.s_bruck("a2a", n, m, cm).total
+        t_g = baselines.g_bruck("a2a", n, m, cm).total
+        key = f"m{m / MB:g}MB_d{d / US:g}us"
+        grid_s[key] = t_s / t_b
+        grid_both[key] = min(t_s, t_g) / t_b
+    return {"vs_sbruck": grid_s, "vs_best": grid_both}
+
+
+def fig6(n=64):
+    """A2A speedup vs per-hop delay (small and large messages)."""
+    out = {}
+    for m in (64 * KB, 16 * MB):
+        for ah in (0.1 * US, 0.5 * US, 1 * US, 2 * US):
+            for d in (10 * US, 1 * MS):
+                cm = PAPER_DEFAULT.replace(alpha_h=ah, delta=d)
+                t_b = _bridge("a2a", n, m, cm)
+                t_s = baselines.s_bruck("a2a", n, m, cm).total
+                t_g = baselines.g_bruck("a2a", n, m, cm).total
+                key = f"m{m / MB:g}MB_ah{ah / US:g}us_d{d / US:g}us"
+                out[key] = {"vs_sbruck": t_s / t_b,
+                            "vs_best": min(t_s, t_g) / t_b}
+    return out
+
+
+def fig7():
+    """A2A speedup over S-BRUCK for n in 16..256."""
+    out = {}
+    for n in (16, 32, 64, 128, 256):
+        for m in (1 * MB, 32 * MB):
+            for d in (10 * US, 1 * MS, 5 * MS):
+                cm = PAPER_DEFAULT.replace(delta=d)
+                t_b = _bridge("a2a", n, m, cm)
+                t_s = baselines.s_bruck("a2a", n, m, cm).total
+                out[f"n{n}_m{m / MB:g}MB_d{d / US:g}us"] = t_s / t_b
+    return out
+
+
+def fig8():
+    """Full message range, n=64, RotorNet delta=10us: Bridge & G-Bruck vs S."""
+    n = 64
+    cm = PAPER_DEFAULT.replace(delta=10 * US)
+    out = {"bridge_vs_s": {}, "gbruck_vs_s": {}, "bridge_vs_best": {}}
+    m = 1 * KB
+    while m <= 256 * MB:
+        t_b = _bridge("a2a", n, m, cm)
+        t_s = baselines.s_bruck("a2a", n, m, cm).total
+        t_g = baselines.g_bruck("a2a", n, m, cm).total
+        key = f"{m / KB:g}KB"
+        out["bridge_vs_s"][key] = t_s / t_b
+        out["gbruck_vs_s"][key] = t_s / t_g
+        out["bridge_vs_best"][key] = min(t_s, t_g) / t_b
+        m *= 2
+    return out
+
+
+def fig9(n=64):
+    """Reduce-Scatter: Bridge vs RING and vs R-HD over message size."""
+    out = {"vs_ring": {}, "vs_rhd": {}}
+    for m in (16 * KB, 256 * KB, 1 * MB, 16 * MB, 64 * MB, 256 * MB):
+        for d in (1 * US, 10 * US, 150 * US):
+            cm = PAPER_DEFAULT.replace(delta=d)
+            t_b = _bridge("rs", n, m, cm)
+            t_ring = baselines.ring("rs", n, m, cm).total
+            t_rhd, _ = baselines.r_hd_optimal("rs", n, m, cm)
+            key = f"m{m / KB:g}KB_d{d / US:g}us"
+            out["vs_ring"][key] = t_ring / t_b
+            out["vs_rhd"][key] = t_rhd.total / t_b
+    return out
+
+
+def fig10(n=64):
+    """RS speedup vs per-hop delay."""
+    out = {}
+    for m in (256 * KB, 16 * MB):
+        for ah in (0.1 * US, 1 * US, 2 * US):
+            for d in (10 * US, 150 * US):
+                cm = PAPER_DEFAULT.replace(alpha_h=ah, delta=d)
+                t_b = _bridge("rs", n, m, cm)
+                t_ring = baselines.ring("rs", n, m, cm).total
+                t_rhd, _ = baselines.r_hd_optimal("rs", n, m, cm)
+                out[f"m{m / KB:g}KB_ah{ah / US:g}us_d{d / US:g}us"] = {
+                    "vs_ring": t_ring / t_b, "vs_rhd": t_rhd.total / t_b}
+    return out
+
+
+def fig11():
+    """RS speedup vs network size against the best static baseline."""
+    out = {}
+    for n in (16, 32, 64, 128, 256):
+        for m in (16 * KB, 256 * KB, 32 * MB):
+            for d in (1 * US, 10 * US, 1 * MS):
+                cm = PAPER_DEFAULT.replace(delta=d)
+                t_b = _bridge("rs", n, m, cm)
+                t_static = min(baselines.ring("rs", n, m, cm).total,
+                               baselines.s_bruck("rs", n, m, cm).total)
+                out[f"n{n}_m{m / KB:g}KB_d{d / US:g}us"] = t_static / t_b
+    return out
+
+
+def fig12(n=64):
+    """All approaches vs RING, delta=10us, alpha_h=1us (AllReduce=RS here)."""
+    cm = PAPER_DEFAULT.replace(delta=10 * US)
+    out = {"bridge": {}, "rhd": {}, "sbruck": {}, "gbruck": {},
+           "bridge_vs_best": {}}
+    m = 16 * KB
+    while m <= 256 * MB:
+        t_ring = baselines.ring("rs", n, m, cm).total
+        t_b = _bridge("rs", n, m, cm)
+        t_rhd, _ = baselines.r_hd_optimal("rs", n, m, cm)
+        t_s = baselines.s_bruck("rs", n, m, cm).total
+        t_g = baselines.g_bruck("rs", n, m, cm).total
+        key = f"{m / KB:g}KB"
+        out["bridge"][key] = t_ring / t_b
+        out["rhd"][key] = t_ring / t_rhd.total
+        out["sbruck"][key] = t_ring / t_s
+        out["gbruck"][key] = t_ring / t_g
+        out["bridge_vs_best"][key] = min(t_ring, t_rhd.total, t_s, t_g) / t_b
+        m *= 4
+    return out
+
+
+def scheduler_runtime():
+    """Paper 3.4: optimal schedules computed 'within milliseconds' (n<=256)."""
+    t0 = time.perf_counter()
+    for n in (16, 32, 64, 128, 256):
+        for kind in ("a2a", "rs", "ag"):
+            plan(kind, n, 4 * MB, PAPER_DEFAULT, paper_faithful=True)
+    dt = time.perf_counter() - t0
+    return {"total_seconds": dt, "per_plan_ms": dt / 15 * 1e3}
+
+
+def ports_extension():
+    """Section 3.7: blocked rings with z < 2n ports still benefit at scale."""
+    out = {}
+    for n, z in ((256, 512), (256, 128), (256, 64), (64, 32)):
+        cm = PAPER_DEFAULT
+        m = 8 * MB
+        from repro.core import periodic_a2a, static_schedule
+        t_static = collective_time(static_schedule("a2a", n), m, cm).total
+        best = min(collective_time(periodic_a2a(n, R), m, cm, ports=z).total
+                   for R in range(num_steps(n)))
+        out[f"n{n}_z{z}"] = t_static / best
+    return out

@@ -1,0 +1,105 @@
+"""Generate the data-driven sections of EXPERIMENTS.md from results/.
+
+Usage: PYTHONPATH=src python -m benchmarks.gen_experiments > results/exp_tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .roofline import ICI_BW, PEAK_FLOPS, derive, load_cells
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table(cells):
+    hdr = ("| arch | shape | mesh | compile s | HLO flops/dev | arg bytes/dev "
+           "| temp bytes/dev | collective bytes/dev (AG/AR/RS/A2A/CP) |\n"
+           + "|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"], c["mesh"])):
+        if "error" in c:
+            rows.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+                        f"| FAIL | - | - | - | {c['error'][:60]} |")
+            continue
+        mem = c.get("memory") or {}
+        coll = c["collectives"]
+        parts = "/".join(fmt_bytes(coll[k]["bytes"]) for k in
+                         ("all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute"))
+        cal = c.get("calibrated") or {}
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {c['compile_seconds']} | {cal.get('flops', c['flops']):.3g} "
+            f"| {fmt_bytes(mem.get('argument_size_bytes'))} "
+            f"| {fmt_bytes(mem.get('temp_size_bytes'))} "
+            f"| {parts} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def skip_table():
+    from repro import configs
+    rows = ["| arch | shape | reason |", "|---|---|---|"]
+    for a, s in configs.cells():
+        ok, why = configs.runnable(a, s)
+        if not ok:
+            rows.append(f"| {a} | {s} | {why} |")
+    return "\n".join(rows) + "\n"
+
+
+def perf_pairs(base_dir="results/dryrun", opt_dir="results/dryrun_opt"):
+    """Before/after table for every optimized variant that has a baseline."""
+    base = {(c["arch"], c["shape"], c["mesh"]): c
+            for c in load_cells(base_dir) if "error" not in c}
+    rows = ["| cell | variant | term | before s | after s | delta |",
+            "|---|---|---|---|---|---|"]
+    for path in sorted(glob.glob(os.path.join(opt_dir, "*.json"))):
+        with open(path) as f:
+            c = json.load(f)
+        if "error" in c:
+            continue
+        key = (c["arch"], c["shape"], c["mesh"])
+        if key not in base:
+            continue
+        b = derive(base[key])
+        o = derive(c)
+        for term in ("compute", "memory", "collective"):
+            tb, to = b["terms_s"][term], o["terms_s"][term]
+            if tb == 0 and to == 0:
+                continue
+            delta = (to - tb) / tb * 100 if tb else float("inf")
+            mark = " **<-**" if term == b["dominant"] else ""
+            rows.append(
+                f"| {c['arch']} x {c['shape']} x {c['mesh']} "
+                f"| {c.get('variant', '?')} | {term}{mark} "
+                f"| {tb:.3e} | {to:.3e} | {delta:+.1f}% |")
+    return "\n".join(rows) + "\n"
+
+
+def main():
+    cells = load_cells()
+    print("## Dry-run record (generated)\n")
+    print(dryrun_table(cells))
+    print("\n### Skipped cells\n")
+    print(skip_table())
+    print("\n## Roofline (generated)\n")
+    rows = [d for c in cells if (d := derive(c))]
+    from .roofline import markdown_table
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print(markdown_table(rows))
+    if os.path.isdir("results/dryrun_opt"):
+        print("\n## Perf before/after (generated)\n")
+        print(perf_pairs())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Kernel micro-benchmarks (CPU interpret-mode wall time is NOT a TPU number;
+the derived column reports the modeled VMEM working set and arithmetic
+intensity that the BlockSpec tiling targets — the structural quantities the
+Pallas hillclimb iterates on)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(f, *args, reps=3):
+    f(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def flash_attention_bench():
+    from repro.kernels import flash_attention
+    b, h, s, d = 1, 4, 256, 64
+    bq = bk = 128
+    k = jax.random.PRNGKey(0)
+    q, kk, v = (jax.random.normal(k, (b, h, s, d)) for _ in range(3))
+    us = _time(lambda q, kk, v: flash_attention(q, kk, v, True, None, None,
+                                                bq, bk), q, kk, v, reps=2)
+    vmem = (bq * d + 2 * bk * d + bq * d + 2 * bq) * 4
+    flops = 4 * b * h * s * s * d / 2  # causal
+    hbm = (3 + 1) * b * h * s * d * 4
+    return {"us_per_call": us, "vmem_bytes": vmem,
+            "arith_intensity": flops / hbm}
+
+
+def rg_lru_bench():
+    from repro.kernels import rg_lru
+    B, T, D = 1, 512, 256
+    k = jax.random.PRNGKey(0)
+    a = jax.random.uniform(k, (B, T, D), jnp.float32, 0.5, 0.99)
+    bb = jax.random.normal(k, (B, T, D))
+    us = _time(lambda a, b: rg_lru(a, b)[0], a, bb, reps=2)
+    bt, bd = 256, 256
+    vmem = (2 * bt * bd + bt * bd + bd) * 4
+    return {"us_per_call": us, "vmem_bytes": vmem,
+            "hbm_bytes_per_elem": 3 * 4}  # read a,b write y
+
+
+def wkv6_bench():
+    from repro.kernels import wkv6
+    B, H, T, dk, dv, bt = 1, 2, 256, 64, 64, 64
+    k = jax.random.PRNGKey(0)
+    r, kk, v = (jax.random.normal(k, (B, H, T, dk)) for _ in range(3))
+    lw = -jnp.exp(jax.random.normal(k, (B, H, T, dk)))
+    u = jax.random.normal(k, (H, dk))
+    us = _time(lambda *a: wkv6(*a)[0], r, kk, v, lw, u, reps=1)
+    vmem = (4 * bt * dk + dk * dv + bt * bt * dk) * 4
+    flops = T * (2 * bt * dk + 4 * dk * dv)  # per block-row approx
+    return {"us_per_call": us, "vmem_bytes": vmem, "flops_per_tok": flops / T}

@@ -1,0 +1,125 @@
+"""Roofline-term derivation from dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell, from results/dryrun/*.json:
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs        [s]
+  memory term     = HLO_bytes_per_device / HBM_bandwidth     [s]
+  collective term = collective_bytes_per_device / ICI_link_bw [s]
+
+cost_analysis()/HLO shapes are post-SPMD (per-partition), so the per-device
+convention divides by *one* chip's peak — equivalent to the global
+formulation HLO_total/(chips x peak).
+
+Also derives MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) per device and
+the usefulness ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundant
+compute; note train steps do fwd+bwd so the ideal HLO count is ~3x the
+2*N*D forward and the ratio's ceiling is ~1 by the 6ND convention, minus
+remat recompute and attention FLOPs which 6ND ignores).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+TRAIN_TOKENS = {"train_4k": 4096 * 256}
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 1 * 128,
+    "long_500k": 1 * 1,
+}
+
+
+def load_cells(directory: str = "results/dryrun") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def derive(cell: dict, devices: int | None = None) -> dict | None:
+    if "error" in cell:
+        return None
+    n_dev = devices or cell["devices"]
+    cal = cell.get("calibrated")
+    if cal:  # depth-calibrated costs (scan bodies are cost-counted once)
+        flops = cal["flops"]
+        bytes_acc = cal["bytes_accessed"]
+        coll = cal["collective_bytes"]
+    else:
+        flops = cell.get("flops") or 0.0
+        bytes_acc = cell.get("bytes_accessed") or 0.0
+        coll = cell["collectives"]["total_bytes"]
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+
+    # model flops per device (6ND for train incl. backward; 2ND for fwd-only)
+    tokens = SHAPE_TOKENS.get(cell["shape"], 0)
+    n_active = cell.get("active_params") or cell.get("params") or 0
+    mult = 6 if cell["mode"] == "train" else 2
+    model_flops_global = mult * n_active * tokens
+    model_flops_dev = model_flops_global / n_dev
+    useful_ratio = model_flops_dev / flops if flops else 0.0
+    # ideal step time: the model's own compute, or the mandatory read set
+    # (params + optimizer state + caches = per-device argument bytes),
+    # whichever dominates.  Decode steps are argument-read bound by nature.
+    arg_bytes = (cell.get("memory") or {}).get("argument_size_bytes") or 0
+    ideal = max(model_flops_dev / PEAK_FLOPS, arg_bytes / HBM_BW)
+    frac = ideal / bound if bound else 0.0
+
+    return {
+        **{k: cell[k] for k in ("arch", "shape", "mesh", "devices", "mode")},
+        "terms_s": terms,
+        "dominant": dominant,
+        "bound_s": bound,
+        "model_flops_per_dev": model_flops_dev,
+        "useful_ratio": useful_ratio,
+        "roofline_fraction": frac,
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_acc,
+        "collective_bytes": coll,
+    }
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | useful | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        t = r["terms_s"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['compute']:.3e} | {t['memory']:.3e} "
+            f"| {t['collective']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main(directory: str = "results/dryrun", out: str = "results/roofline.md"):
+    rows = [d for c in load_cells(directory) if (d := derive(c))]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    md = markdown_table(rows)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        f.write(md)
+    with open(out.replace(".md", ".json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print(md)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

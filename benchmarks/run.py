@@ -1,0 +1,123 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV — us_per_call is the wall time of
+producing the artifact (the schedule synthesis + simulation), derived is the
+figure's headline number.  Run: PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import time
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def main() -> None:
+    from . import figures
+    from .collectives_lowering import lower_allreduce_variants
+    from .kernels_bench import (flash_attention_bench, rg_lru_bench,
+                                wkv6_bench)
+
+    print("name,us_per_call,derived")
+
+    out, us = _timed(figures.table1)
+    _row("table1_schedules", us,
+         "a2a_R1=" + "".join(map(str, out["a2a_R1"]))
+         + ";rs_R1=" + "".join(map(str, out["rs_R1"]))
+         + ";ag_R1=" + "".join(map(str, out["ag_R1"])))
+
+    out, us = _timed(figures.fig1)
+    _row("fig1_bruck_vs_hd_R1", us,
+         f"bruck/hd_final={out['final_bruck_R1'] / out['final_hd_R1']:.3f}")
+    _row("fig1_bruck_vs_hd_R2", 0.0,
+         f"bruck/hd_final={out['final_bruck_R2'] / out['final_hd_R2']:.3f}")
+
+    out, us = _timed(figures.fig2)
+    big = out["bruck_a2a_m65536KB"]
+    _row("fig2_cost_split", us,
+         f"a2a64MB_hopfrac={big['hops'] / big['total']:.2f}"
+         f"_txfrac={big['transmission'] / big['total']:.2f}")
+
+    out, us = _timed(figures.fig5)
+    _row("fig5a_a2a_vs_sbruck_max", us, f"{max(out['vs_sbruck'].values()):.2f}x")
+    _row("fig5b_a2a_vs_best_max", 0.0, f"{max(out['vs_best'].values()):.2f}x")
+
+    out, us = _timed(figures.fig6)
+    _row("fig6_a2a_perhop_max_vs_best", us,
+         f"{max(v['vs_best'] for v in out.values()):.2f}x")
+
+    out, us = _timed(figures.fig7)
+    _row("fig7_a2a_netsize_n256_min", us,
+         f"{min(v for k, v in out.items() if k.startswith('n256')):.2f}x")
+    _row("fig7_a2a_netsize_max", 0.0, f"{max(out.values()):.2f}x")
+
+    out, us = _timed(figures.fig8)
+    _row("fig8_bridge_vs_s_max", us, f"{max(out['bridge_vs_s'].values()):.2f}x")
+    _row("fig8_bridge_vs_best_max", 0.0,
+         f"{max(out['bridge_vs_best'].values()):.2f}x")
+
+    out, us = _timed(figures.fig9)
+    _row("fig9_rs_vs_ring_max", us, f"{max(out['vs_ring'].values()):.2f}x")
+    _row("fig9_rs_vs_rhd_max", 0.0, f"{max(out['vs_rhd'].values()):.2f}x")
+
+    out, us = _timed(figures.fig10)
+    _row("fig10_rs_perhop_max_vs_ring", us,
+         f"{max(v['vs_ring'] for v in out.values()):.2f}x")
+
+    out, us = _timed(figures.fig11)
+    _row("fig11_rs_netsize_max_vs_static", us, f"{max(out.values()):.2f}x")
+
+    out, us = _timed(figures.fig12)
+    _row("fig12_rs_vs_ring_max", us, f"{max(out['bridge'].values()):.2f}x")
+    _row("fig12_bridge_vs_best_max", 0.0,
+         f"{max(out['bridge_vs_best'].values()):.2f}x")
+
+    out, us = _timed(figures.scheduler_runtime)
+    _row("scheduler_runtime", us, f"per_plan_ms={out['per_plan_ms']:.2f}")
+
+    out, us = _timed(figures.ports_extension)
+    _row("sec3.7_ports_n256_z64", us, f"{out['n256_z64']:.2f}x")
+
+    out, us = _timed(lambda: lower_allreduce_variants(8, 1 << 20))
+    _row("allreduce_lowering_bruck_permutes", us,
+         f"{out['bruck']['collective_permute']}")
+    _row("allreduce_lowering_ring_permutes", 0.0,
+         f"{out['ring']['collective_permute']}")
+
+    from .straggler import straggler_amplification
+    out, us = _timed(lambda: straggler_amplification(
+        n=16, m=2 * 2**20, kappas=(1.0, 4.0), chunks=8))
+    _row("straggler_bridge_vs_static_k4", us,
+         f"{out['speedup'][4.0]:.2f}x(nominal_{out['speedup'][1.0]:.2f}x)")
+
+    out, us = _timed(flash_attention_bench)
+    _row("kernel_flash_attention", out["us_per_call"],
+         f"vmem={out['vmem_bytes']}B_ai={out['arith_intensity']:.1f}")
+    out, us = _timed(rg_lru_bench)
+    _row("kernel_rg_lru", out["us_per_call"], f"vmem={out['vmem_bytes']}B")
+    out, us = _timed(wkv6_bench)
+    _row("kernel_wkv6", out["us_per_call"], f"vmem={out['vmem_bytes']}B")
+
+    # roofline summary if the dry-run artifacts exist
+    try:
+        from .roofline import derive, load_cells
+        rows = [d for c in load_cells() if (d := derive(c))]
+        if rows:
+            worst = min(rows, key=lambda r: r["roofline_fraction"])
+            _row("roofline_cells", 0.0, f"{len(rows)}")
+            _row("roofline_worst_cell", 0.0,
+                 f"{worst['arch']}x{worst['shape']}x{worst['mesh']}"
+                 f"={worst['roofline_fraction']:.2f}")
+    except Exception as e:  # artifacts may not be generated yet
+        _row("roofline_cells", 0.0, f"unavailable({type(e).__name__})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Schedule explorer: sweep the design space of Section 4 from the CLI.
+
+Reproduces any point of Figs 5-12 on demand, e.g.:
+
+  PYTHONPATH=src python examples/schedule_explorer.py \
+      --collective rs --n 128 --m-mb 16 --delta-us 150
+
+prints every baseline, the BRIDGE plan (schedule + R), and the speedups.
+"""
+import argparse
+
+from repro.core import (PAPER_DEFAULT, baselines, collective_time, plan)
+
+MB = 1024.0 ** 2
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--collective", default="a2a", choices=["a2a", "rs", "ag"])
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--m-mb", type=float, default=4.0)
+    ap.add_argument("--delta-us", type=float, default=10.0)
+    ap.add_argument("--alpha-h-us", type=float, default=1.0)
+    ap.add_argument("--ports", type=int, default=None,
+                    help="OCS ports (< 2n engages the Section 3.7 model)")
+    args = ap.parse_args()
+
+    n, m = args.n, args.m_mb * MB
+    cm = PAPER_DEFAULT.replace(delta=args.delta_us * 1e-6,
+                               alpha_h=args.alpha_h_us * 1e-6)
+
+    p = plan(args.collective, n, m, cm, paper_faithful=True)
+    t_bridge = collective_time(p.schedule, m, cm, ports=args.ports).total
+    print(f"BRIDGE plan: {p.strategy}  x={p.schedule.x}")
+    print(f"  completion time {t_bridge * 1e3:.3f} ms\n")
+
+    rows = [("S-BRUCK (static)",
+             baselines.s_bruck(args.collective, n, m, cm).total),
+            ("G-BRUCK (every step)",
+             baselines.g_bruck(args.collective, n, m, cm).total)]
+    if args.collective in ("rs", "ag"):
+        rows.append(("RING", baselines.ring(args.collective, n, m, cm).total))
+        t_rhd, R = baselines.r_hd_optimal(args.collective, n, m, cm)
+        rows.append((f"R-HD (R*={R})", t_rhd.total))
+    for name, t in rows:
+        print(f"  {name:<22s} {t * 1e3:10.3f} ms   bridge speedup "
+              f"{t / t_bridge:6.2f}x")
+
+
+if __name__ == "__main__":
+    main()

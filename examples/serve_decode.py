@@ -1,0 +1,66 @@
+"""Serving example: prefill + batched greedy decode with KV/recurrent caches.
+
+Exercises all three cache families of the zoo:
+  - sliding-window ring buffers (gemma3-4b),
+  - MLA latent cache with weight-absorbed decode (minicpm3-4b),
+  - O(1) recurrent state (rwkv6-3b).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py [--arch rwkv6-3b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import decode_step, forward, init_params, prefill
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-3b", choices=list(configs.ARCHS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch).scaled_down()
+    if cfg.enc_dec or cfg.frontend != "none":
+        raise SystemExit("pick a text-only arch for this example")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    key = jax.random.PRNGKey(1)
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size)
+    max_seq = args.prompt_len + args.new_tokens + 1
+
+    t0 = time.time()
+    logits, caches = prefill(cfg, params, {"tokens": prompt}, max_seq=max_seq)
+    print(f"prefill {args.prompt_len} tokens x {args.batch} seqs: "
+          f"{time.time() - t0:.2f}s")
+
+    step = jax.jit(lambda p, t, c: decode_step(cfg, p, t, c))
+    tok = jnp.argmax(logits, axis=-1)[:, None]
+    out = [tok]
+    t0 = time.time()
+    for _ in range(args.new_tokens - 1):
+        logits, caches = step(params, tok, caches)
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+        out.append(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"decoded {args.new_tokens - 1} steps in {dt:.2f}s "
+          f"({(args.new_tokens - 1) * args.batch / dt:.1f} tok/s)")
+    print("generated ids (batch 0):", gen[0].tolist())
+
+    # consistency check vs full forward (greedy path must agree)
+    full = jnp.concatenate([prompt, gen], axis=1)
+    ref = forward(cfg, params, {"tokens": full}, mode="train").logits
+    ref_tok = jnp.argmax(ref[:, args.prompt_len - 1:-1, :], axis=-1)
+    agree = float((ref_tok == gen).mean())
+    print(f"greedy agreement with full forward: {agree * 100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

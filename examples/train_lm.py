@@ -1,0 +1,50 @@
+"""End-to-end training driver: train a reduced LM for a few hundred steps.
+
+Demonstrates the full stack — model zoo config, synthetic data pipeline,
+AdamW, checkpointing, and (on a multi-device host) BRIDGE gradient sync.
+Loss must fall well below the uniform baseline ln(V).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--arch stablelm-3b]
+      [--steps 300] [--grad-sync bridge]
+"""
+import argparse
+import math
+
+from repro import configs
+from repro.launch.train import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-3b",
+                    choices=list(configs.ARCHS))
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--grad-sync", default="gspmd",
+                    choices=["gspmd", "bridge", "bridge-compressed"])
+    ap.add_argument("--checkpoint-dir", default=None)
+    args = ap.parse_args()
+
+    tc = TrainConfig(arch=args.arch, steps=args.steps,
+                     batch_size=args.batch_size, seq_len=args.seq_len,
+                     grad_sync=args.grad_sync,
+                     checkpoint_dir=args.checkpoint_dir,
+                     lr=1e-3, warmup=20)
+    cfg = configs.get(args.arch).scaled_down()
+    uniform = math.log(cfg.vocab_size)
+    print(f"arch={args.arch} (reduced: {cfg.num_layers}L d={cfg.d_model} "
+          f"V={cfg.vocab_size}); uniform-baseline loss = ln(V) = {uniform:.3f}")
+
+    def progress(msg):
+        print(msg, flush=True)
+
+    _, _, losses = train(tc, progress=progress)
+    print(f"\nfirst loss {losses[0]:.3f} -> last loss {losses[-1]:.3f} "
+          f"(uniform {uniform:.3f})")
+    assert losses[-1] < uniform * 0.8, "model failed to learn"
+    print("OK: model learned the synthetic structure.")
+
+
+if __name__ == "__main__":
+    main()

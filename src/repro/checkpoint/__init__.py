@@ -1,0 +1,4 @@
+from .store import (latest_step, restore, restore_into, save,
+                    garbage_collect)
+
+__all__ = ["latest_step", "restore", "restore_into", "save", "garbage_collect"]

@@ -1,0 +1,76 @@
+"""Glue: BRIDGE schedule synthesis -> collective implementation choice.
+
+`plan_gradient_sync` is the deployment entry point: given the data-parallel
+axis size and the gradient payload, it runs the paper's Section 3.6 optimizer
+under the hardware cost model and returns which collective implementation the
+training step should lower (and with which reconfiguration schedules).
+
+On a static TPU fabric the three implementations trade off exactly the terms
+the paper's model scores (DESIGN.md Section 3):
+  ring  : 2(n-1) unit-offset steps — bandwidth-optimal, latency Omega(n)
+  bruck : 2 log2(n) steps at offsets 2^k — latency-optimal, h_k-hop permutes
+  psum  : XLA's built-in (typically ring/tree hybrid) as the oracle fallback
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import CostModel, plan
+from repro.core.baselines import ring as ring_cost
+from repro.core.cost_model import TPU_V5E
+from repro.core.schedules import Schedule
+from repro.core.simulator import allreduce_time
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectivePlan:
+    impl: str                      # 'bruck' | 'ring' | 'psum'
+    rs_schedule: Schedule | None
+    ag_schedule: Schedule | None
+    predicted_time: float
+    alternatives: dict[str, float]
+
+
+def plan_gradient_sync(
+    n: int,
+    m_bytes: float,
+    cm: CostModel | None = None,
+    allow: tuple[str, ...] = ("bruck", "ring"),
+    fabric: str = "static",
+) -> CollectivePlan:
+    """Pick the best gradient-allreduce strategy for n devices / m bytes.
+
+    fabric='static' (TPU ICI): Bruck is costed with *static* semantics — a
+    step at offset 2^k pays h = c = 2^k regardless of schedule (there is no
+    OCS to rewire; DESIGN.md S3).  fabric='ocs' uses the paper's model where
+    reconfigurations reset hop distances, and the returned schedules drive
+    the optical fabric.
+    """
+    cm = cm or TPU_V5E
+    alts: dict[str, float] = {}
+    rs = ag = None
+    if "bruck" in allow and (n & (n - 1)) == 0 and n > 1:
+        if fabric == "ocs":
+            rs = plan("rs", n, m_bytes, cm).schedule
+            ag = plan("ag", n, m_bytes, cm).schedule
+            alts["bruck"] = allreduce_time(rs, ag, m_bytes, cm).total
+        else:
+            # static fabric: hardware routes each offset-2^k permute; cost it
+            # with the static (R=0) model and leave schedules None so the
+            # lowering emits one ppermute per Bruck step.
+            from repro.core import static_schedule
+            alts["bruck"] = allreduce_time(
+                static_schedule("rs", n), static_schedule("ag", n),
+                m_bytes, cm).total
+    if "ring" in allow and n > 1:
+        alts["ring"] = ring_cost("ar", n, m_bytes, cm).total
+    if not alts:
+        return CollectivePlan("psum", None, None, 0.0, {})
+    impl = min(alts, key=alts.get)  # type: ignore[arg-type]
+    return CollectivePlan(
+        impl=impl,
+        rs_schedule=rs if impl == "bruck" else None,
+        ag_schedule=ag if impl == "bruck" else None,
+        predicted_time=alts[impl],
+        alternatives=alts,
+    )

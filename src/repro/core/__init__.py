@@ -1,0 +1,29 @@
+"""BRIDGE core: reconfiguration-schedule synthesis for collective communication.
+
+Paper: "BRIDGE: Optimizing Collective Communication Schedules in Reconfigurable
+Networks with Reusable Subrings" (Juerss & Schmid, 2026).
+"""
+from .bruck import (Collective, Step, a2a_steps, ag_steps, num_steps,
+                    rs_steps, simulate_a2a_data, simulate_rs_data, steps_for)
+from .cost_model import (OCS_TECHNOLOGIES, PAPER_DEFAULT, TPU_V5E, CostModel,
+                         gbps, ocs_ports, ocs_preset)
+from .schedules import (Plan, Schedule, ag_transmission_optimal,
+                        candidate_schedules, cstar_a2a, every_step_schedule,
+                        full_cost_optimal, periodic, periodic_a2a, plan,
+                        rs_transmission_optimal, static_schedule)
+from .simulator import StepCost, TimeBreakdown, allreduce_time, collective_time
+from .subrings import BlockedRing, Topology, ring, subring_topology
+
+from . import baselines  # noqa: E402  (module-level namespace for baselines)
+
+__all__ = [
+    "Collective", "Step", "a2a_steps", "ag_steps", "num_steps", "rs_steps",
+    "simulate_a2a_data", "simulate_rs_data", "steps_for",
+    "OCS_TECHNOLOGIES", "PAPER_DEFAULT", "TPU_V5E", "CostModel", "gbps",
+    "ocs_ports", "ocs_preset",
+    "Plan", "Schedule", "ag_transmission_optimal", "candidate_schedules",
+    "cstar_a2a", "every_step_schedule", "full_cost_optimal", "periodic",
+    "periodic_a2a", "plan", "rs_transmission_optimal", "static_schedule",
+    "StepCost", "TimeBreakdown", "allreduce_time", "collective_time",
+    "BlockedRing", "Topology", "ring", "subring_topology", "baselines",
+]

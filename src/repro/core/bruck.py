@@ -1,0 +1,161 @@
+"""Bruck communication-step structure for All-to-All / Reduce-Scatter / AllGather.
+
+Paper Section 3.1:
+  - n nodes (power of two for scheduling; arbitrary n supported for the static
+    algorithm), s = ceil(log2 n) steps.
+  - All-to-All:      step k: node u -> u + 2^k (mod n), data m/2 per step
+                     (for 2^{s-1} < n < 2^s the last step sends (m/n)(n - 2^{s-1})).
+  - Reduce-Scatter:  same offsets; data m_k = m / 2^{k+1} (halves every step).
+  - AllGather:       reversed: offset 2^{s-1-k}; data m_k = m / 2^{s-k}
+                     (starts at m/n, doubles every step).
+
+``m`` is the total per-node payload in bytes (the collective's message size as
+used throughout the paper's evaluation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+import numpy as np
+
+Collective = Literal["a2a", "rs", "ag"]
+
+
+def num_steps(n: int) -> int:
+    if n < 2:
+        raise ValueError(f"need at least 2 nodes, got {n}")
+    return int(math.ceil(math.log2(n)))
+
+
+def is_pow2(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Step:
+    """One Bruck communication step: every node u sends to (u + offset) mod n."""
+
+    index: int
+    offset: int
+    nbytes: float
+
+
+def a2a_steps(n: int, m: float) -> list[Step]:
+    """All-to-All: constant m/2 per step (last step reduced for non-pow2 n)."""
+    s = num_steps(n)
+    steps = []
+    for k in range(s):
+        if k == s - 1 and not is_pow2(n):
+            nbytes = (m / n) * (n - 2 ** (s - 1))
+        else:
+            nbytes = m / 2
+        steps.append(Step(index=k, offset=2**k, nbytes=nbytes))
+    return steps
+
+
+def rs_steps(n: int, m: float) -> list[Step]:
+    """Reduce-Scatter: data halves every step, offsets double (paper 3.4)."""
+    if not is_pow2(n):
+        raise ValueError("Reduce-Scatter scheduling assumes power-of-two n (paper 3.1)")
+    s = num_steps(n)
+    return [Step(index=k, offset=2**k, nbytes=m / 2 ** (k + 1)) for k in range(s)]
+
+
+def ag_steps(n: int, m: float) -> list[Step]:
+    """AllGather: reverse of Reduce-Scatter (paper 3.5).
+
+    Step k: offset 2^{s-1-k}, data m/2^{s-k} (starts m/n, doubles).
+    """
+    if not is_pow2(n):
+        raise ValueError("AllGather scheduling assumes power-of-two n (paper 3.1)")
+    s = num_steps(n)
+    return [Step(index=k, offset=2 ** (s - 1 - k), nbytes=m / 2 ** (s - k)) for k in range(s)]
+
+
+def steps_for(kind: Collective, n: int, m: float) -> list[Step]:
+    return {"a2a": a2a_steps, "rs": rs_steps, "ag": ag_steps}[kind](n, m)
+
+
+# --- Executable reference of Bruck All-to-All data movement -----------------
+#
+# Used by tests to prove the *algorithm* (which blocks move at which step)
+# delivers every block to its destination regardless of the reconfiguration
+# schedule (the schedule changes only the cost of a step, never its payload).
+
+
+def simulate_a2a_data(n: int) -> np.ndarray:
+    """Run Bruck all-to-all over integer block ids; return received matrix.
+
+    Node i starts with blocks ``block[i, j] = i * n + j`` destined for node j.
+    Returns ``recv`` with ``recv[j, i]`` = the block node j received from node i.
+    Correct iff ``recv[j, i] == i * n + j``.
+    """
+    s = num_steps(n)
+    # Phase 1 (local rotation): node i stores block for destination (i + j) % n
+    # at local slot j.
+    buf = np.empty((n, n), dtype=np.int64)
+    for i in range(n):
+        for j in range(n):
+            buf[i, j] = i * n + (i + j) % n
+    # Phase 2: s rounds. In round k, node i sends every slot j whose k-th bit
+    # is set to node (i + 2^k) % n (paper uses u + 2^k; directions are
+    # symmetric) and keeps the rest.
+    for k in range(s):
+        send_slots = [j for j in range(n) if (j >> k) & 1]
+        new_buf = buf.copy()
+        for i in range(n):
+            dst = (i + 2**k) % n
+            new_buf[dst, send_slots] = buf[i, send_slots]
+        buf = new_buf
+    # Phase 3 (inverse rotation): slot j at node i now holds the block destined
+    # for i that originated at node (i - j) % n.
+    recv = np.empty((n, n), dtype=np.int64)
+    for i in range(n):
+        for j in range(n):
+            recv[i, (i - j) % n] = buf[i, j]
+    return recv
+
+
+def simulate_rs_data(n: int) -> np.ndarray:
+    """Run the Bruck-pattern reduce-scatter over one-hot contribution vectors.
+
+    Node i contributes the indicator row e_i for every destination block.
+    After reduce-scatter, node j must own block j reduced over all nodes,
+    i.e. a row of all ones.  Returns ``owned`` of shape (n, n) where
+    ``owned[j]`` is node j's reduced block-j vector.
+
+    Block propagation (paper 3.4 / Thakur'05 adapted to the cyclic pattern):
+    in step k (offset 2^k), node u sends to u + 2^k the partial sums of every
+    block b for which the k-th bit of (b - u) mod n is *not* ... we use the
+    standard recursive-halving assignment on the cyclic pattern: node u keeps
+    blocks whose offset (b - u) mod n has zero low bits up to k.
+    """
+    s = num_steps(n)
+    if not is_pow2(n):
+        raise ValueError("power-of-two n required")
+    # partial[u, b, :] = current partial-sum vector node u holds for block b
+    partial = np.zeros((n, n, n), dtype=np.int64)
+    for u in range(n):
+        partial[u, :, u] = 1  # u contributes e_u to every block
+    active = [[True] * n for _ in range(n)]  # active[u][b]: u still holds block b
+    for k in range(s):
+        off = 2**k
+        new_partial = partial.copy()
+        new_active = [row[:] for row in active]
+        for u in range(n):
+            dst = (u + off) % n
+            for b in range(n):
+                if not active[u][b]:
+                    continue
+                # Send block b onward if its remaining path from u requires the
+                # 2^k hop, i.e. bit k of (b - u) mod n is set.
+                if ((b - u) % n >> k) & 1:
+                    new_partial[dst, b] += partial[u, b]
+                    new_active[u][b] = False
+        partial, active = new_partial, new_active
+    owned = np.empty((n, n), dtype=np.int64)
+    for b in range(n):
+        owned[b] = partial[b, b]
+    return owned

@@ -1,0 +1,99 @@
+"""Topology-aware extended Hockney alpha-beta cost model (paper Section 2).
+
+T(m, A) = sigma(A) * alpha_s
+        + sum_k h_k * alpha_h
+        + sum_k m_k * c_k * beta
+        + R * delta
+
+where, per communication step k:
+  alpha_s : per-step startup latency (data preparation), seconds
+  alpha_h : per-hop latency (propagation + per-hop processing), seconds
+  h_k     : hops to reach the step's destination on the current topology
+  m_k     : bytes transmitted in step k
+  c_k     : congestion factor (overlapping flows per link)
+  beta    : seconds per byte (inverse bandwidth)
+  delta   : reconfiguration delay, R: number of reconfigurations
+
+All quantities are SI (seconds, bytes). The model deliberately omits compute
+cost (identical across collective algorithms; paper Section 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Network cost parameters for one deployment."""
+
+    alpha_s: float = 1.7e-6      # per-step latency [s] (InfiniBand-class, paper 4.1)
+    alpha_h: float = 1.0e-6      # per-hop latency [s]
+    bandwidth: float = 100e9     # bytes/s (800 Gbps default, paper 4.1)
+    delta: float = 10e-6         # reconfiguration delay [s] (RotorNet, Table 2)
+
+    @property
+    def beta(self) -> float:
+        return 1.0 / self.bandwidth
+
+    def step_cost(self, *, hops: int, nbytes: float, congestion: float) -> float:
+        """Cost of a single communication step (no reconfiguration term)."""
+        return self.alpha_s + hops * self.alpha_h + nbytes * congestion * self.beta
+
+    def total(self, steps: Iterable[tuple[int, float, float]], n_reconfigs: int) -> float:
+        """Sum step costs (hops, nbytes, congestion) plus R * delta."""
+        t = n_reconfigs * self.delta
+        for hops, nbytes, congestion in steps:
+            t += self.step_cost(hops=hops, nbytes=nbytes, congestion=congestion)
+        return t
+
+    def replace(self, **kw) -> "CostModel":
+        return dataclasses.replace(self, **kw)
+
+
+def gbps(x: float) -> float:
+    """Link rate in Gbps -> bytes/s."""
+    return x * 1e9 / 8.0
+
+
+# --- Hardware presets ------------------------------------------------------
+
+#: OCS technologies from paper Table 2: name -> (reconfig time [s], ports)
+OCS_TECHNOLOGIES: dict[str, tuple[float, int]] = {
+    "sip_lightmatter": (7e-6, 32),
+    "rotornet_infocus": (10e-6, 128),
+    "3d_mems_calient": (15e-3, 320),
+    "piezo_polatis": (25e-3, 576),
+}
+
+#: Paper Section 4.1 headline configuration.
+PAPER_DEFAULT = CostModel(
+    alpha_s=1.7e-6, alpha_h=1.0e-6, bandwidth=gbps(800), delta=10e-6
+)
+
+#: TPU v5e-like constants used by the roofline/bridge planner (per chip).
+TPU_V5E = CostModel(
+    alpha_s=1.0e-6,           # collective phase launch overhead
+    alpha_h=0.5e-6,           # ICI per-hop latency (approx)
+    bandwidth=50e9,           # ~50 GB/s per ICI link direction
+    delta=1.0e-6,             # per-segment fusion/launch barrier (see DESIGN.md S3)
+)
+
+
+def ocs_preset(tech: str, **overrides) -> CostModel:
+    """CostModel preset for an OCS technology from paper Table 2."""
+    d, _ports = OCS_TECHNOLOGIES[tech]
+    cm = PAPER_DEFAULT.replace(delta=d)
+    return cm.replace(**overrides) if overrides else cm
+
+
+def ocs_ports(tech: str) -> int:
+    return OCS_TECHNOLOGIES[tech][1]
+
+
+def sweep(base: CostModel, **axes: Sequence[float]) -> list[CostModel]:
+    """Cartesian sweep over cost-model fields, e.g. sweep(cm, delta=[1e-6, 1e-3])."""
+    models = [base]
+    for field, values in axes.items():
+        models = [m.replace(**{field: v}) for m in models for v in values]
+    return models

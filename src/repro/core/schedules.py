@@ -1,0 +1,259 @@
+"""BRIDGE reconfiguration-schedule synthesis (paper Sections 3.3-3.6).
+
+A schedule for an s-step Bruck collective is x in {0,1}^s, x_k = 1 meaning the
+OCS is reconfigured immediately before step k.  x_0 = 0 always: the initial
+topology is established before the collective starts (the physical ring for
+All-to-All / Reduce-Scatter; the first segment's subring for AllGather,
+paper Section 3.5) and is therefore free.
+
+Equivalently a schedule is a partition of the steps 0..s-1 into R+1 contiguous
+*segments*; the topology is reconfigured at each segment boundary and *reused*
+within a segment.  The OCS link offset of a segment is the smallest Bruck
+message offset inside it (= first step's offset for A2A/RS whose offsets
+double; = last step's offset for AG whose offsets halve), so that every step
+in the segment stays inside its subring (Lemma 3.2).
+
+  - All-to-All:      optimal segments are balanced (Lemma 3.1 / Theorem 3.2)
+                     => periodic reconfigurations.
+  - Reduce-Scatter:  transmission-optimal segments are found by an interval
+                     partition DP (the paper's ILP, Theorem 3.3) => early.
+  - AllGather:       the time-reverse of Reduce-Scatter => late (Section 3.5).
+  - Optimal R:       argmin over 0 <= R < s of modeled completion time (3.6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Literal, Sequence
+
+from .bruck import Collective, Step, num_steps, steps_for
+from .cost_model import CostModel
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Reconfiguration schedule for one collective execution."""
+
+    kind: Collective
+    n: int
+    x: tuple[int, ...]
+
+    def __post_init__(self):
+        s = num_steps(self.n)
+        if len(self.x) != s:
+            raise ValueError(f"schedule length {len(self.x)} != s={s}")
+        if any(v not in (0, 1) for v in self.x):
+            raise ValueError("x must be 0/1")
+        if self.x and self.x[0] != 0:
+            raise ValueError("x_0 must be 0: initial topology is pre-established")
+
+    @property
+    def R(self) -> int:
+        return sum(self.x)
+
+    @property
+    def segments(self) -> tuple[tuple[int, int], ...]:
+        """Inclusive (first_step, last_step) per reconfiguration period."""
+        s = len(self.x)
+        bounds = [k for k in range(s) if self.x[k] == 1] + [s]
+        segs, a = [], 0
+        for b in bounds:
+            segs.append((a, b - 1))
+            a = b
+        return tuple(segs)
+
+    def link_offsets(self, steps: Sequence[Step] | None = None) -> list[int]:
+        """OCS link offset in force during each step."""
+        steps = steps if steps is not None else steps_for(self.kind, self.n, 1.0)
+        out = [0] * len(self.x)
+        for a, b in self.segments:
+            g = min(steps[j].offset for j in range(a, b + 1))
+            for j in range(a, b + 1):
+                out[j] = g
+        return out
+
+    @staticmethod
+    def from_segments(kind: Collective, n: int, lengths: Sequence[int]) -> "Schedule":
+        s = num_steps(n)
+        if sum(lengths) != s or any(l <= 0 for l in lengths):
+            raise ValueError(f"segment lengths {lengths} must be positive and sum to {s}")
+        x = [0] * s
+        pos = 0
+        for l in lengths[:-1]:
+            pos += l
+            x[pos] = 1
+        return Schedule(kind=kind, n=n, x=tuple(x))
+
+    @property
+    def segment_lengths(self) -> tuple[int, ...]:
+        return tuple(b - a + 1 for a, b in self.segments)
+
+
+def static_schedule(kind: Collective, n: int) -> Schedule:
+    return Schedule(kind=kind, n=n, x=tuple([0] * num_steps(n)))
+
+
+def every_step_schedule(kind: Collective, n: int) -> Schedule:
+    """Greedy (G-BRUCK-like): reconfigure before every step after the first."""
+    s = num_steps(n)
+    return Schedule(kind=kind, n=n, x=tuple([0] + [1] * (s - 1)))
+
+
+# --- Generic segment-partition DP -------------------------------------------
+
+
+def _partition_dp(
+    s: int, num_segments: int, seg_cost: Callable[[int, int], float]
+) -> tuple[float, list[int]]:
+    """Minimize sum of seg_cost(a, b) over partitions of 0..s-1 into exactly
+    ``num_segments`` contiguous segments.  Returns (cost, segment lengths).
+
+    Ties are broken toward lexicographically-smallest segment-length tuples,
+    which matches the paper's Table 1 presentation.
+    """
+    if not (1 <= num_segments <= s):
+        raise ValueError(f"need 1 <= segments={num_segments} <= s={s}")
+    INF = float("inf")
+    # best[i][r] = (cost, lengths) covering steps 0..i-1 with r segments
+    best: list[list[tuple[float, tuple[int, ...]]]] = [
+        [(INF, ())] * (num_segments + 1) for _ in range(s + 1)
+    ]
+    best[0][0] = (0.0, ())
+    for i in range(1, s + 1):
+        for r in range(1, min(i, num_segments) + 1):
+            cand = (INF, ())
+            for a in range(r - 1, i):  # previous boundary
+                prev_cost, prev_lens = best[a][r - 1]
+                if prev_cost == INF:
+                    continue
+                c = prev_cost + seg_cost(a, i - 1)
+                key = (c, prev_lens + (i - a,))
+                if key < cand:
+                    cand = key
+            best[i][r] = cand
+    cost, lens = best[s][num_segments]
+    if cost == float("inf"):
+        raise RuntimeError("infeasible partition")
+    return cost, list(lens)
+
+
+# --- Paper-faithful schedules ------------------------------------------------
+
+
+def periodic_a2a(n: int, R: int) -> Schedule:
+    """Theorem 3.2: optimal All-to-All schedule is periodic (balanced segments).
+
+    Computed by the exact DP on the A2A objective sum(2^len - 1); by Lemma 3.1
+    the result always has segment lengths differing by at most one.
+    """
+    s = num_steps(n)
+    _, lens = _partition_dp(s, R + 1, lambda a, b: float(2 ** (b - a + 1) - 1))
+    assert max(lens) - min(lens) <= 1, "Lemma 3.1 violated"
+    return Schedule.from_segments("a2a", n, lens)
+
+
+def rs_transmission_optimal(n: int, R: int) -> Schedule:
+    """Theorem 3.3: transmission-optimal Reduce-Scatter schedule.
+
+    Minimizes sum over periods [a,b] of (b - a + 1) / 2^a — the paper's ILP,
+    solved exactly as an interval-partition DP (schedules are parameter-free).
+    """
+    s = num_steps(n)
+    _, lens = _partition_dp(s, R + 1, lambda a, b: (b - a + 1) / 2.0**a)
+    return Schedule.from_segments("rs", n, lens)
+
+
+def ag_transmission_optimal(n: int, R: int) -> Schedule:
+    """Section 3.5: AllGather optimum is the reversed Reduce-Scatter schedule."""
+    rs = rs_transmission_optimal(n, R)
+    return Schedule.from_segments("ag", n, list(reversed(rs.segment_lengths)))
+
+
+def periodic(kind: Collective, n: int, R: int) -> Schedule:
+    """Latency-optimal (periodic) schedule for any of the three collectives.
+
+    For A2A this is Theorem 3.2; for RS/AG the paper notes the latency-optimal
+    case is identical to All-to-All (Section 3.6 / Section 5).
+    """
+    lens = periodic_a2a(n, R).segment_lengths
+    if kind == "ag":
+        lens = tuple(reversed(lens))
+    return Schedule.from_segments(kind, n, list(lens))
+
+
+def cstar_a2a(n: int, R: int, cm: CostModel, m: float) -> float:
+    """Closed-form optimal A2A cost (Theorem 3.2), exact when (R+1) | s.
+
+    C* = s*alpha_s + (R+1) * c * (n^{1/(R+1)} - 1) + R*delta,  c = alpha_h + beta*m/2.
+    """
+    s = num_steps(n)
+    c = cm.alpha_h + cm.beta * m / 2.0
+    return s * cm.alpha_s + (R + 1) * c * (n ** (1.0 / (R + 1)) - 1.0) + R * cm.delta
+
+
+# --- Exact full-cost schedules (beyond paper: joint latency+transmission DP) --
+
+
+def _segment_cost_exact(kind: Collective, steps: Sequence[Step], cm: CostModel) -> Callable:
+    def seg_cost(a: int, b: int) -> float:
+        g = min(steps[j].offset for j in range(a, b + 1))
+        t = 0.0
+        for j in range(a, b + 1):
+            h = steps[j].offset // g
+            t += cm.step_cost(hops=h, nbytes=steps[j].nbytes, congestion=h)
+        return t
+
+    return seg_cost
+
+
+def full_cost_optimal(kind: Collective, n: int, m: float, cm: CostModel, R: int) -> Schedule:
+    """Exact minimum-completion-time schedule for fixed R under the full model.
+
+    Beyond-paper: jointly minimizes latency + transmission (+ the fixed R*delta)
+    instead of picking the better of the latency-only and transmission-only
+    optima (paper Section 3.6).
+    """
+    steps = steps_for(kind, n, m)
+    _, lens = _partition_dp(len(steps), R + 1, _segment_cost_exact(kind, steps, cm))
+    return Schedule.from_segments(kind, n, lens)
+
+
+# --- Optimal number of reconfigurations (Section 3.6) -------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    schedule: Schedule
+    predicted_time: float
+    strategy: str  # which candidate family won
+
+
+def candidate_schedules(
+    kind: Collective, n: int, m: float, cm: CostModel, paper_faithful: bool = False
+) -> list[tuple[str, Schedule]]:
+    s = num_steps(n)
+    cands: list[tuple[str, Schedule]] = []
+    for R in range(0, s):
+        cands.append((f"periodic(R={R})", periodic(kind, n, R)))
+        if kind == "rs":
+            cands.append((f"rs-early(R={R})", rs_transmission_optimal(n, R)))
+        elif kind == "ag":
+            cands.append((f"ag-late(R={R})", ag_transmission_optimal(n, R)))
+        if not paper_faithful:
+            cands.append((f"exact-dp(R={R})", full_cost_optimal(kind, n, m, cm, R)))
+    return cands
+
+
+def plan(
+    kind: Collective, n: int, m: float, cm: CostModel, paper_faithful: bool = False
+) -> Plan:
+    """Pick the schedule (incl. R, Section 3.6) minimizing modeled completion time."""
+    from .simulator import collective_time  # local import to avoid cycle
+
+    best: Plan | None = None
+    for name, sched in candidate_schedules(kind, n, m, cm, paper_faithful):
+        t = collective_time(sched, m, cm).total
+        if best is None or t < best.predicted_time:
+            best = Plan(schedule=sched, predicted_time=t, strategy=name)
+    assert best is not None
+    return best

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the framework's per-architecture compute hotspots.
+
+The paper's contribution is communication scheduling (no single-node kernel),
+so these kernels serve the model zoo, not the core technique:
+
+  flash_attention : tiled online-softmax attention (causal / sliding-window /
+                    bidirectional, GQA) — every attention arch.
+  rg_lru          : RG-LRU gated linear recurrence — recurrentgemma-9b.
+  wkv6            : RWKV-6 data-dependent-decay recurrence — rwkv6-3b.
+
+Each subpackage ships kernel.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ops.py (jit'd public wrapper with custom_vjp) and ref.py (pure-jnp
+oracle).  Kernels target TPU; on CPU they run under interpret=True and are
+validated against the oracle in tests/test_kernels.py.
+"""
+from .flash_attention.ops import flash_attention
+from .rg_lru.ops import rg_lru
+from .wkv6.ops import wkv6
+
+__all__ = ["flash_attention", "rg_lru", "wkv6"]

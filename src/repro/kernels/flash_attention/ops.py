@@ -1,0 +1,70 @@
+"""Public flash-attention op: Pallas forward + Pallas backward.
+
+Forward saves the logsumexp; backward runs the two-pass flash kernels
+(kernel_bwd.py) — dK/dV with queries innermost, dQ with keys innermost —
+validated against jax.grad of the pure-jnp reference in
+tests/test_kernels.py.  GQA: K/V are expanded to the query heads for the
+backward kernels and dK/dV group-summed here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import flash_attention_fwd_lse
+from .kernel_bwd import flash_attention_bwd
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(q, k, v, causal: bool = True, window: int | None = None,
+                    scale: float | None = None, block_q: int = 512,
+                    block_k: int = 512, interpret: bool = True):
+    """Attention with VMEM-tiled online softmax.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D), Hkv | Hq.  Returns (B, Hq, Sq, D).
+    """
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    return flash_attention_fwd_lse(q, k, v, scale=scale, causal=causal,
+                                   window=window, block_q=block_q,
+                                   block_k=block_k, interpret=interpret)[0]
+
+
+def _fwd(q, k, v, causal, window, scale, block_q, block_k, interpret):
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    out, lse = flash_attention_fwd_lse(
+        q, k, v, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd(causal, window, scale, block_q, block_k, interpret, res, g):
+    q, k, v, out, lse = res
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    hq, hkv = q.shape[1], k.shape[1]
+    group = hq // hkv
+    k_full = jnp.repeat(k, group, axis=1)
+    v_full = jnp.repeat(v, group, axis=1)
+    dq, dk_full, dv_full = flash_attention_bwd(
+        q, k_full, v_full, out, lse, g, scale=scale, causal=causal,
+        window=window, block_q=block_q, block_k=block_k, interpret=interpret)
+    if group > 1:  # GQA: sum gradients over the query-head group
+        b, _, sk, d = k.shape
+        dk = dk_full.reshape(b, hkv, group, sk, d).sum(axis=2)
+        dv = dv_full.reshape(b, hkv, group, sk, d).sum(axis=2)
+    else:
+        dk, dv = dk_full, dv_full
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_fwd, _bwd)
+
+
+def flash_attention_ref_bwd(q, k, v, causal=True, window=None, scale=None):
+    """Reference-backward variant kept for A/B validation in tests."""
+    return ref.attention(q, k, v, causal=causal, window=window, scale=scale)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for flash attention (causal / sliding-window / bidir, GQA)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_mask(sq: int, sk: int, causal: bool, window: int | None):
+    """(sq, sk) boolean mask. Query i attends key j iff:
+       causal: j <= i + (sk - sq)   (offset aligns last query to last key)
+       window: i + off - window < j (sliding window of `window` keys, incl. self)
+    """
+    off = sk - sq
+    qi = jnp.arange(sq)[:, None]
+    kj = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kj <= qi + off
+    if window is not None:
+        mask &= kj > qi + off - window
+    return mask
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              scale: float | None = None):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D); Hkv divides Hq (GQA).
+
+    Returns (B, Hq, Sq, D). float32 accumulation regardless of input dtype.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = attention_mask(sq, sk, causal, window)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,30 @@
+"""Public RG-LRU op: Pallas forward, reference-scan backward (custom_vjp)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import ref
+from .kernel import rg_lru_fwd
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rg_lru(a, b, interpret: bool = True):
+    """h_t = a_t * h_{t-1} + b_t over axis 1.  a, b: (B, T, D).
+
+    Returns (y, h_last)."""
+    return rg_lru_fwd(a, b, interpret=interpret)
+
+
+def _fwd(a, b, interpret):
+    return rg_lru(a, b, interpret), (a, b)
+
+
+def _bwd(interpret, res, g):
+    a, b = res
+    _, vjp = jax.vjp(lambda a_, b_: ref.rg_lru_scan(a_, b_), a, b)
+    return vjp(g)
+
+
+rg_lru.defvjp(_fwd, _bwd)

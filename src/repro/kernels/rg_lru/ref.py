@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the RG-LRU gated linear recurrence (Griffin/recurrentgemma).
+
+    h_t = a_t * h_{t-1} + b_t        (elementwise over the model dimension)
+
+The caller supplies the input-dependent decay a_t in (0, 1) and the gated
+input b_t (for Griffin: b_t = sqrt(1 - a_t^2) * i_t * x_t); the recurrence
+itself is the compute hotspot the kernel accelerates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rg_lru_scan(a, b, h0=None):
+    """a, b: (B, T, D); returns (y, h_last) with y[t] = h_t."""
+    B, T, D = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D), jnp.float32)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    (h_last, ys) = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (a.astype(jnp.float32).swapaxes(0, 1), b.astype(jnp.float32).swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(a.dtype), h_last

@@ -1,0 +1,33 @@
+"""Public WKV6 op: chunked Pallas forward, reference-scan backward."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import wkv6_fwd
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def wkv6(r, k, v, log_w, u, interpret: bool = True):
+    """RWKV-6 recurrence.  r,k,log_w: (B,H,T,dk); v: (B,H,T,dv); u: (H,dk).
+
+    log_w is the log-space decay (<= 0).  Returns (y, s_last)."""
+    return wkv6_fwd(r, k, v, log_w, u, interpret=interpret)
+
+
+def _fwd(r, k, v, log_w, u, interpret):
+    return wkv6(r, k, v, log_w, u, interpret), (r, k, v, log_w, u)
+
+
+def _bwd(interpret, res, g):
+    r, k, v, log_w, u = res
+    _, vjp = jax.vjp(
+        lambda r_, k_, v_, lw_, u_: ref.wkv6_scan(r_, k_, v_, jnp.exp(lw_), u_),
+        r, k, v, log_w, u)
+    return vjp(g)
+
+
+wkv6.defvjp(_fwd, _bwd)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the RWKV-6 (Finch) recurrence with data-dependent decay.
+
+Per head (state S in R^{dk x dv}, decay w_t in (0,1)^{dk}, bonus u in R^{dk}):
+
+    y_t = r_t^T (S_{t-1} + (u * k_t) v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_scan(r, k, v, w, u, s0=None):
+    """r, k, w: (B, H, T, dk); v: (B, H, T, dv); u: (H, dk).
+
+    Returns (y: (B, H, T, dv), s_last: (B, H, dk, dv)).  w is the *decay*
+    in (0, 1), i.e. exp(log_w) if the model parameterizes log-space decay.
+    """
+    B, H, T, dk = r.shape
+    dv = v.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp  # (B,H,dk), (B,H,dk), (B,H,dv), (B,H,dk)
+        kv = kt[..., :, None] * vt[..., None, :]             # (B,H,dk,dv)
+        att = S + u[None, :, :, None] * kv                   # S_{t-1} + (u*k)v^T
+        y = jnp.einsum("bhk,bhkv->bhv", rt, att)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    f32 = lambda x: x.astype(jnp.float32)
+    xs = (f32(r).transpose(2, 0, 1, 3), f32(k).transpose(2, 0, 1, 3),
+          f32(v).transpose(2, 0, 1, 3), f32(w).transpose(2, 0, 1, 3))
+    s_last, ys = jax.lax.scan(step, f32(s0), xs)
+    return ys.transpose(1, 2, 0, 3).astype(r.dtype), s_last

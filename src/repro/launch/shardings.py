@@ -1,0 +1,154 @@
+"""Parameter / activation / cache sharding rules (GSPMD PartitionSpecs).
+
+Strategy (DESIGN.md S5):
+  - TP (Megatron): column-parallel projections shard their output dim over
+    'model'; row-parallel (output-side) projections shard their input dim
+    over 'model'.
+  - FSDP/ZeRO: the *other* weight dim shards over 'data' (params + optimizer
+    moments), gathered on use by GSPMD.
+  - EP: expert-indexed weights (E, ...) shard E over 'model'.
+  - 'pod' is pure DP for parameters (replicated; gradients all-reduce across
+    pods); activations/caches shard their batch dim over ('pod','data').
+
+Every rule is divisibility-guarded: an axis that doesn't divide the dim is
+dropped (replicated) rather than mis-sharded, so one rule table serves all
+ten architectures.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import batch_axes
+
+# weight-name -> (spec for last dims); leading stack/rep dims padded with None
+_ROW_PARALLEL = {"wo", "w_down", "w_out", "w_v", "w_o"}  # input dim over model
+_COL_PARALLEL = {"wq", "wk", "wv", "w_gate", "w_up", "w_in", "w_a", "w_x",
+                 "w_r", "w_k", "w_g", "w_uq", "w_uk", "w_uv", "w_dq", "w_dkv"}
+_EXPERT_WEIGHTS = {"w_gate", "w_up", "w_down"}
+
+
+def _axis_fits(mesh, axis, dim) -> bool:
+    return axis in mesh.axis_names and dim % mesh.shape[axis] == 0
+
+
+def _leaf_spec(mesh, path_keys: list[str], shape: tuple[int, ...],
+               moe_expert_axis: str = "model") -> P:
+    name = path_keys[-1]
+    in_block = any(k in ("decoder", "encoder") for k in path_keys)
+    nd = len(shape)
+    lead = 1 if in_block else 0      # scan-stacked rep dim
+    core = shape[lead:]
+
+    def guard(spec_core):
+        fixed = []
+        for dim, ax in zip(core, spec_core):
+            fixed.append(ax if ax is not None and _axis_fits(mesh, ax, dim)
+                         else None)
+        return P(*([None] * lead + fixed))
+
+    if name == "table":              # embedding (V, d): vocab over model
+        return guard(["model", "data"])
+    if name == "w" and len(core) == 2 and not in_block:  # unembed (d, V)
+        return guard(["data", "model"])
+    # MoE expert stacks (E, d, ff) / (E, ff, d)
+    if name in _EXPERT_WEIGHTS and len(core) == 3:
+        if moe_expert_axis == "data":
+            # EP over 'data' + TP-within-expert over 'model': weights are
+            # fully sharded -> zero FSDP all-gathers; tokens all-to-all over
+            # 'data' (the Perf hillclimb variant, EXPERIMENTS.md #Perf)
+            if name == "w_down":               # (E, ff, d)
+                return guard(["data", "model", None])
+            return guard(["data", None, "model"])  # (E, d, ff)
+        return guard(["model", "data", None])
+    if name == "router":
+        return guard(["data", None])
+    if len(core) == 2 and name in _ROW_PARALLEL:
+        return guard(["model", "data"])
+    if len(core) == 2 and (name in _COL_PARALLEL or name == "w"):
+        return guard(["data", "model"])
+    return P(*([None] * nd))         # norms, biases, scalars: replicate
+
+
+def param_shardings(mesh, params_shapes, moe_expert_axis: str = "model",
+                    fsdp: bool = True):
+    """Pytree of NamedSharding matching a params (or optimizer-state) tree.
+
+    fsdp=False drops the 'data' axis from every weight spec (TP-only):
+    the serving layout — no optimizer state to shard, and per-step weight
+    all-gathers disappear (weights are resident once loaded)."""
+
+    def one(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        spec = _leaf_spec(mesh, keys, leaf.shape, moe_expert_axis)
+        if not fsdp:
+            spec = jax.sharding.PartitionSpec(
+                *(None if ax == "data" else ax for ax in spec))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def batch_shardings(mesh, batch_shapes):
+    """Input batch: leading (global-batch) dim over ('pod','data')."""
+    baxes = batch_axes(mesh)
+
+    def one(leaf):
+        spec = [baxes if leaf.shape and leaf.shape[0] % _prod(mesh, baxes) == 0
+                else None] + [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def _prod(mesh, axes):
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def cache_shardings(mesh, cache_shapes, kv_seq_shard: bool = False):
+    """KV caches / recurrent states: batch over ('pod','data'); head or
+    feature dims over 'model' when divisible.
+
+    Cache leaves are scan-stacked: (reps, B, ...).  Heuristic: dim 1 = batch;
+    for >=4D leaves shard dim 2 (heads / latent) over 'model' when divisible.
+
+    kv_seq_shard: when the head dim does NOT divide the model axis (GQA with
+    few KV heads), shard the *sequence* dim (3) over 'model' instead —
+    flash-decoding style: each model shard attends over its slice and GSPMD
+    inserts the partial-softmax combine.  This removes the KV-cache
+    replication that otherwise dominates decode memory (EXPERIMENTS.md #Perf).
+    """
+    baxes = batch_axes(mesh)
+
+    def one(path, leaf):
+        nd = len(leaf.shape)
+        spec = [None] * nd
+        if nd >= 2 and leaf.shape[1] % _prod(mesh, baxes) == 0:
+            spec[1] = baxes
+        if nd >= 4 and _axis_fits(mesh, "model", leaf.shape[2]):
+            spec[2] = "model"
+        elif (kv_seq_shard and nd >= 5
+              and _axis_fits(mesh, "model", leaf.shape[3])):
+            spec[3] = "model"  # (reps, B, H, S, hd): shard S
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def activation_rules(mesh, seq_parallel: bool = False):
+    """Rules consumed by models.sharding.shard().
+
+    seq_parallel: shard the sequence dim of block outputs over 'model'
+    (Megatron sequence parallelism): norms/residual segments run 1/TP-th of
+    the tokens per device; GSPMD converts the TP all-reduces into
+    reduce-scatter + all-gather pairs around the matmuls."""
+    baxes = batch_axes(mesh)
+    model = "model" if "model" in mesh.axis_names else None
+    return {
+        "act": P(baxes, model if seq_parallel else None, None),
+        "logits": P(baxes, None, model),
+    }

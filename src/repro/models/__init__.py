@@ -1,0 +1,10 @@
+"""Model zoo: 10 assigned architectures over a shared functional substrate."""
+from .config import SHAPES, ArchConfig, MLAConfig, MoEConfig, ShapeConfig
+from .model import (decode_step, forward, init_caches, init_params, loss_fn,
+                    prefill, segments)
+
+__all__ = [
+    "SHAPES", "ArchConfig", "MLAConfig", "MoEConfig", "ShapeConfig",
+    "decode_step", "forward", "init_caches", "init_params", "loss_fn",
+    "prefill", "segments",
+]

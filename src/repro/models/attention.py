@@ -1,0 +1,269 @@
+"""Attention blocks: GQA (+RoPE), sliding-window, MLA, cross-attention.
+
+All blocks share the cache protocol:
+  prefill : attn(x full seq)            -> (y, cache)
+  decode  : attn(x one token, cache)    -> (y, cache')
+
+Cache layout (global attention):  k/v (B, Hkv, S_max, hd), filled up to `pos`.
+Sliding-window layers keep a ring buffer of `window` slots plus an absolute-
+position array for mask reconstruction — the long_500k decode memory story
+(window-bounded cache) lives here.
+
+MLA (MiniCPM3/DeepSeek): the cache stores the *latent* c_kv (B, S, r_kv) and
+the shared rope key (B, S, d_rope); decode uses the weight-absorption trick
+(q_nope folded through W_uk, output through W_uv) so per-step compute touches
+only rank-r tensors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ArchConfig
+from repro.kernels.flash_attention import ref as attn_ref
+from repro.kernels.flash_attention.ops import flash_attention
+
+
+# --- shared scaled-dot-product helpers ------------------------------------------
+
+
+def _sdpa(cfg: ArchConfig, q, k, v, causal, window):
+    if cfg.use_pallas:
+        return flash_attention(q, k, v, causal, window)
+    return attn_ref.attention(q, k, v, causal=causal, window=window)
+
+
+def _decode_attend(q, k_cache, v_cache, slot_pos, q_pos, window):
+    """q: (B, Hq, 1, hd); caches (B, Hkv, S, hd); slot_pos (S,) absolute
+    positions per slot (-1 = empty).  Returns (B, Hq, 1, hd)."""
+    b, hq, _, hd = q.shape
+    hkv = k_cache.shape[1]
+    group = hq // hkv
+    qf = q.astype(jnp.float32) * (hd ** -0.5)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    qg = qf.reshape(b, hkv, group, hd)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", qg, kf)
+    valid = (slot_pos >= 0) & (slot_pos <= q_pos)
+    if window is not None:
+        valid &= slot_pos > q_pos - window
+    scores = jnp.where(valid[None, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, vf)
+    return out.reshape(b, hq, 1, hd).astype(q.dtype)
+
+
+# --- GQA attention (global or sliding window) ------------------------------------
+
+
+def init_attention(cfg: ArchConfig, key, dtype):
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": (jax.random.normal(ks[0], (d, hq * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, hkv * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, hkv * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (hq * hd, d)) * (hq * hd) ** -0.5).astype(dtype),
+    }
+
+
+def init_attn_cache(cfg: ArchConfig, batch: int, max_seq: int, kind: str, dtype):
+    s_cache = min(max_seq, cfg.window) if kind == "local" else max_seq
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, hkv, s_cache, hd), dtype),
+        "v": jnp.zeros((batch, hkv, s_cache, hd), dtype),
+        "slot_pos": jnp.full((s_cache,), -1, jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _split_heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd).transpose(0, 2, 1, 3)
+
+
+def attention_block(cfg: ArchConfig, p, x, positions, *, kind: str,
+                    cache=None, bidirectional: bool = False):
+    """x: (B, S, d).  Returns (y, new_cache)."""
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    window = cfg.window if kind == "local" else None
+    q = _split_heads(layers.dot(x, p["wq"]).astype(x.dtype), hq, hd)
+    k = _split_heads(layers.dot(x, p["wk"]).astype(x.dtype), hkv, hd)
+    v = _split_heads(layers.dot(x, p["wv"]).astype(x.dtype), hkv, hd)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:  # training / plain forward
+        out = _sdpa(cfg, q, k, v, not bidirectional, window)
+        new_cache = None
+    elif s > 1:  # prefill: full attention, then stash the tail of k/v
+        out = _sdpa(cfg, q, k, v, not bidirectional, window)
+        s_cache = cache["k"].shape[2]
+        keep = min(s, s_cache)
+        new_cache = dict(cache)
+        if keep == s:  # whole prefix fits: position p lives at slot p
+            new_cache["k"] = jax.lax.dynamic_update_slice(
+                cache["k"], k, (0, 0, 0, 0))
+            new_cache["v"] = jax.lax.dynamic_update_slice(
+                cache["v"], v, (0, 0, 0, 0))
+            slot = jnp.full((s_cache,), -1, jnp.int32)
+            slot = jax.lax.dynamic_update_slice(
+                slot, jnp.arange(s, dtype=jnp.int32), (0,))
+        else:  # ring buffer: slot t must hold the position p = t (mod s_cache)
+            # from the kept tail [s - s_cache, s); decode continues at
+            # slot = pos % s_cache without re-shuffling.
+            tail_k, tail_v = k[:, :, s - keep:, :], v[:, :, s - keep:, :]
+            idx = (jnp.arange(s_cache) - s) % s_cache  # tail-relative index
+            new_cache["k"] = jnp.take(tail_k, idx, axis=2)
+            new_cache["v"] = jnp.take(tail_v, idx, axis=2)
+            slot = (s - keep) + idx.astype(jnp.int32)  # absolute positions
+        new_cache["slot_pos"] = slot
+        new_cache["pos"] = jnp.asarray(s, jnp.int32)
+    else:  # decode: one token
+        s_cache = cache["k"].shape[2]
+        pos = cache["pos"]
+        slot = pos % s_cache  # ring buffer (== pos for global caches)
+        k_new = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, slot, 0))
+        v_new = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, slot, 0))
+        slot_pos = jax.lax.dynamic_update_slice(
+            cache["slot_pos"], pos[None], (slot,))
+        out = _decode_attend(q, k_new, v_new, slot_pos, pos, window)
+        new_cache = {"k": k_new, "v": v_new, "slot_pos": slot_pos,
+                     "pos": pos + 1}
+
+    y = out.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    return layers.dot(y, p["wo"]).astype(x.dtype), new_cache
+
+
+# --- MLA (multi-head latent attention) ---------------------------------------------
+
+
+def init_mla(cfg: ArchConfig, key, dtype):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "w_dq": (jax.random.normal(ks[0], (d, m.q_lora_rank)) * s).astype(dtype),
+        "w_uq": (jax.random.normal(ks[1], (m.q_lora_rank, h * qk_head))
+                 * m.q_lora_rank ** -0.5).astype(dtype),
+        "w_dkv": (jax.random.normal(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim))
+                  * s).astype(dtype),
+        "w_uk": (jax.random.normal(ks[3], (m.kv_lora_rank, h * m.qk_nope_head_dim))
+                 * m.kv_lora_rank ** -0.5).astype(dtype),
+        "w_uv": (jax.random.normal(ks[4], (m.kv_lora_rank, h * m.v_head_dim))
+                 * m.kv_lora_rank ** -0.5).astype(dtype),
+        "wo": (jax.random.normal(ks[5], (h * m.v_head_dim, d))
+               * (h * m.v_head_dim) ** -0.5).astype(dtype),
+    }
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, m.qk_rope_head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_block(cfg: ArchConfig, p, x, positions, *, cache=None, kind="mla"):
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.num_heads
+    nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    cq = layers.dot(x, p["w_dq"]).astype(x.dtype)                  # (B,S,rq)
+    q = layers.dot(cq, p["w_uq"]).astype(x.dtype)
+    q = q.reshape(b, s, h, nope + rope_d).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = layers.dot(x, p["w_dkv"]).astype(x.dtype)                # (B,S,rkv+rope)
+    c_kv, k_rope = dkv[..., :m.kv_lora_rank], dkv[..., m.kv_lora_rank:]
+    k_rope = layers.apply_rope(k_rope[:, None], positions, cfg.rope_theta)[:, 0]
+
+    def expand_kv(c):
+        k_n = layers.dot(c, p["w_uk"]).astype(x.dtype)
+        k_n = k_n.reshape(b, -1, h, nope).transpose(0, 2, 1, 3)
+        v = layers.dot(c, p["w_uv"]).astype(x.dtype)
+        v = v.reshape(b, -1, h, vd).transpose(0, 2, 1, 3)
+        return k_n, v
+
+    if cache is None or s > 1:  # train / prefill: expand latents, full attn
+        k_n, v = expand_kv(c_kv)
+        k_r = jnp.broadcast_to(k_rope[:, None], (b, h, s, rope_d))
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_full = jnp.concatenate([k_n, k_r], axis=-1)
+        # pad v to q head_dim for the shared kernel, slice after
+        scale = (nope + rope_d) ** -0.5
+        if cfg.use_pallas and vd == nope + rope_d:
+            out = flash_attention(q_full, k_full, v, True, None, scale)
+        else:
+            out = attn_ref.attention(q_full, k_full, v, causal=True,
+                                     window=None, scale=scale)
+        new_cache = None
+        if cache is not None:
+            new_cache = dict(cache)
+            new_cache["c_kv"] = jax.lax.dynamic_update_slice(
+                cache["c_kv"], c_kv, (0, 0, 0))
+            new_cache["k_rope"] = jax.lax.dynamic_update_slice(
+                cache["k_rope"], k_rope, (0, 0, 0))
+            new_cache["pos"] = jnp.asarray(s, jnp.int32)
+    else:  # decode with weight absorption: attend in latent space
+        pos = cache["pos"]
+        c_all = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, pos, 0))
+        kr_all = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope, (0, pos, 0))
+        w_uk = p["w_uk"].reshape(m.kv_lora_rank, h, nope)
+        # absorb: q_abs[b,h,r] = sum_n q_nope[b,h,n] * w_uk[r,h,n]
+        q_abs = jnp.einsum("bhln,rhn->bhlr", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))                # (B,H,1,rkv)
+        scores = jnp.einsum("bhlr,bsr->bhls", q_abs,
+                            c_all.astype(jnp.float32))
+        scores += jnp.einsum("bhld,bsd->bhls", q_rope.astype(jnp.float32),
+                             kr_all.astype(jnp.float32))
+        scores *= (nope + rope_d) ** -0.5
+        spos = jnp.arange(c_all.shape[1])
+        scores = jnp.where((spos <= pos)[None, None, None, :], scores, -jnp.inf)
+        w = jax.nn.softmax(scores, axis=-1)
+        lat = jnp.einsum("bhls,bsr->bhlr", w, c_all.astype(jnp.float32))
+        w_uv = p["w_uv"].reshape(m.kv_lora_rank, h, vd)
+        out = jnp.einsum("bhlr,rhv->bhlv", lat,
+                         w_uv.astype(jnp.float32)).astype(x.dtype)
+        new_cache = {"c_kv": c_all, "k_rope": kr_all, "pos": pos + 1}
+
+    y = out.transpose(0, 2, 1, 3).reshape(b, s, h * vd)
+    return layers.dot(y, p["wo"]).astype(x.dtype), new_cache
+
+
+# --- cross attention (whisper decoder) ------------------------------------------------
+
+
+def init_cross_attention(cfg: ArchConfig, key, dtype):
+    return init_attention(cfg, key, dtype)
+
+
+def cross_attention_block(cfg: ArchConfig, p, x, enc_kv, *, cache=None):
+    """enc_kv: (k, v) each (B, Hkv, S_enc, hd), precomputed at prefill."""
+    b, s, d = x.shape
+    hq, hd = cfg.num_heads, cfg.head_dim
+    q = _split_heads(layers.dot(x, p["wq"]).astype(x.dtype), hq, hd)
+    k, v = enc_kv
+    out = _sdpa(cfg, q, k, v, False, None)
+    y = out.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    return layers.dot(y, p["wo"]).astype(x.dtype)
+
+
+def encode_cross_kv(cfg: ArchConfig, p, enc_out):
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    k = _split_heads(layers.dot(enc_out, p["wk"]).astype(enc_out.dtype), hkv, hd)
+    v = _split_heads(layers.dot(enc_out, p["wv"]).astype(enc_out.dtype), hkv, hd)
+    return k, v

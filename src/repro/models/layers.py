@@ -1,0 +1,142 @@
+"""Functional building blocks (no framework dependency: params are pytrees).
+
+Initializers return nested dicts of jnp arrays; apply functions are pure.
+All matmuls accumulate in float32 (`preferred_element_type`) regardless of the
+parameter dtype so bf16 training is numerically sane.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dot(x, w):
+    return jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+# --- norms --------------------------------------------------------------------
+
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def init_layernorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# --- FFN ------------------------------------------------------------------------
+
+
+def init_swiglu(key, d, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_ff = d ** -0.5, d_ff ** -0.5
+    return {
+        "w_gate": (jax.random.normal(k1, (d, d_ff)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d)) * s_ff).astype(dtype),
+    }
+
+
+def swiglu(p, x):
+    g = dot(x, p["w_gate"])
+    u = dot(x, p["w_up"])
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    return dot(h, p["w_down"]).astype(x.dtype)
+
+
+def init_gelu_mlp(key, d, d_ff, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": (jax.random.normal(k1, (d, d_ff)) * d ** -0.5).astype(dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": (jax.random.normal(k2, (d_ff, d)) * d_ff ** -0.5).astype(dtype),
+        "b_out": jnp.zeros((d,), dtype),
+    }
+
+
+def gelu_mlp(p, x):
+    h = jax.nn.gelu(dot(x, p["w_in"]) + p["b_in"].astype(jnp.float32))
+    return (dot(h.astype(x.dtype), p["w_out"])
+            + p["b_out"].astype(jnp.float32)).astype(x.dtype)
+
+
+# --- embeddings / head -----------------------------------------------------------
+
+
+def init_embedding(key, vocab, d, dtype):
+    return {"table": (jax.random.normal(key, (vocab, d)) * d ** -0.5).astype(dtype)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p, x):
+    """Logits; when tied, p is the embedding table."""
+    return dot(x, p["table"].T) if "table" in p else dot(x, p["w"])
+
+
+def init_unembed(key, d, vocab, dtype):
+    return {"w": (jax.random.normal(key, (d, vocab)) * d ** -0.5).astype(dtype)}
+
+
+# --- rotary position embedding ----------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (B, H, S, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,S,D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2].astype(jnp.float32), x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)  # (S, d)
+
+
+# --- misc --------------------------------------------------------------------------
+
+
+def init_linear(key, d_in, d_out, dtype, bias=False):
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * d_in ** -0.5).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = dot(x, p["w"])
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,392 @@
+"""Model assembly: pattern-segment layer scanning, enc-dec, train/serve steps.
+
+The layer stack is grouped into *segments*: maximal runs of whole pattern
+periods plus a remainder.  Each segment scans (`jax.lax.scan`) over its
+repetitions with per-period block params stacked on a leading axis — compile
+time is O(pattern length), not O(num_layers), which keeps the 512-device
+dry-run of 94-layer models tractable.  Blocks are rematerialized
+(jax.checkpoint) in training mode.
+
+Caches thread through the same scan as per-segment stacked pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, layers, moe, recurrent
+from .config import ArchConfig
+from .sharding import shard
+
+PyTree = Any
+
+
+# --- layer segmentation ----------------------------------------------------------
+
+
+def segments(cfg: ArchConfig) -> list[tuple[tuple[str, ...], int]]:
+    """[(period kinds, repetitions)] covering cfg.num_layers."""
+    p = len(cfg.pattern)
+    full, rem = divmod(cfg.num_layers, p)
+    out = []
+    if full:
+        out.append((tuple(cfg.pattern), full))
+    if rem:
+        out.append((tuple(cfg.pattern[:rem]), 1))
+    return out
+
+
+# --- per-block init / apply --------------------------------------------------------
+
+
+def _init_ffn(cfg: ArchConfig, key, dtype):
+    if cfg.ffn == "moe":
+        return moe.init_moe(cfg, key, dtype)
+    if cfg.ffn == "gelu":
+        return layers.init_gelu_mlp(key, cfg.d_model, cfg.d_ff, dtype)
+    return layers.init_swiglu(key, cfg.d_model, cfg.d_ff, dtype)
+
+
+def _apply_ffn(cfg: ArchConfig, p, x):
+    if cfg.ffn == "moe":
+        return moe.moe_ffn(cfg, p, x)
+    if cfg.ffn == "gelu":
+        return layers.gelu_mlp(p, x), jnp.zeros((), jnp.float32)
+    return layers.swiglu(p, x), jnp.zeros((), jnp.float32)
+
+
+def init_block(cfg: ArchConfig, key, kind: str, dtype, with_cross: bool = False):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"norm1": layers.init_rmsnorm(cfg.d_model, dtype)}
+    if kind in ("attn", "local"):
+        p["mix"] = attention.init_attention(cfg, k1, dtype)
+    elif kind == "mla":
+        p["mix"] = attention.init_mla(cfg, k1, dtype)
+    elif kind == "rglru":
+        p["mix"] = recurrent.init_rglru(cfg, k1, dtype)
+    elif kind == "rwkv6":
+        p["mix"] = recurrent.init_rwkv6(cfg, k1, dtype)
+    else:
+        raise ValueError(kind)
+    p["norm2"] = layers.init_rmsnorm(cfg.d_model, dtype)
+    if kind == "rwkv6":
+        p["ffn"] = recurrent.init_rwkv_cmix(cfg, k2, dtype)
+    else:
+        p["ffn"] = _init_ffn(cfg, k2, dtype)
+    if with_cross:
+        p["cross"] = attention.init_cross_attention(cfg, k3, dtype)
+        p["norm_cross"] = layers.init_rmsnorm(cfg.d_model, dtype)
+    return p
+
+
+def init_block_cache(cfg: ArchConfig, kind: str, batch: int, max_seq: int,
+                     dtype, with_cross: bool = False, enc_seq: int = 0):
+    if kind in ("attn", "local"):
+        c = {"mix": attention.init_attn_cache(cfg, batch, max_seq, kind, dtype)}
+    elif kind == "mla":
+        c = {"mix": attention.init_mla_cache(cfg, batch, max_seq, dtype)}
+    elif kind == "rglru":
+        c = {"mix": recurrent.init_rglru_state(cfg, batch, dtype)}
+    elif kind == "rwkv6":
+        c = {"mix": recurrent.init_rwkv6_state(cfg, batch, dtype),
+             "cmix": jnp.zeros((batch, cfg.d_model), dtype)}
+    else:
+        raise ValueError(kind)
+    if with_cross:
+        hkv, hd = cfg.num_kv_heads, cfg.head_dim
+        c["cross_k"] = jnp.zeros((batch, hkv, enc_seq, hd), dtype)
+        c["cross_v"] = jnp.zeros((batch, hkv, enc_seq, hd), dtype)
+    return c
+
+
+def apply_block(cfg: ArchConfig, p, kind: str, x, positions, *, cache=None,
+                enc_out=None, bidirectional: bool = False):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.rmsnorm(p["norm1"], x)
+    mix_cache = None if cache is None else cache["mix"]
+    if kind in ("attn", "local"):
+        y, new_mix = attention.attention_block(
+            cfg, p["mix"], h, positions, kind=kind, cache=mix_cache,
+            bidirectional=bidirectional)
+    elif kind == "mla":
+        y, new_mix = attention.mla_block(cfg, p["mix"], h, positions,
+                                         cache=mix_cache)
+    elif kind == "rglru":
+        y, new_mix = recurrent.rglru_block(cfg, p["mix"], h, state=mix_cache)
+    elif kind == "rwkv6":
+        y, new_mix = recurrent.rwkv6_block(cfg, p["mix"], h, state=mix_cache)
+    else:
+        raise ValueError(kind)
+    x = x + y
+
+    if "cross" in p:
+        hc = layers.rmsnorm(p["norm_cross"], x)
+        if enc_out is not None:  # train / prefill: fresh encoder output
+            enc_kv = attention.encode_cross_kv(cfg, p["cross"], enc_out)
+        else:  # decode: cached cross K/V
+            enc_kv = (cache["cross_k"], cache["cross_v"])
+        x = x + attention.cross_attention_block(cfg, p["cross"], hc, enc_kv)
+
+    h = layers.rmsnorm(p["norm2"], x)
+    if kind == "rwkv6":
+        cmix_state = None if cache is None else cache["cmix"]
+        y, new_cmix = recurrent.rwkv_cmix(cfg, p["ffn"], h, state=cmix_state)
+    else:
+        y, ffn_aux = _apply_ffn(cfg, p["ffn"], h)
+        aux += ffn_aux
+    x = shard(x + y, "act")
+
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache)
+        new_cache["mix"] = new_mix
+        if kind == "rwkv6":
+            new_cache["cmix"] = new_cmix
+    return x, new_cache, aux
+
+
+# --- stack init ---------------------------------------------------------------------
+
+
+def _stack_init(fn, key, reps: int):
+    keys = jax.random.split(key, reps)
+    return jax.vmap(fn)(keys)
+
+
+def init_params(cfg: ArchConfig, key) -> PyTree:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params: dict = {}
+    params["embed"] = layers.init_embedding(keys[0], cfg.vocab_size,
+                                            cfg.d_model, dtype)
+    if not cfg.tied_embeddings:
+        params["unembed"] = layers.init_unembed(keys[1], cfg.d_model,
+                                                cfg.vocab_size, dtype)
+    params["final_norm"] = layers.init_rmsnorm(cfg.d_model, dtype)
+
+    with_cross = cfg.enc_dec
+    segs = []
+    seg_key = keys[2]
+    for kinds, reps in segments(cfg):
+        seg_key, k = jax.random.split(seg_key)
+        per_pos = []
+        for pos, kind in enumerate(kinds):
+            k, kk = jax.random.split(k)
+            per_pos.append(_stack_init(
+                lambda kk_, kind_=kind: init_block(cfg, kk_, kind_, dtype,
+                                                   with_cross=with_cross),
+                kk, reps))
+        segs.append(per_pos)
+    params["decoder"] = segs
+
+    if cfg.enc_dec:
+        enc_segs = []
+        k = keys[3]
+        n_enc = cfg.num_encoder_layers
+        enc_segs.append([_stack_init(
+            lambda kk_: init_block(cfg, kk_, "attn", dtype), k, n_enc)])
+        params["encoder"] = enc_segs
+    if cfg.frontend == "patch_stub":
+        params["patch_proj"] = layers.init_linear(keys[4], cfg.d_model,
+                                                  cfg.d_model, dtype)
+    return params
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_seq: int) -> PyTree:
+    dtype = jnp.dtype(cfg.dtype)
+    segs = []
+    for kinds, reps in segments(cfg):
+        per_pos = []
+        for kind in kinds:
+            one = init_block_cache(cfg, kind, batch, max_seq, dtype,
+                                   with_cross=cfg.enc_dec,
+                                   enc_seq=cfg.encoder_seq)
+            per_pos.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (reps,) + x.shape), one))
+        segs.append(per_pos)
+    return segs
+
+
+# --- stack apply --------------------------------------------------------------------
+
+
+def _run_segments(cfg: ArchConfig, segs_params, segs_caches, x, positions, *,
+                  enc_out=None, bidirectional=False, mode="train"):
+    """Returns (x, new_caches, total_aux)."""
+    seg_list = segments(cfg)
+    total_aux = jnp.zeros((), jnp.float32)
+    new_caches = [] if segs_caches is not None else None
+
+    for si, (kinds, reps) in enumerate(seg_list):
+        per_pos_params = segs_params[si]
+        per_pos_caches = segs_caches[si] if segs_caches is not None else None
+
+        def body(carry, per_rep):
+            xx = carry
+            p_list, c_list = per_rep
+            aux_sum = jnp.zeros((), jnp.float32)
+            new_c = []
+            for pos, kind in enumerate(kinds):
+                cache_i = c_list[pos] if c_list is not None else None
+                xx, nc, aux = apply_block(
+                    cfg, p_list[pos], kind, xx, positions, cache=cache_i,
+                    enc_out=enc_out, bidirectional=bidirectional)
+                new_c.append(nc)
+                aux_sum = aux_sum + aux
+            return xx, (new_c if c_list is not None else None, aux_sum)
+
+        if cfg.remat and mode == "train" and cfg.remat_policy != "none":
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat_policy == "dots" else None)
+            body_fn = jax.checkpoint(body, policy=policy)
+        else:
+            body_fn = body
+        if cfg.unroll_layers:
+            # Python-unrolled variant (dry-run cost calibration; see config)
+            auxs = jnp.zeros((), jnp.float32)
+            ncs_list = []
+            for r in range(reps):
+                take = lambda t, r=r: jax.tree.map(lambda a: a[r], t)
+                c_r = take(per_pos_caches) if per_pos_caches is not None else None
+                x, (nc, aux) = body_fn(x, (take(per_pos_params), c_r))
+                auxs += aux
+                if per_pos_caches is not None:
+                    ncs_list.append(nc)
+            if per_pos_caches is not None:
+                new_caches.append(jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *ncs_list))
+            total_aux += auxs
+            continue
+        if per_pos_caches is None:
+            # scan only over params; caches absent
+            x, (_, auxs) = jax.lax.scan(
+                lambda c, p: body_fn(c, (p, None)), x, per_pos_params)
+        else:
+            x, (ncs, auxs) = jax.lax.scan(body_fn, x,
+                                          (per_pos_params, per_pos_caches))
+            new_caches.append(ncs)
+        total_aux += jnp.sum(auxs)
+    return x, new_caches, total_aux
+
+
+# --- embedding / frontends ------------------------------------------------------------
+
+
+def _embed_inputs(cfg: ArchConfig, params, batch: dict):
+    """Returns (x, positions)."""
+    tok = batch["tokens"]
+    x = layers.embed(params["embed"], tok) * (cfg.d_model ** 0.5)
+    x = x.astype(jnp.dtype(cfg.dtype))
+    if cfg.frontend == "patch_stub" and "patches" in batch:
+        px = layers.linear(params["patch_proj"], batch["patches"])
+        x = jnp.concatenate([px.astype(x.dtype), x], axis=1)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    return shard(x, "act"), positions
+
+
+def _encode(cfg: ArchConfig, params, frames):
+    """Whisper encoder on precomputed conv-frontend frames (B, S_enc, d)."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + layers.sinusoidal_positions(x.shape[1], cfg.d_model)[None].astype(x.dtype)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x, _, _ = _run_segments(cfg, params["encoder"], None, x, positions,
+                            bidirectional=True, mode="encode")
+    return layers.rmsnorm(params["final_norm"], x)
+
+
+# --- public entry points ----------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ModelOutput:
+    logits: jax.Array
+    caches: PyTree | None
+    aux_loss: jax.Array
+
+
+def forward(cfg: ArchConfig, params, batch: dict, *, caches=None,
+            mode: str = "train") -> ModelOutput:
+    """batch: tokens (B, S) [+ patches (B,P,d) | frames (B,S_enc,d)]."""
+    enc_out = None
+    if cfg.enc_dec and mode != "decode":
+        enc_out = _encode(cfg, params, batch["frames"])
+    x, positions = _embed_inputs(cfg, params, batch)
+    if caches is not None and mode == "decode":
+        # single-token step: positions come from the cache pointer
+        pos0 = _cache_pos(cfg, caches)
+        positions = jnp.broadcast_to(pos0[None, None], x.shape[:2]).astype(jnp.int32)
+    x, new_caches, aux = _run_segments(cfg, params["decoder"], caches, x,
+                                       positions, enc_out=enc_out, mode=mode)
+    x = layers.rmsnorm(params["final_norm"], x)
+    head = params["embed"] if cfg.tied_embeddings else params["unembed"]
+    logits = shard(layers.unembed(head, x), "logits")
+    return ModelOutput(logits=logits, caches=new_caches, aux_loss=aux)
+
+
+def _cache_pos(cfg: ArchConfig, caches):
+    """Current decode position from the first attention cache found.
+
+    Pure-recurrent stacks (rwkv6) have no positional cache — and no use for
+    positions (token-shift only) — so 0 is returned."""
+    for seg in caches:
+        for c in seg:
+            if isinstance(c, dict) and isinstance(c.get("mix"), dict) \
+                    and "pos" in c["mix"]:
+                return c["mix"]["pos"][0]  # leading axis = scan reps
+    return jnp.zeros((), jnp.int32)
+
+
+def loss_fn(cfg: ArchConfig, params, batch, aux_weight: float = 0.01):
+    out = forward(cfg, params, batch, mode="train")
+    labels = batch["labels"]
+    logits = out.logits[:, -labels.shape[1]:, :].astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = jnp.sum((logz - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+    loss = nll + aux_weight * out.aux_loss
+    return loss, {"nll": nll, "aux": out.aux_loss}
+
+
+def prefill(cfg: ArchConfig, params, batch, max_seq: int):
+    """Run the prompt, build caches.  Returns (last-token logits, caches)."""
+    b = batch["tokens"].shape[0]
+    caches = init_caches(cfg, b, max_seq)
+    out = forward(cfg, params, batch, caches=caches, mode="prefill")
+    caches = out.caches
+    if cfg.enc_dec:  # stash cross-attention K/V once
+        caches = _fill_cross_kv(cfg, params, caches, batch)
+    return out.logits[:, -1, :], caches
+
+
+def _fill_cross_kv(cfg, params, caches, batch):
+    enc_out = _encode(cfg, params, batch["frames"])
+    new = []
+    for si, (kinds, reps) in enumerate(segments(cfg)):
+        per_pos = []
+        for pos in range(len(kinds)):
+            c = caches[si][pos]
+            p_stack = params["decoder"][si][pos]
+
+            def kv_of(p_one):
+                return attention.encode_cross_kv(cfg, p_one["cross"], enc_out)
+
+            k, v = jax.vmap(kv_of)(p_stack)
+            c = dict(c)
+            c["cross_k"], c["cross_v"] = k, v
+            per_pos.append(c)
+        new.append(per_pos)
+    return new
+
+
+def decode_step(cfg: ArchConfig, params, token, caches):
+    """token: (B, 1) int32.  Returns (logits (B, vocab), caches')."""
+    out = forward(cfg, params, {"tokens": token}, caches=caches, mode="decode")
+    return out.logits[:, -1, :], out.caches

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts FFN: top-k routing + capacity-bounded einsum dispatch.
+
+GShard-style dense dispatch, restructured for memory: tokens are processed in
+groups of `group_size` (scanned), so the transient one-hot dispatch tensor is
+(group, k, E, C) with C = ceil(group * k * cf / E) — small enough to live in
+VMEM-scale working sets at any model size (the knob is per-arch config).
+
+Expert parallelism: expert-indexed weights (E, d, ff) shard over the 'model'
+mesh axis; the dispatch/combine einsums then lower to exactly the All-to-All
+the paper optimizes (benchmarked via the BRIDGE planner; see DESIGN.md S4 and
+the qwen3/arctic roofline rows).
+
+Arctic-style dense residual: an always-on SwiGLU FFN added in parallel with
+the routed experts (cfg.moe.dense_residual_d_ff > 0).
+
+Returns an auxiliary load-balancing loss (Switch-style) accumulated by the
+caller.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ArchConfig, MoEConfig
+
+
+def init_moe(cfg: ArchConfig, key, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    s_in, s_ff = d ** -0.5, m.d_ff_expert ** -0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d, m.num_experts)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (m.num_experts, d, m.d_ff_expert)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (m.num_experts, d, m.d_ff_expert)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (m.num_experts, m.d_ff_expert, d)) * s_ff).astype(dtype),
+    }
+    if m.dense_residual_d_ff:
+        p["dense"] = layers.init_swiglu(ks[4], d, m.dense_residual_d_ff, dtype)
+    return p
+
+
+def _capacity(group: int, m: MoEConfig) -> int:
+    c = int(math.ceil(group * m.top_k * m.capacity_factor / m.num_experts))
+    return max(4, c)
+
+
+def _moe_group(p, xg, m: MoEConfig):
+    """xg: (G, d) one token group.  Returns (yg, aux_loss_terms)."""
+    G, d = xg.shape
+    E, k = m.num_experts, m.top_k
+    C = _capacity(G, m)
+
+    logits = layers.dot(xg, p["router"])                  # (G, E) f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                # (G, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert, token-major order
+    oh = jax.nn.one_hot(top_i, E, dtype=jnp.int32)        # (G, k, E)
+    oh_flat = oh.reshape(G * k, E)
+    pos = jnp.cumsum(oh_flat, axis=0) - 1                 # (G*k, E)
+    pos = jnp.sum(pos * oh_flat, axis=-1)                 # (G*k,)
+    keep = (pos < C).astype(xg.dtype).reshape(G, k)
+
+    # dispatch: (G, k, E, C) one-hot — combine/dispatch in one tensor
+    disp = (jax.nn.one_hot(top_i, E, dtype=xg.dtype)
+            * keep[..., None])[..., None] * jax.nn.one_hot(
+                pos.reshape(G, k), C, dtype=xg.dtype)[:, :, None, :]
+    xe = jnp.einsum("gd,gkec->ecd", xg, disp)             # (E, C, d)
+
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"],
+                   preferred_element_type=jnp.float32)
+    ye = jnp.einsum("ecf,efd->ecd", (jax.nn.silu(h) * u).astype(xg.dtype),
+                    p["w_down"], preferred_element_type=jnp.float32).astype(xg.dtype)
+
+    combine = disp * top_p.astype(xg.dtype)[..., None, None]
+    yg = jnp.einsum("ecd,gkec->gd", ye, combine)          # (G, d)
+
+    # Switch aux loss terms: fraction routed per expert x mean router prob
+    frac = oh.astype(jnp.float32).sum(axis=(0, 1)) / (G * k)
+    mean_p = probs.mean(axis=0)
+    aux = E * jnp.sum(frac * mean_p)
+    return yg, aux
+
+
+def moe_ffn(cfg: ArchConfig, p, x):
+    """x: (B, S, d).  Returns (y, aux_loss)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    gs = min(m.group_size, flat.shape[0])
+    pad = (-flat.shape[0]) % gs
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad, d), flat.dtype)])
+    groups = flat.reshape(-1, gs, d)
+
+    run = functools.partial(_moe_group, p, m=m)
+    if groups.shape[0] == 1:
+        y, aux = run(groups[0])
+        y, aux = y[None], aux[None] if aux.ndim else aux[None]
+    elif m.vectorize_groups:
+        # all groups in parallel: the group dim inherits the token (data)
+        # sharding, so dispatch/expert compute stays shard-local
+        y, aux = jax.vmap(run)(groups)
+    else:
+        y, aux = jax.lax.map(run, groups)                 # scan over groups
+    y = y.reshape(-1, d)
+    if pad:
+        y = y[:-pad]
+    y = y.reshape(b, s, d)
+    if "dense" in p:  # Arctic dense residual
+        y = y + layers.swiglu(p["dense"], x)
+    return y, jnp.mean(aux)

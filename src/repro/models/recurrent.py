@@ -1,0 +1,208 @@
+"""Recurrent blocks: Griffin RG-LRU (recurrentgemma) and RWKV-6 time-mix.
+
+State protocol mirrors attention caches:
+  prefill: block(x full seq)          -> (y, state)
+  decode : block(x one token, state)  -> (y, state')
+
+RG-LRU block (Griffin, arXiv:2402.19427):
+  u = W_gate x ; v = W_in x ; v <- causal conv1d(v, k=4)
+  r = sigmoid(W_a v); i = sigmoid(W_x v)
+  log a_t = -c * softplus(Lambda) * r_t           (c = 8)
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * v_t)   [rg_lru kernel]
+  y = W_out (gelu(u) * h)
+  State: (h_last (B, W), conv tail (B, k-1, W)).
+
+RWKV-6 block (Finch, arXiv:2404.05892), time-mix + channel-mix pair:
+  token-shift interpolation, data-dependent decay via a small LoRA,
+  wkv6 recurrence kernel, per-head group-norm, gated output.
+  State: (last token (B, d), wkv state (B, H, dk, dv)); channel-mix keeps its
+  own last-token shift state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ArchConfig
+from repro.kernels.rg_lru import ref as lru_ref
+from repro.kernels.rg_lru.ops import rg_lru
+from repro.kernels.wkv6 import ref as wkv_ref
+from repro.kernels.wkv6.ops import wkv6
+
+_C_RGLRU = 8.0
+
+
+# --- Griffin RG-LRU ------------------------------------------------------------
+
+
+def init_rglru(cfg: ArchConfig, key, dtype):
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    ks = jax.random.split(key, 7)
+    s = d ** -0.5
+    # Lambda init so that a = sigmoid(Lambda) in (0.9, 0.999) (paper init)
+    lam = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9, 0.999)
+    return {
+        "w_gate": (jax.random.normal(ks[0], (d, w)) * s).astype(dtype),
+        "w_in": (jax.random.normal(ks[1], (d, w)) * s).astype(dtype),
+        "conv": (jax.random.normal(ks[2], (cfg.conv_kernel, w)) * 0.1).astype(dtype),
+        "w_a": (jax.random.normal(ks[3], (w, w)) * w ** -0.5).astype(dtype),
+        "w_x": (jax.random.normal(ks[4], (w, w)) * w ** -0.5).astype(dtype),
+        "lambda": jnp.log(lam / (1 - lam)),  # logit so sigmoid(Lambda)=a
+        "w_out": (jax.random.normal(ks[6], (w, d)) * w ** -0.5).astype(dtype),
+    }
+
+
+def init_rglru_state(cfg: ArchConfig, batch: int, dtype):
+    w = cfg.rglru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv_tail": jnp.zeros((batch, cfg.conv_kernel - 1, w), dtype),
+    }
+
+
+def _causal_conv(p, v, tail):
+    """v: (B, S, W); tail: (B, k-1, W) inputs preceding v. Returns same-shape."""
+    kk = p["conv"].shape[0]
+    ext = jnp.concatenate([tail, v], axis=1)
+    out = sum(ext[:, i:i + v.shape[1], :] * p["conv"][kk - 1 - i][None, None, :]
+              for i in range(kk))
+    return out.astype(v.dtype), ext[:, -(kk - 1):, :]
+
+
+def rglru_block(cfg: ArchConfig, p, x, *, state=None):
+    b, s, d = x.shape
+    u = layers.dot(x, p["w_gate"]).astype(x.dtype)
+    v = layers.dot(x, p["w_in"]).astype(x.dtype)
+    tail = state["conv_tail"] if state is not None else \
+        jnp.zeros((b, cfg.conv_kernel - 1, v.shape[-1]), v.dtype)
+    v, new_tail = _causal_conv(p, v, tail)
+
+    r = jax.nn.sigmoid(layers.dot(v, p["w_a"]))
+    i = jax.nn.sigmoid(layers.dot(v, p["w_x"]))
+    log_a = -_C_RGLRU * jax.nn.softplus(p["lambda"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    gated = (i * v.astype(jnp.float32))
+    binp = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+
+    h0 = state["h"] if state is not None else None
+    if cfg.use_pallas and s > 1 and h0 is None:
+        y, h_last = rg_lru(a.astype(x.dtype), binp.astype(x.dtype))
+        y = y.astype(jnp.float32)
+    else:
+        y, h_last = lru_ref.rg_lru_scan(a, binp, h0)
+    out = layers.dot(jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+                     * y.astype(x.dtype), p["w_out"]).astype(x.dtype)
+    new_state = {"h": h_last, "conv_tail": new_tail}
+    return out, new_state
+
+
+# --- RWKV-6 ---------------------------------------------------------------------
+
+
+def init_rwkv6(cfg: ArchConfig, key, dtype):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    ks = jax.random.split(key, 10)
+    s = d ** -0.5
+    lora = max(32, d // 64)
+    return {
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5 + 0.25).astype(jnp.float32),
+        "w_r": (jax.random.normal(ks[1], (d, d)) * s).astype(dtype),
+        "w_k": (jax.random.normal(ks[2], (d, d)) * s).astype(dtype),
+        "w_v": (jax.random.normal(ks[3], (d, d)) * s).astype(dtype),
+        "w_g": (jax.random.normal(ks[4], (d, d)) * s).astype(dtype),
+        "w_o": (jax.random.normal(ks[5], (d, d)) * s).astype(dtype),
+        "decay_base": jnp.full((d,), -2.0, jnp.float32),
+        "decay_A": (jax.random.normal(ks[6], (d, lora)) * s).astype(dtype),
+        "decay_B": (jax.random.normal(ks[7], (lora, d)) * lora ** -0.5).astype(dtype),
+        "bonus_u": (jax.random.normal(ks[8], (H, hd)) * 0.1).astype(jnp.float32),
+        "ln_scale": jnp.ones((H, hd), jnp.float32),
+        "ln_bias": jnp.zeros((H, hd), jnp.float32),
+    }
+
+
+def init_rwkv6_state(cfg: ArchConfig, batch: int, dtype):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    return {
+        "last": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+    }
+
+
+def _token_shift(x, last):
+    """shifted[t] = x[t-1]; shifted[0] = last (previous chunk's final token)."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _group_norm(p, y):
+    """y: (B, H, T, hd) per-head layernorm."""
+    mu = y.mean(-1, keepdims=True)
+    var = ((y - mu) ** 2).mean(-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + 1e-5)
+    return yn * p["ln_scale"][None, :, None, :] + p["ln_bias"][None, :, None, :]
+
+
+def rwkv6_block(cfg: ArchConfig, p, x, *, state=None):
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    last = state["last"] if state is not None else jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(x, last)
+
+    def mix(i):
+        return (x + (xs - x) * p["mu"][i][None, None, :]).astype(x.dtype)
+
+    r = layers.dot(mix(0), p["w_r"]).astype(x.dtype)
+    k = layers.dot(mix(1), p["w_k"]).astype(x.dtype)
+    v = layers.dot(mix(2), p["w_v"]).astype(x.dtype)
+    g = layers.dot(mix(3), p["w_g"])
+    dec = layers.dot(jnp.tanh(layers.dot(mix(4), p["decay_A"])).astype(x.dtype),
+                     p["decay_B"])
+    log_w = -jnp.exp(p["decay_base"][None, None, :] + dec)   # (B,S,d) <= 0
+
+    split = lambda t: t.reshape(b, s, H, hd).transpose(0, 2, 1, 3)
+    rh, kh, vh, lwh = split(r), split(k), split(v), split(log_w.astype(x.dtype))
+
+    s0 = state["wkv"] if state is not None else None
+    if cfg.use_pallas and s > 1 and s0 is None:
+        y, s_last = wkv6(rh, kh, vh, lwh, p["bonus_u"].astype(x.dtype))
+        y = y.astype(jnp.float32)
+    else:
+        y, s_last = wkv_ref.wkv6_scan(rh, kh, vh,
+                                      jnp.exp(lwh.astype(jnp.float32)),
+                                      p["bonus_u"], s0)
+    y = _group_norm(p, y.astype(jnp.float32))
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, d)
+    out = layers.dot((jax.nn.silu(g) * y).astype(x.dtype), p["w_o"]).astype(x.dtype)
+    new_state = {"last": x[:, -1, :], "wkv": s_last}
+    return out, new_state
+
+
+# --- RWKV channel mix ------------------------------------------------------------
+
+
+def init_rwkv_cmix(cfg: ArchConfig, key, dtype):
+    d, dff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": (jax.random.uniform(ks[2], (2, d)) * 0.5 + 0.25).astype(jnp.float32),
+        "w_k": (jax.random.normal(ks[0], (d, dff)) * d ** -0.5).astype(dtype),
+        "w_v": (jax.random.normal(ks[1], (dff, d)) * dff ** -0.5).astype(dtype),
+        "w_r": (jax.random.normal(ks[2], (d, d)) * d ** -0.5).astype(dtype),
+    }
+
+
+def rwkv_cmix(cfg: ArchConfig, p, x, *, state=None):
+    b, s, d = x.shape
+    last = state if state is not None else jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(x, last)
+    mix = lambda i: (x + (xs - x) * p["mu"][i][None, None, :]).astype(x.dtype)
+    k = jnp.square(jax.nn.relu(layers.dot(mix(0), p["w_k"]))).astype(x.dtype)
+    r = jax.nn.sigmoid(layers.dot(mix(1), p["w_r"]))
+    out = (r * layers.dot(k, p["w_v"])).astype(x.dtype)
+    return out, x[:, -1, :]

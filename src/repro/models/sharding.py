@@ -1,0 +1,52 @@
+"""Activation-sharding constraint hooks.
+
+The model code is mesh-agnostic; the launcher installs a rule table mapping
+logical names -> PartitionSpec, and `shard(x, name)` applies
+with_sharding_constraint only when rules are installed (no-op on CPU tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_STATE = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, rules: dict):
+    """rules: logical name -> jax.sharding.PartitionSpec."""
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def shard(x, name: str):
+    ctx = getattr(_STATE, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = rules.get(name)
+    if spec is None:
+        return x
+    # drop spec axes that don't divide the array (replicate those dims)
+    fixed = []
+    for dim, ax in enumerate(spec):
+        if ax is None or dim >= x.ndim:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        if any(a not in mesh.shape for a in axes):
+            fixed.append(None)  # axis absent from this mesh: replicate
+            continue
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        fixed.append(ax if x.shape[dim] % size == 0 else None)
+    spec = jax.sharding.PartitionSpec(*fixed[:x.ndim])
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))

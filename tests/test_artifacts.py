@@ -1,0 +1,62 @@
+"""Artifact integrity: the committed dry-run/roofline records stay coherent.
+
+Skipped when results/ has not been generated (fresh checkout) — regenerate
+with `python -m repro.launch.dryrun --all --mesh both`.
+"""
+import glob
+import json
+import os
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRYRUN = os.path.join(ROOT, "results", "dryrun")
+
+
+pytestmark = pytest.mark.skipif(
+    not os.path.isdir(DRYRUN), reason="dry-run artifacts not generated")
+
+
+def _cells():
+    out = []
+    for p in glob.glob(os.path.join(DRYRUN, "*.json")):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def test_all_runnable_cells_present_and_ok():
+    from repro import configs
+
+    cells = _cells()
+    seen = {(c["arch"], c["shape"], c["mesh"]) for c in cells}
+    errors = [c for c in cells if "error" in c]
+    assert not errors, [(c["arch"], c["shape"], c["mesh"]) for c in errors]
+    expected = 0
+    for a, s in configs.cells():
+        ok, _ = configs.runnable(a, s)
+        if not ok:
+            continue
+        expected += 2
+        for mesh in ("pod", "multipod"):
+            assert (a, s, mesh) in seen, (a, s, mesh)
+    assert len(seen) == expected == 66
+
+
+def test_mesh_sizes_and_metrics_sane():
+    for c in _cells():
+        assert c["devices"] == (512 if c["mesh"] == "multipod" else 256)
+        assert c["flops"] > 0
+        assert c["collectives"]["total_bytes"] > 0  # distributed: must talk
+        cal = c["calibrated"]
+        assert cal["flops"] >= c["flops"] * 0.99  # extrapolation >= one-shot
+
+
+def test_roofline_rows_cover_cells():
+    from benchmarks.roofline import derive, load_cells
+
+    rows = [d for c in load_cells(DRYRUN) if (d := derive(c))]
+    assert len(rows) == 66
+    for r in rows:
+        assert r["dominant"] in ("compute", "memory", "collective")
+        assert r["bound_s"] > 0

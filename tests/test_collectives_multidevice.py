@@ -1,0 +1,25 @@
+"""Multi-device collective validation.
+
+The checks live in tests/_multidevice_worker.py and run in a subprocess so
+the XLA host-platform device count (8) never leaks into this pytest process
+(smoke tests and benches must see 1 device; see the dry-run rules).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("n", [4, 8])
+def test_collectives_vs_lax_oracles(n):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "_multidevice_worker.py"), str(n)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL-OK" in proc.stdout, proc.stdout

@@ -1,0 +1,23 @@
+"""Distributed-training features on an 8-device host mesh (subprocess).
+
+Covers BRIDGE vs GSPMD gradient sync, compressed sync, 2-D (data x model)
+MoE training, GPipe pipeline parallelism, and elastic checkpoint restart onto
+a different mesh shape.  Details in tests/_distributed_worker.py.
+"""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_distributed_features():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "_distributed_worker.py"),
+         "8"],
+        capture_output=True, text=True, env=env, timeout=1200,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}"
+    assert "ALL-OK" in proc.stdout, proc.stdout

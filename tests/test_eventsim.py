@@ -1,0 +1,75 @@
+"""Event-driven simulator vs the analytic cost model (fluid-limit check)."""
+import pytest
+
+from repro.core import (CostModel, PAPER_DEFAULT, baselines, collective_time,
+                        periodic_a2a, static_schedule)
+from repro.core.eventsim import (collective_time_event, ring_allreduce_event,
+                                 simulate_step)
+
+MB, US = 1024.0 ** 2, 1e-6
+
+
+def test_single_hop_exact():
+    """h=1: no congestion, event time == alpha_h + m*beta exactly."""
+    cm = CostModel(alpha_s=0, alpha_h=1e-6, bandwidth=1e9, delta=0)
+    r = simulate_step(16, 1, 1, nbytes=1e6, cm=cm, chunks_per_msg=4)
+    assert r.completion == pytest.approx(1e-6 + 1e6 / 1e9, rel=1e-9)
+
+
+@pytest.mark.parametrize("n,g,off", [(16, 1, 4), (32, 2, 8), (64, 1, 16)])
+def test_event_converges_to_cost_model(n, g, off):
+    """With fine chunking, the event time approaches h*alpha_h + c*m*beta
+    (c = h): the Section 2 model is the fluid limit of the event sim."""
+    cm = CostModel(alpha_s=0, alpha_h=1e-6, bandwidth=100e9, delta=0)
+    m = 4 * MB
+    h = off // g
+    analytic = h * cm.alpha_h + h * m * cm.beta
+    coarse = simulate_step(n, g, off, m, cm, chunks_per_msg=1).completion
+    fine = simulate_step(n, g, off, m, cm, chunks_per_msg=64).completion
+    assert fine <= coarse  # pipelining can only help
+    assert fine == pytest.approx(analytic, rel=0.10)
+    # 1-chunk store-and-forward upper bracket: <= h * (alpha_h + c*m*beta)
+    assert coarse <= h * (cm.alpha_h + h * m * cm.beta) * (1 + 1e-9)
+
+
+@pytest.mark.parametrize("R", [0, 1, 2])
+def test_collective_event_vs_analytic(R):
+    n, m = 32, 2 * MB
+    cm = PAPER_DEFAULT
+    sched = periodic_a2a(n, R)
+    t_event = collective_time_event(sched, m, cm, chunks_per_msg=32)
+    t_analytic = collective_time(sched, m, cm).total
+    assert t_event == pytest.approx(t_analytic, rel=0.15)
+
+
+def test_bridge_speedup_holds_at_event_level():
+    """The headline Fig-5 style speedup must survive event-level simulation."""
+    n, m = 64, 16 * MB
+    cm = PAPER_DEFAULT.replace(delta=10 * US)
+    from repro.core import plan
+    sched_b = plan("a2a", n, m, cm, paper_faithful=True).schedule
+    t_b = collective_time_event(sched_b, m, cm, chunks_per_msg=16)
+    t_s = collective_time_event(static_schedule("a2a", n), m, cm,
+                                chunks_per_msg=16)
+    analytic_ratio = (collective_time(static_schedule("a2a", n), m, cm).total
+                      / collective_time(sched_b, m, cm).total)
+    event_ratio = t_s / t_b
+    assert event_ratio == pytest.approx(analytic_ratio, rel=0.15)
+    assert event_ratio > 3.0  # the claim band survives
+
+
+def test_ring_allreduce_event_matches_baseline():
+    n, m = 16, 1 * MB
+    cm = PAPER_DEFAULT
+    t_event = ring_allreduce_event(n, m, cm)
+    t_analytic = baselines.ring("ar", n, m, cm).total
+    assert t_event == pytest.approx(t_analytic, rel=0.05)
+
+
+def test_bridge_more_straggler_robust_than_static():
+    """Beyond-paper: a degraded transceiver amplifies static Bruck more than
+    BRIDGE (exposure scales with per-step hop multiplicity c_k = h_k)."""
+    from benchmarks.straggler import straggler_amplification
+    out = straggler_amplification(n=16, m=2 * MB, kappas=(1.0, 4.0), chunks=8)
+    assert out["bridge"][4.0] < out["static"][4.0]
+    assert out["speedup"][4.0] >= out["speedup"][1.0]

@@ -1,0 +1,145 @@
+"""Fault tolerance & substrate: checkpoint/restart, elastic restore, data
+determinism, optimizer, and the synthetic-LM learnability sanity check."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (garbage_collect, latest_step, restore,
+                              restore_into, save)
+from repro.data import SyntheticLM
+from repro.optim import adamw_init, adamw_update, cosine_warmup_schedule
+
+
+# --- checkpoint store -----------------------------------------------------------
+
+
+def _tree():
+    return {
+        "params": {"w": jnp.arange(12.0).reshape(3, 4),
+                   "b": jnp.ones((4,), jnp.float32)},
+        "nested": [jnp.zeros((2, 2)), {"x": jnp.full((5,), 7.0)}],
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path / "ckpt")
+    tree = _tree()
+    save(d, 10, tree)
+    assert latest_step(d) == 10
+    back = restore_into(d, jax.tree.map(lambda x: x, tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity_and_gc(tmp_path):
+    d = str(tmp_path / "ckpt")
+    for s in (1, 2, 3, 4):
+        save(d, s, _tree())
+    assert latest_step(d) == 4
+    removed = garbage_collect(d, keep=2)
+    assert len(removed) == 2
+    assert latest_step(d) == 4
+    restore(d, 3)  # kept
+    with pytest.raises(FileNotFoundError):
+        restore(d, 1)  # collected
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save(d, 1, {"w": jnp.zeros((3, 4))})
+    with pytest.raises(ValueError):
+        restore_into(d, {"w": jnp.zeros((4, 4))})
+
+
+def test_elastic_restore_onto_different_mesh(tmp_path):
+    """Save from a (1,)-mesh job, restore sharded for a (2, 2) mesh."""
+    if jax.device_count() < 1:
+        pytest.skip("no devices")
+    d = str(tmp_path / "ckpt")
+    tree = {"w": jnp.arange(64.0).reshape(8, 8)}
+    save(d, 5, tree)
+
+    # Pretend the new job has a different mesh: single-device CPU can still
+    # express the sharding metadata path via NamedSharding on a (1, 1) mesh.
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    sh = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("data", "model"))
+    back = restore_into(d, tree, sharding_fn=lambda k, a: sh)
+    assert back["w"].sharding == sh
+    np.testing.assert_array_equal(np.asarray(back["w"]), np.asarray(tree["w"]))
+
+
+# --- data pipeline ----------------------------------------------------------------
+
+
+def test_data_deterministic_and_shard_disjoint():
+    d = SyntheticLM(vocab_size=97, seq_len=16, seed=3)
+    b1 = d.batch(step=5, shard=2, batch_size=4)
+    b2 = d.batch(step=5, shard=2, batch_size=4)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])  # resumable
+    b3 = d.batch(step=5, shard=3, batch_size=4)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])      # shards differ
+    b4 = d.batch(step=6, shard=2, batch_size=4)
+    assert not np.array_equal(b1["tokens"], b4["tokens"])      # steps differ
+    # labels are next-token targets
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_data_learnable_structure():
+    """Most transitions follow the affine rule (a model can learn it)."""
+    d = SyntheticLM(vocab_size=101, seq_len=64, noise=0.05)
+    b = d.batch(0, 0, 32)
+    pred = (b["tokens"] * d.mult + d.add) % 101
+    agree = (pred == b["labels"]).mean()
+    assert agree > 0.85
+
+
+# --- optimizer ---------------------------------------------------------------------
+
+
+def test_adamw_reduces_quadratic():
+    w = {"w": jnp.array([3.0, -2.0, 1.0])}
+    st = adamw_init(w)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(w)
+        w, st, m = adamw_update(g, st, w, lr=0.05, weight_decay=0.0)
+    assert float(loss(w)) < 1e-3
+    assert int(st.step) == 200
+
+
+def test_adamw_grad_clipping_and_schedule():
+    sched = cosine_warmup_schedule(1e-3, warmup_steps=10, total_steps=100)
+    assert float(sched(jnp.asarray(0))) < float(sched(jnp.asarray(9)))
+    assert float(sched(jnp.asarray(99))) < float(sched(jnp.asarray(20)))
+    w = {"w": jnp.ones((4,))}
+    st = adamw_init(w)
+    huge = {"w": jnp.full((4,), 1e9)}
+    _, _, metrics = adamw_update(huge, st, w, lr=1e-3, max_grad_norm=1.0)
+    assert float(metrics["grad_norm"]) == pytest.approx(2e9, rel=1e-3)
+
+
+# --- end-to-end restart equivalence ---------------------------------------------------
+
+
+def test_train_restart_bitwise_resume(tmp_path):
+    """Train 6 steps; vs train 3, 'crash', resume 3: same final loss."""
+    from repro.launch.train import TrainConfig, train
+
+    def run(steps, ckdir, every=3):
+        tc = TrainConfig(arch="stablelm-3b", steps=steps, batch_size=4,
+                         seq_len=32, checkpoint_dir=ckdir,
+                         checkpoint_every=every)
+        _, _, losses = train(tc, progress=lambda *_: None)
+        return losses
+
+    full = run(6, str(tmp_path / "a"))
+    part1 = run(3, str(tmp_path / "b"))
+    part2 = run(6, str(tmp_path / "b"))  # resumes from step 3
+    np.testing.assert_allclose(part2[-1], full[-1], rtol=1e-4)
+    np.testing.assert_allclose(part1[-1], full[2], rtol=1e-4)

@@ -1,0 +1,200 @@
+"""Per-kernel validation: shape/dtype sweeps vs pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention, rg_lru, wkv6
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.rg_lru import ref as lru_ref
+from repro.kernels.wkv6 import ref as wkv_ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=5e-5, rtol=5e-5)
+
+
+# --- flash attention ----------------------------------------------------------
+
+FLASH_CASES = [
+    # b, hq, hkv, sq, sk, d, causal, window, block_q, block_k
+    (2, 4, 2, 128, 128, 64, True, None, 64, 64),     # GQA causal
+    (1, 2, 1, 100, 100, 32, True, None, 64, 64),     # ragged seq (padding)
+    (1, 4, 4, 96, 96, 16, True, 32, 32, 32),         # sliding window
+    (1, 4, 2, 160, 160, 32, True, 64, 64, 64),       # GQA + window
+    (1, 2, 2, 64, 64, 16, False, None, 32, 32),      # bidirectional (encoder)
+    (1, 8, 2, 8, 200, 32, True, None, 64, 64),       # chunked decode sq << sk
+    (1, 1, 1, 64, 64, 128, True, None, 64, 64),      # MXU-aligned head dim
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    b, hq, hkv, sq, sk, d, causal, window, bq, bk = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, sk, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, sk, d), dtype)
+    got = flash_attention(q, k, v, causal, window, None, bq, bk)
+    want = fa_ref.attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("case", [
+    # b, hq, hkv, sq, d, causal, window, block
+    (1, 2, 1, 64, 32, True, None, 32),    # GQA group-sum of dK/dV
+    (2, 4, 2, 96, 32, True, None, 32),
+    (1, 4, 4, 80, 16, True, 32, 32),      # sliding window + ragged seq
+    (1, 2, 2, 48, 16, False, None, 16),   # bidirectional
+])
+def test_flash_attention_grad_matches_ref(case):
+    """Pallas backward kernels (kernel_bwd.py) vs jax.grad of the oracle."""
+    b, hq, hkv, sq, d, causal, window, blk = case
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (b, hq, sq, d))
+    k = jax.random.normal(ks[1], (b, hkv, sq, d))
+    v = jax.random.normal(ks[2], (b, hkv, sq, d))
+    g = jax.random.normal(ks[3], (b, hq, sq, d))
+    f_kernel = lambda q, k, v: (flash_attention(q, k, v, causal, window,
+                                                None, blk, blk) * g).sum()
+    f_ref = lambda q, k, v: (fa_ref.attention(q, k, v, causal=causal,
+                                              window=window) * g).sum()
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_flash_attention_lse_output():
+    from repro.kernels.flash_attention.kernel import flash_attention_fwd_lse
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 64, 16))
+    k = jax.random.normal(ks[1], (1, 2, 64, 16))
+    v = jax.random.normal(ks[2], (1, 2, 64, 16))
+    _, lse = flash_attention_fwd_lse(q, k, v, scale=0.25, causal=True,
+                                     window=None, block_q=32, block_k=32)
+    # manual lse
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * 0.25
+    mask = fa_ref.attention_mask(64, 64, True, None)
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    want = jax.nn.logsumexp(s, axis=-1)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+# --- rg_lru ---------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape,blocks", [
+    ((2, 100, 48), (32, 32)),
+    ((1, 256, 128), (64, 128)),
+    ((3, 17, 8), (16, 8)),          # tiny ragged
+    ((1, 1, 16), (8, 16)),          # single step
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rg_lru_matches_ref(shape, blocks, dtype):
+    B, T, D = shape
+    bt, bd = blocks
+    ks = jax.random.split(KEY, 2)
+    a = jax.random.uniform(ks[0], shape, jnp.float32, 0.2, 0.99).astype(dtype)
+    b = jax.random.normal(ks[1], shape, dtype)
+    y, h = rg_lru(a, b)
+    yr, hr = lru_ref.rg_lru_scan(a, b)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **tol(dtype))
+    np.testing.assert_allclose(np.asarray(h, np.float32),
+                               np.asarray(hr, np.float32), **tol(dtype))
+
+
+def test_rg_lru_grad():
+    ks = jax.random.split(KEY, 2)
+    a = jax.random.uniform(ks[0], (1, 20, 8), jnp.float32, 0.3, 0.95)
+    b = jax.random.normal(ks[1], (1, 20, 8))
+    g1 = jax.grad(lambda a, b: rg_lru(a, b)[0].sum(), argnums=(0, 1))(a, b)
+    g2 = jax.grad(lambda a, b: lru_ref.rg_lru_scan(a, b)[0].sum(), argnums=(0, 1))(a, b)
+    for x, y in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5, rtol=1e-5)
+
+
+# --- wkv6 -------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dims", [
+    # B, H, T, dk, dv, block_t
+    (2, 3, 50, 16, 16, 16),
+    (1, 2, 64, 32, 32, 32),
+    (1, 1, 7, 8, 8, 8),
+    (2, 2, 33, 64, 64, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_matches_ref(dims, dtype):
+    B, H, T, dk, dv, bt = dims
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, H, T, dk), dtype)
+    k = jax.random.normal(ks[1], (B, H, T, dk), dtype)
+    v = jax.random.normal(ks[2], (B, H, T, dv), dtype)
+    lw = (-jnp.exp(jax.random.normal(ks[3], (B, H, T, dk)))).astype(dtype)
+    u = jax.random.normal(ks[4], (H, dk), dtype)
+    y, s = wkv6(r, k, v, lw, u)
+    yr, sr = wkv_ref.wkv6_scan(r, k, v, jnp.exp(lw.astype(jnp.float32)), u)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               **(tol(dtype) if dtype == jnp.bfloat16
+                                  else dict(atol=5e-4, rtol=5e-4)))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), atol=5e-4, rtol=5e-4)
+
+
+def test_wkv6_extreme_decay_stable():
+    """Chunked form must not overflow for very strong decay (log w << 0)."""
+    B, H, T, dk, dv = 1, 1, 64, 16, 16
+    ks = jax.random.split(KEY, 3)
+    r = jax.random.normal(ks[0], (B, H, T, dk))
+    k = jax.random.normal(ks[1], (B, H, T, dk))
+    v = jax.random.normal(ks[2], (B, H, T, dv))
+    lw = jnp.full((B, H, T, dk), -20.0)  # near-total forgetting each step
+    u = jnp.ones((H, dk))
+    y, s = wkv6(r, k, v, lw, u, 16)
+    assert np.isfinite(np.asarray(y)).all()
+    yr, _ = wkv_ref.wkv6_scan(r, k, v, jnp.exp(lw), u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4, rtol=1e-4)
+
+
+# --- hypothesis sweeps -------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @given(
+        b=st.integers(1, 2), h=st.integers(1, 3),
+        sq=st.integers(1, 80), d=st.sampled_from([8, 16, 32]),
+        causal=st.booleans(),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_flash_attention_property(b, h, sq, d, causal):
+        ks = jax.random.split(jax.random.PRNGKey(sq * d + b), 3)
+        q = jax.random.normal(ks[0], (b, h, sq, d))
+        k = jax.random.normal(ks[1], (b, h, sq, d))
+        v = jax.random.normal(ks[2], (b, h, sq, d))
+        got = flash_attention(q, k, v, causal, None, None, 32, 32)
+        want = fa_ref.attention(q, k, v, causal=causal, window=None)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=5e-5, rtol=5e-5)
+
+    @given(T=st.integers(1, 70), D=st.sampled_from([8, 24]),
+           bt=st.sampled_from([8, 16, 32]))
+    @settings(max_examples=15, deadline=None)
+    def test_rg_lru_property(T, D, bt):
+        ks = jax.random.split(jax.random.PRNGKey(T * D), 2)
+        a = jax.random.uniform(ks[0], (1, T, D), jnp.float32, 0.1, 1.0)
+        b = jax.random.normal(ks[1], (1, T, D))
+        y, h = rg_lru(a, b)
+        yr, hr = lru_ref.rg_lru_scan(a, b)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-5, rtol=1e-5)
+
+except ImportError:  # pragma: no cover
+    pass

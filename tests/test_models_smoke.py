@@ -1,0 +1,161 @@
+"""Per-architecture smoke tests on reduced same-family configs (CPU).
+
+For every assigned arch:
+  1. one forward + train-step gradient: output shapes, finite loss, no NaNs;
+  2. prefill + decode_step consistency: decoding token t with the cache must
+     reproduce the full-forward logits at position t (cache correctness).
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import (decode_step, forward, init_caches, init_params,
+                          loss_fn, prefill)
+
+KEY = jax.random.PRNGKey(7)
+
+
+def make_batch(cfg, batch=2, seq=16, key=KEY):
+    ks = jax.random.split(key, 3)
+    b = {"tokens": jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab_size)}
+    b["labels"] = jax.random.randint(ks[1], (batch, seq), 0, cfg.vocab_size)
+    if cfg.frontend == "patch_stub":
+        b["patches"] = jax.random.normal(ks[2], (batch, cfg.frontend_seq,
+                                                 cfg.d_model), jnp.float32)
+    if cfg.enc_dec:
+        b["frames"] = jax.random.normal(ks[2], (batch, cfg.encoder_seq,
+                                                cfg.d_model), jnp.float32)
+    return b
+
+
+@pytest.fixture(scope="module", params=configs.ARCHS)
+def arch(request):
+    return request.param
+
+
+def reduced(arch_name):
+    return configs.get(arch_name).scaled_down()
+
+
+def test_config_registry_complete():
+    assert len(configs.ARCHS) == 10
+    for a in configs.ARCHS:
+        cfg = configs.get(a)
+        assert cfg.name == a
+        assert cfg.param_count() > 0
+
+
+@pytest.mark.parametrize("arch_name", configs.ARCHS)
+def test_forward_and_train_step(arch_name):
+    cfg = reduced(arch_name)
+    params = init_params(cfg, KEY)
+    batch = make_batch(cfg)
+
+    out = forward(cfg, params, batch, mode="train")
+    want_seq = batch["tokens"].shape[1] + (cfg.frontend_seq if
+                                           cfg.frontend == "patch_stub" else 0)
+    assert out.logits.shape == (2, want_seq, cfg.vocab_size)
+    assert np.isfinite(np.asarray(out.logits, np.float32)).all()
+
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+    assert np.isfinite(float(loss)), arch_name
+    flat = jax.tree.leaves(grads)
+    assert flat and all(np.isfinite(np.asarray(g, np.float32)).all() for g in flat)
+
+
+@pytest.mark.parametrize("arch_name", configs.ARCHS)
+def test_prefill_decode_matches_forward(arch_name):
+    cfg = reduced(arch_name)
+    # f32 + no remat for tight numerics
+    cfg = dataclasses.replace(cfg, dtype="float32", remat=False)
+    if cfg.moe is not None:
+        # capacity dropping is deliberately non-causal (GShard semantics:
+        # tokens compete for expert capacity within a group) — make routing
+        # dropless so prefill/decode must match the full forward exactly.
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=cfg.moe.num_experts / cfg.moe.top_k))
+    params = init_params(cfg, KEY)
+    batch, seq = 2, 12
+    full = make_batch(cfg, batch, seq)
+    if cfg.frontend == "patch_stub":
+        pytest.skip("vlm prefill==forward covered via backbone archs; "
+                    "patch prefix offsets positions")
+
+    ref_logits = forward(cfg, params, full, mode="train").logits  # (B, S, V)
+
+    prompt = {k: (v[:, :seq - 2] if k in ("tokens", "labels") else v)
+              for k, v in full.items()}
+    logits_p, caches = prefill(cfg, params, prompt, max_seq=seq + 4)
+    np.testing.assert_allclose(np.asarray(logits_p),
+                               np.asarray(ref_logits[:, seq - 3, :]),
+                               atol=2e-3, rtol=2e-3)
+
+    for t in range(seq - 2, seq):
+        logits_d, caches = decode_step(cfg, params, full["tokens"][:, t:t + 1],
+                                       caches)
+        np.testing.assert_allclose(np.asarray(logits_d),
+                                   np.asarray(ref_logits[:, t, :]),
+                                   atol=2e-3, rtol=2e-3,
+                                   err_msg=f"{arch_name} decode step {t}")
+
+
+def test_sliding_window_ring_buffer_decode():
+    """Decode beyond the window: ring buffer must match full forward."""
+    cfg = dataclasses.replace(reduced("gemma3-4b"), dtype="float32",
+                              remat=False, window=8)
+    params = init_params(cfg, KEY)
+    seq = 24  # 3x window
+    full = make_batch(cfg, 1, seq)
+    ref_logits = forward(cfg, params, full, mode="train").logits
+    prompt = {"tokens": full["tokens"][:, :seq - 4]}
+    _, caches = prefill(cfg, params, prompt, max_seq=seq + 4)
+    for t in range(seq - 4, seq):
+        logits_d, caches = decode_step(cfg, params, full["tokens"][:, t:t + 1],
+                                       caches)
+        np.testing.assert_allclose(np.asarray(logits_d),
+                                   np.asarray(ref_logits[:, t, :]),
+                                   atol=2e-3, rtol=2e-3, err_msg=f"t={t}")
+
+
+def test_moe_routes_to_multiple_experts():
+    cfg = reduced("qwen3-moe-235b-a22b")
+    params = init_params(cfg, KEY)
+    batch = make_batch(cfg, 2, 32)
+    out = forward(cfg, params, batch, mode="train")
+    assert float(out.aux_loss) > 0.0  # router engaged
+
+
+def test_pallas_kernel_path_matches_ref_path():
+    """use_pallas=True (interpret) must agree with the pure-jnp model."""
+    for arch_name in ("gemma3-4b", "rwkv6-3b", "recurrentgemma-9b"):
+        cfg = dataclasses.replace(reduced(arch_name), dtype="float32",
+                                  remat=False)
+        params = init_params(cfg, KEY)
+        batch = make_batch(cfg, 1, 16)
+        ref_out = forward(cfg, params, batch).logits
+        cfg_k = dataclasses.replace(cfg, use_pallas=True)
+        k_out = forward(cfg_k, params, batch).logits
+        np.testing.assert_allclose(np.asarray(k_out), np.asarray(ref_out),
+                                   atol=5e-4, rtol=5e-4, err_msg=arch_name)
+
+
+def test_param_counts_near_nameplate():
+    """Full configs should land near their nameplate parameter counts."""
+    expect = {
+        "command-r-plus-104b": (104e9, 0.25),
+        "arctic-480b": (480e9, 0.25),
+        "qwen3-moe-235b-a22b": (235e9, 0.30),
+        "rwkv6-3b": (3e9, 0.5),
+        "minicpm3-4b": (4e9, 0.6),
+        "gemma3-4b": (4e9, 0.6),
+        "recurrentgemma-9b": (9e9, 0.5),
+    }
+    for name, (target, tol) in expect.items():
+        n = configs.get(name).param_count()
+        assert abs(n - target) / target < tol, (name, n, target)

@@ -1,0 +1,169 @@
+"""Validate the paper's headline evaluation claims against our reproduction.
+
+Every assertion cites the paper section it checks.  Bands are deliberately a
+little loose (we reproduce the cost model analytically, not packet-level
+ns-3), but tight enough that a broken scheduler/simulator fails loudly.
+"""
+import pytest
+
+from benchmarks import figures
+from repro.core import PAPER_DEFAULT, baselines, num_steps, plan
+
+KB, MB = 1024.0, 1024.0 ** 2
+US, MS = 1e-6, 1e-3
+
+
+@pytest.fixture(scope="module")
+def fig5():
+    return figures.fig5()
+
+
+@pytest.fixture(scope="module")
+def fig8():
+    return figures.fig8()
+
+
+@pytest.fixture(scope="module")
+def fig9():
+    return figures.fig9()
+
+
+@pytest.fixture(scope="module")
+def fig12():
+    return figures.fig12()
+
+
+def test_a2a_up_to_10x_over_static(fig5):
+    """Abstract/4.2: 'reduces All-to-All completion time by typically 3x to
+    10x over static baselines' — peak 10.4x in Fig 5a."""
+    peak = max(fig5["vs_sbruck"].values())
+    assert 9.0 <= peak <= 12.0, peak
+
+
+def test_a2a_gain_survives_millisecond_delays(fig5):
+    """4.2: 'even by up to 5x when reconfiguration delays are in the
+    milliseconds' and '1.4x even for a reconfiguration delay of 5 ms'."""
+    ms_keys = {k: v for k, v in fig5["vs_sbruck"].items()
+               if "d1000us" in k or "d5000us" in k}
+    assert max(ms_keys.values()) >= 4.0
+    d5 = {k: v for k, v in fig5["vs_sbruck"].items() if "d5000us" in k}
+    assert max(d5.values()) >= 1.4
+
+
+def test_a2a_beats_both_baselines_in_sparse_regime(fig5):
+    """4.2/Fig 5b: up to ~2.1-2.6x over min(S-BRUCK, G-BRUCK)."""
+    peak = max(fig5["vs_best"].values())
+    assert 1.9 <= peak <= 3.0, peak
+
+
+def test_a2a_never_slower_than_static(fig5):
+    """BRIDGE with optimal R>=0 can always fall back to R=0 = S-BRUCK."""
+    assert min(fig5["vs_sbruck"].values()) >= 1.0 - 1e-9
+
+
+def test_fig8_shapes(fig8):
+    """4.2/Fig 8: 1.4-3x at small m, rising to ~10x at large m; G-BRUCK
+    matches BRIDGE above ~16 MB; inset peak ~2.1x over the best baseline."""
+    small = fig8["bridge_vs_s"]["1KB"]
+    assert 1.0 <= small <= 3.5
+    big = fig8["bridge_vs_s"]["262144KB"]
+    assert big >= 9.0
+    # G-Bruck converges to Bridge for large messages
+    ratio = fig8["bridge_vs_s"]["262144KB"] / fig8["gbruck_vs_s"]["262144KB"]
+    assert abs(ratio - 1.0) < 0.05
+    assert 1.8 <= max(fig8["bridge_vs_best"].values()) <= 2.6
+
+
+def test_rs_up_to_6x_over_ring(fig9, fig12):
+    """Abstract: 'exceeds the bandwidth-optimal RING algorithm by 1.5x to
+    6.6x on low to moderate-sized workloads' (up to 8.5x in Fig 9a)."""
+    peak = max(fig9["vs_ring"].values())
+    assert 5.0 <= peak <= 10.0, peak
+    # Fig 12 (delta=10us): up to ~5.0x over RING, up to ~1.3x over best
+    assert 4.0 <= max(fig12["bridge"].values()) <= 6.0
+    assert 1.2 <= max(fig12["bridge_vs_best"].values()) <= 1.6
+
+
+def test_rs_uniformly_beats_rhd(fig9):
+    """Abstract/4.3: 'uniformly outperforms existing reconfiguration
+    strategies' with up to 1.5x over R-HD."""
+    assert min(fig9["vs_rhd"].values()) >= 1.0 - 1e-9
+    assert 1.3 <= max(fig9["vs_rhd"].values()) <= 1.7
+
+
+def test_ring_wins_for_large_messages():
+    """4.3: 'for delta = 0.15 ms RING begins to outperform BRIDGE' at large
+    m — the bandwidth-bound regime."""
+    n, m = 64, 256 * MB
+    cm = PAPER_DEFAULT.replace(delta=0.15 * MS)
+    t_ring = baselines.ring("rs", n, m, cm).total
+    t_b = baselines.bridge("rs", n, m, cm).total
+    assert t_ring < t_b * 1.05  # ring at least matches bridge here
+
+
+def test_fig1_bruck_subrings_beat_hd():
+    """Fig 1: with reuse, Bruck's cumulative AllReduce cost drops below HD
+    for the same R; HD curves coincide until reconfigurations start."""
+    out = figures.fig1()
+    for R in (1, 2):
+        assert out[f"final_bruck_R{R}"] < out[f"final_hd_R{R}"]
+    # identical prefixes for HD (reconfigs are a suffix)
+    hd0, hd1 = out["hd_R0"], out["hd_R1"]
+    assert hd0[:6] == pytest.approx(hd1[:6])
+
+
+def test_scheduler_runtime_milliseconds():
+    """3.4: 'optimal schedules were computed within milliseconds for
+    networks of up to 256'."""
+    out = figures.scheduler_runtime()
+    assert out["per_plan_ms"] < 100.0
+
+
+def test_ports_extension_still_beneficial():
+    """3.7: with z < 2n ports reconfiguration helps 'in sufficiently large
+    networks'."""
+    out = figures.ports_extension()
+    assert out["n256_z64"] > 1.5
+    assert out["n256_z128"] > out["n256_z64"] * 0.9  # more ports >= fewer
+
+
+def test_optimal_R_monotone_in_delta():
+    """3.6: as delta grows the optimal number of reconfigurations falls."""
+    n, m = 64, 4 * MB
+    rs = []
+    for d in (0.0, 10 * US, 1 * MS, 100 * MS):
+        p = plan("a2a", n, m, PAPER_DEFAULT.replace(delta=d),
+                 paper_faithful=True)
+        rs.append(p.schedule.R)
+    assert rs == sorted(rs, reverse=True)
+    assert rs[0] == num_steps(n) - 1 and rs[-1] == 0
+
+
+def test_bridge_beats_even_episodic_rhd():
+    """Beyond-paper robustness: BRIDGE vs a *strengthened* R-HD that may pay
+    2*delta to shortcut any single step (not just suffixes).  The subring
+    reuse argument must survive the stronger adversary on RS workloads."""
+    n = 64
+    worst = float("inf")
+    for m in (16 * KB, 1 * MB, 16 * MB):
+        for d in (1 * US, 10 * US, 150 * US):
+            cm = PAPER_DEFAULT.replace(delta=d)
+            t_b = baselines.bridge("rs", n, m, cm).total
+            t_e = baselines.r_hd_episodic_time("rs", n, m, cm)
+            worst = min(worst, t_e / t_b)
+    assert worst >= 0.999, worst  # never loses
+
+
+def test_a2a_n256_at_most_1ms_delay():
+    """EXPERIMENTS note: at delta <= 1 ms, n = 256 keeps ~>=1.4x over static
+    for every message size (the paper's Fig-7 claim, with the delta=5ms +
+    tiny-m corner excluded as impractical per its Section 4.2).  Band floor
+    1.3: at (1 MB, 1 ms) our analytic model gives 1.34x vs the paper's
+    packet-level 1.4x — the only >5% claim gap, noted in EXPERIMENTS S1."""
+    n = 256
+    for m in (1 * MB, 32 * MB):
+        for d in (10 * US, 1 * MS):
+            cm = PAPER_DEFAULT.replace(delta=d)
+            t_b = baselines.bridge("a2a", n, m, cm).total
+            t_s = baselines.s_bruck("a2a", n, m, cm).total
+            assert t_s / t_b >= 1.3, (m, d, t_s / t_b)

@@ -1,0 +1,182 @@
+"""Schedule-synthesis tests: Table 1 exact match, Theorems 3.2/3.3, Lemma 3.1."""
+import math
+
+import pytest
+
+from repro.core import (CostModel, PAPER_DEFAULT, Schedule, baselines,
+                        collective_time, cstar_a2a, full_cost_optimal,
+                        num_steps, periodic, periodic_a2a, plan,
+                        rs_transmission_optimal, ag_transmission_optimal,
+                        static_schedule)
+
+
+# --- Table 1 (n = 64): the paper's published schedules, exact ---------------
+
+TABLE1 = {
+    ("a2a", 1): (0, 0, 0, 1, 0, 0),
+    ("rs", 1):  (0, 0, 1, 0, 0, 0),
+    ("ag", 1):  (0, 0, 0, 0, 1, 0),
+    ("a2a", 2): (0, 0, 1, 0, 1, 0),
+    ("rs", 2):  (0, 1, 0, 1, 0, 0),
+    ("ag", 2):  (0, 0, 0, 1, 0, 1),
+}
+
+
+@pytest.mark.parametrize("kind,R", list(TABLE1))
+def test_table1_schedules(kind, R):
+    n = 64
+    if kind == "a2a":
+        sched = periodic_a2a(n, R)
+    elif kind == "rs":
+        sched = rs_transmission_optimal(n, R)
+    else:
+        sched = ag_transmission_optimal(n, R)
+    assert sched.x == TABLE1[(kind, R)], (kind, R, sched.x)
+
+
+# --- Lemma 3.1 / Theorem 3.2: periodic A2A schedules -------------------------
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 32, 64, 128, 256, 1024])
+def test_a2a_segments_balanced(n):
+    s = num_steps(n)
+    for R in range(s):
+        lens = periodic_a2a(n, R).segment_lengths
+        assert len(lens) == R + 1
+        assert sum(lens) == s
+        assert max(lens) - min(lens) <= 1  # Lemma 3.1
+
+
+@pytest.mark.parametrize("n,R", [(64, 0), (64, 1), (64, 2), (64, 5),
+                                 (256, 1), (256, 3), (4096, 2)])
+def test_cstar_closed_form_matches_simulator(n, R):
+    """Theorem 3.2 closed form == simulated periodic schedule when (R+1) | s."""
+    s = num_steps(n)
+    if s % (R + 1) != 0:
+        pytest.skip("closed form exact only when (R+1) | s")
+    cm = PAPER_DEFAULT
+    m = 4 * 2**20
+    t = collective_time(periodic_a2a(n, R), m, cm, validate=(n <= 256)).total
+    assert t == pytest.approx(cstar_a2a(n, R, cm, m), rel=1e-12)
+
+
+def test_a2a_periodic_beats_all_other_fixed_R_schedules():
+    """Exhaustive check of Theorem 3.2 for n=64: periodic is optimal per R."""
+    n, s = 64, 6
+    cm = PAPER_DEFAULT.replace(delta=0.0)
+    m = 1 * 2**20
+    best_by_R = {}
+    import itertools
+    for bits in itertools.product([0, 1], repeat=s - 1):
+        x = (0,) + bits
+        sched = Schedule(kind="a2a", n=n, x=x)
+        t = collective_time(sched, m, cm).total
+        R = sum(x)
+        if R not in best_by_R or t < best_by_R[R]:
+            best_by_R[R] = t
+    for R in range(s):
+        t_periodic = collective_time(periodic_a2a(n, R), m, cm).total
+        assert t_periodic == pytest.approx(best_by_R[R], rel=1e-12), R
+
+
+def test_rs_dp_beats_all_other_fixed_R_schedules():
+    """Exhaustive check of Theorem 3.3 for n=64 (transmission term only)."""
+    import itertools
+    n, s = 64, 6
+    # pure-transmission cost model: alpha_s = alpha_h = 0
+    cm = CostModel(alpha_s=0.0, alpha_h=0.0, bandwidth=1.0, delta=0.0)
+    m = 1.0
+    for R in range(s):
+        t_dp = collective_time(rs_transmission_optimal(n, R), m, cm).total
+        best = min(
+            collective_time(Schedule(kind="rs", n=n, x=(0,) + bits), m, cm).total
+            for bits in itertools.product([0, 1], repeat=s - 1)
+            if sum(bits) == R
+        )
+        assert t_dp == pytest.approx(best, rel=1e-12), R
+
+
+def test_ag_is_reversed_rs_and_same_cost():
+    """Section 3.5: AG optimal schedule = reversed RS schedule, same cost."""
+    n = 128
+    cm = PAPER_DEFAULT
+    m = 8 * 2**20
+    for R in range(num_steps(n)):
+        rs = rs_transmission_optimal(n, R)
+        ag = ag_transmission_optimal(n, R)
+        assert ag.segment_lengths == tuple(reversed(rs.segment_lengths))
+        t_rs = collective_time(rs, m, cm, validate=True)
+        t_ag = collective_time(ag, m, cm, validate=True)
+        assert t_rs.transmission == pytest.approx(t_ag.transmission, rel=1e-12)
+        assert t_rs.hop_latency == pytest.approx(t_ag.hop_latency, rel=1e-12)
+
+
+def test_rs_reconfigures_earlier_than_periodic_ag_later():
+    """Paper 3.4/3.5: RS shifts reconfigs early, AG late, vs periodic A2A."""
+    n = 64
+    for R in (1, 2):
+        a2a = periodic_a2a(n, R).x
+        rs = rs_transmission_optimal(n, R).x
+        ag = ag_transmission_optimal(n, R).x
+        first = lambda x: x.index(1)
+        assert first(rs) <= first(a2a) <= first(ag)
+
+
+# --- Cost scaling: Omega(n) -> O(R n^{1/(R+1)}) ------------------------------
+
+
+def test_cost_scaling_theorem():
+    cm = CostModel(alpha_s=0.0, alpha_h=1.0, bandwidth=1e30, delta=0.0)
+    for R in (1, 2, 3):
+        for n in (64, 256, 1024, 4096):
+            t = collective_time(periodic_a2a(n, R), 0.0, cm).total
+            bound = (R + 1) * (n ** (1 / (R + 1)))  # O(R n^{1/(R+1)})
+            assert t <= bound
+            t_static = collective_time(static_schedule("a2a", n), 0.0, cm).total
+            assert t_static >= n - 1  # Omega(n)
+
+
+# --- Optimal-R planning (Section 3.6) ----------------------------------------
+
+
+def test_plan_picks_static_when_delta_huge():
+    cm = PAPER_DEFAULT.replace(delta=10.0)  # 10 s reconfig: never worth it
+    p = plan("a2a", 64, 1024.0, cm, paper_faithful=True)
+    assert p.schedule.R == 0
+
+
+def test_plan_picks_greedy_when_delta_zero():
+    cm = PAPER_DEFAULT.replace(delta=0.0)
+    p = plan("a2a", 64, 64 * 2**20, cm, paper_faithful=True)
+    assert p.schedule.R == num_steps(64) - 1
+
+
+def test_full_cost_dp_never_worse_than_paper_candidates():
+    """Beyond-paper exact DP dominates both paper schedule families."""
+    n = 256
+    for m in (1e3, 1e6, 64e6):
+        for delta in (1e-6, 1e-3, 5e-3):
+            cm = PAPER_DEFAULT.replace(delta=delta)
+            for kind in ("a2a", "rs", "ag"):
+                t_paper = plan(kind, n, m, cm, paper_faithful=True).predicted_time
+                t_full = plan(kind, n, m, cm, paper_faithful=False).predicted_time
+                assert t_full <= t_paper + 1e-15
+
+
+# --- Schedule object sanity ---------------------------------------------------
+
+
+def test_schedule_segments_roundtrip():
+    s = Schedule(kind="rs", n=64, x=(0, 1, 0, 1, 0, 0))
+    assert s.segments == ((0, 0), (1, 2), (3, 5))
+    assert s.segment_lengths == (1, 2, 3)
+    assert Schedule.from_segments("rs", 64, [1, 2, 3]).x == s.x
+    assert s.R == 2
+
+
+def test_link_offsets_rs_vs_ag():
+    rs = Schedule(kind="rs", n=64, x=(0, 0, 1, 0, 0, 0))
+    assert rs.link_offsets() == [1, 1, 4, 4, 4, 4]
+    ag = Schedule(kind="ag", n=64, x=(0, 0, 0, 0, 1, 0))
+    # AG offsets: 32 16 8 4 2 1; segment [0,3] min offset 4, [4,5] min 1
+    assert ag.link_offsets() == [4, 4, 4, 4, 1, 1]
