@@ -1,0 +1,21 @@
+PYTHONPATH := src
+
+.PHONY: test bench bench-smoke sweep lint
+
+test:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+# Full paper-figure benchmark CSV.
+bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run
+
+# Tiny generalized schedule sweep: catches benchmark/scheduler rot in CI.
+bench-smoke:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --sweep --smoke
+
+# Full n x r x m sweep, recorded for the perf trajectory.
+sweep:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --sweep --json BENCH_bridge_radix.json
+
+lint:
+	ruff check --select E9,F63,F7,F82 src tests benchmarks examples

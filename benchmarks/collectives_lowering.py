@@ -28,8 +28,11 @@ def count_collectives(text: str) -> dict:
 
 
 def lower_allreduce_variants(n: int = 8, nbytes: int = 1 << 20) -> dict:
-    mesh = AbstractMesh((n,), ("data",),
-                        axis_types=(jax.sharding.AxisType.Auto,))
+    try:  # AxisType landed after jax 0.4.x, with a new AbstractMesh signature
+        mesh = AbstractMesh((n,), ("data",),
+                            axis_types=(jax.sharding.AxisType.Auto,))
+    except AttributeError:
+        mesh = AbstractMesh((("data", n),))
     elems = nbytes // 4
     x = jax.ShapeDtypeStruct((elems,), jnp.float32)
     m = float(nbytes)
@@ -42,12 +45,14 @@ def lower_allreduce_variants(n: int = 8, nbytes: int = 1 << 20) -> dict:
         "ring": lambda v: ring_all_reduce(v, "data"),
         "psum": lambda v: jax.lax.psum(v, "data"),
     }
+    from repro.collectives._compat import shard_map
+
     out = {}
     for name, fn in variants.items():
-        lowered = jax.jit(jax.shard_map(
-            fn, mesh=mesh, in_specs=P("data"), out_specs=P("data"),
-            check_vma=False)).lower(
-                jax.ShapeDtypeStruct((n * elems,), jnp.float32))
+        mapped = shard_map(fn, mesh=mesh, in_specs=P("data"),
+                           out_specs=P("data"), check_vma=False)
+        lowered = jax.jit(mapped).lower(
+            jax.ShapeDtypeStruct((n * elems,), jnp.float32))
         out[name] = count_collectives(lowered.as_text())
         out[name]["steps_modeled"] = (
             2 * (n - 1) if name == "ring"

@@ -1,11 +1,24 @@
-"""Benchmark harness: one function per paper table/figure.
+"""Benchmark harness: one function per paper table/figure, plus the
+generalized n x r x m sweep.
 
 Prints ``name,us_per_call,derived`` CSV — us_per_call is the wall time of
 producing the artifact (the schedule synthesis + simulation), derived is the
 figure's headline number.  Run: PYTHONPATH=src python -m benchmarks.run
+
+Sweep mode covers the mixed-radix / arbitrary-n scenario space::
+
+    PYTHONPATH=src python -m benchmarks.run --sweep \
+        [--ns 6,12,48,96,384] [--rs 2,3,4] [--ms 1MB,16MB] \
+        [--json BENCH_bridge_radix.json] [--smoke]
+
+Each sweep row plans all three collectives at (n, r, m), records the chosen
+strategy/R, the modeled speedups over static Bruck and RING, and (for small
+n) an event-level cross-check ratio.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 
@@ -97,13 +110,17 @@ def main() -> None:
     _row("straggler_bridge_vs_static_k4", us,
          f"{out['speedup'][4.0]:.2f}x(nominal_{out['speedup'][1.0]:.2f}x)")
 
-    out, us = _timed(flash_attention_bench)
-    _row("kernel_flash_attention", out["us_per_call"],
-         f"vmem={out['vmem_bytes']}B_ai={out['arith_intensity']:.1f}")
-    out, us = _timed(rg_lru_bench)
-    _row("kernel_rg_lru", out["us_per_call"], f"vmem={out['vmem_bytes']}B")
-    out, us = _timed(wkv6_bench)
-    _row("kernel_wkv6", out["us_per_call"], f"vmem={out['vmem_bytes']}B")
+    # kernel benches need a pallas-compatible jax; report rather than die
+    try:
+        out, us = _timed(flash_attention_bench)
+        _row("kernel_flash_attention", out["us_per_call"],
+             f"vmem={out['vmem_bytes']}B_ai={out['arith_intensity']:.1f}")
+        out, us = _timed(rg_lru_bench)
+        _row("kernel_rg_lru", out["us_per_call"], f"vmem={out['vmem_bytes']}B")
+        out, us = _timed(wkv6_bench)
+        _row("kernel_wkv6", out["us_per_call"], f"vmem={out['vmem_bytes']}B")
+    except Exception as e:
+        _row("kernel_benches", 0.0, f"unavailable({type(e).__name__})")
 
     # roofline summary if the dry-run artifacts exist
     try:
@@ -119,5 +136,106 @@ def main() -> None:
         _row("roofline_cells", 0.0, f"unavailable({type(e).__name__})")
 
 
+def radix_sweep(
+    ns=(6, 12, 48, 96, 384),
+    radixes=(2, 3, 4),
+    ms=(1 * 2**20, 16 * 2**20),
+    event_check_max_n=48,
+) -> dict:
+    """Plan every (kind, n, r, m) cell of the generalized scenario space.
+
+    Returns {"rows": [...], "meta": {...}} ready for JSON serialization.
+    ``event_ratio`` (event-level completion / analytic completion) is
+    reported for n <= event_check_max_n where the discrete-event sim is
+    cheap; it must sit within the eventsim fluid-limit tolerance (±15%).
+    """
+    from repro.core import PAPER_DEFAULT, baselines, collective_time, plan
+    from repro.core.eventsim import collective_time_event
+
+    cm = PAPER_DEFAULT
+    rows = []
+    for n in ns:
+        for r in radixes:
+            for m in ms:
+                for kind in ("a2a", "rs", "ag"):
+                    t0 = time.perf_counter()
+                    p = plan(kind, n, float(m), cm, r=r)
+                    plan_us = (time.perf_counter() - t0) * 1e6
+                    t_bridge = collective_time(p.schedule, float(m), cm,
+                                               validate=(n <= 96)).total
+                    t_static = baselines.s_bruck(kind, n, float(m), cm, r=r).total
+                    row = {
+                        "kind": kind, "n": n, "r": r, "m_bytes": m,
+                        "strategy": p.strategy, "R": p.schedule.R,
+                        "x": list(p.schedule.x),
+                        "time_s": t_bridge,
+                        "speedup_vs_static": t_static / t_bridge,
+                        "plan_us": round(plan_us, 1),
+                    }
+                    if kind in ("rs", "ag"):
+                        row["speedup_vs_ring"] = (
+                            baselines.ring(kind, n, float(m), cm).total / t_bridge)
+                    if n <= event_check_max_n:
+                        t_ev = collective_time_event(p.schedule, float(m), cm,
+                                                     chunks_per_msg=32)
+                        row["event_ratio"] = t_ev / t_bridge
+                    rows.append(row)
+    return {
+        "meta": {
+            "cost_model": {"alpha_s": cm.alpha_s, "alpha_h": cm.alpha_h,
+                           "bandwidth": cm.bandwidth, "delta": cm.delta},
+            "ns": list(ns), "radixes": list(radixes), "ms": list(ms),
+        },
+        "rows": rows,
+    }
+
+
+def _parse_sizes(spec: str) -> tuple[int, ...]:
+    units = {"KB": 1024, "MB": 1024**2, "GB": 1024**3}
+    out = []
+    for tok in spec.split(","):
+        tok = tok.strip().upper()
+        for suf, mult in units.items():
+            if tok.endswith(suf):
+                out.append(int(float(tok[: -len(suf)]) * mult))
+                break
+        else:
+            out.append(int(tok))
+    return tuple(out)
+
+
+def sweep_main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sweep", action="store_true",
+                    help="run the n x r x m generalized sweep instead of the figures")
+    ap.add_argument("--ns", default="6,12,48,96,384")
+    ap.add_argument("--rs", default="2,3,4")
+    ap.add_argument("--ms", default="1MB,16MB")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write sweep results to PATH as JSON")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep (n=6,12 r=2,3 m=1MB) for CI rot checks")
+    args = ap.parse_args(argv)
+    if not args.sweep:
+        main()
+        return
+    if args.smoke:
+        ns, radixes, ms = (6, 12), (2, 3), (1 * 2**20,)
+    else:
+        ns = tuple(int(v) for v in args.ns.split(","))
+        radixes = tuple(int(v) for v in args.rs.split(","))
+        ms = _parse_sizes(args.ms)
+    out = radix_sweep(ns=ns, radixes=radixes, ms=ms)
+    print("kind,n,r,m_bytes,strategy,R,speedup_vs_static,event_ratio")
+    for row in out["rows"]:
+        print(f"{row['kind']},{row['n']},{row['r']},{row['m_bytes']},"
+              f"{row['strategy']},{row['R']},{row['speedup_vs_static']:.3f},"
+              f"{row.get('event_ratio', float('nan')):.3f}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"# wrote {len(out['rows'])} rows to {args.json}")
+
+
 if __name__ == "__main__":
-    main()
+    sweep_main()

@@ -5,6 +5,11 @@ Reproduces any point of Figs 5-12 on demand, e.g.:
   PYTHONPATH=src python examples/schedule_explorer.py \
       --collective rs --n 128 --m-mb 16 --delta-us 150
 
+and the generalized scenario space beyond the paper (any n, radix r):
+
+  PYTHONPATH=src python examples/schedule_explorer.py \
+      --collective a2a --n 96 --radix 3 --m-mb 4
+
 prints every baseline, the BRIDGE plan (schedule + R), and the speedups.
 """
 import argparse
@@ -23,24 +28,27 @@ def main():
     ap.add_argument("--alpha-h-us", type=float, default=1.0)
     ap.add_argument("--ports", type=int, default=None,
                     help="OCS ports (< 2n engages the Section 3.7 model)")
+    ap.add_argument("--radix", type=int, default=2,
+                    help="Bruck radix r (mixed-radix generalization; 2 = paper)")
     args = ap.parse_args()
 
     n, m = args.n, args.m_mb * MB
     cm = PAPER_DEFAULT.replace(delta=args.delta_us * 1e-6,
                                alpha_h=args.alpha_h_us * 1e-6)
 
-    p = plan(args.collective, n, m, cm, paper_faithful=True)
+    p = plan(args.collective, n, m, cm, paper_faithful=True, r=args.radix)
     t_bridge = collective_time(p.schedule, m, cm, ports=args.ports).total
     print(f"BRIDGE plan: {p.strategy}  x={p.schedule.x}")
     print(f"  completion time {t_bridge * 1e3:.3f} ms\n")
 
     rows = [("S-BRUCK (static)",
-             baselines.s_bruck(args.collective, n, m, cm).total),
+             baselines.s_bruck(args.collective, n, m, cm, r=args.radix).total),
             ("G-BRUCK (every step)",
-             baselines.g_bruck(args.collective, n, m, cm).total)]
+             baselines.g_bruck(args.collective, n, m, cm, r=args.radix).total)]
     if args.collective in ("rs", "ag"):
         rows.append(("RING", baselines.ring(args.collective, n, m, cm).total))
-        t_rhd, R = baselines.r_hd_optimal(args.collective, n, m, cm)
+        t_rhd, R = baselines.r_hd_optimal(args.collective, n, m, cm,
+                                          r=args.radix)
         rows.append((f"R-HD (R*={R})", t_rhd.total))
     for name, t in rows:
         print(f"  {name:<22s} {t * 1e3:10.3f} ms   bridge speedup "

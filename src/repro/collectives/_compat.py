@@ -1,0 +1,39 @@
+"""JAX version compatibility shims for the collectives package.
+
+The repo targets a range of JAX releases; the collectives only rely on two
+APIs whose home has moved across versions.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a named mesh axis, usable inside shard_map.
+
+    `jax.lax.axis_size` landed in newer releases; on older ones `psum(1)`
+    over the axis constant-folds to the same static value at trace time.
+    """
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return int(jax.lax.psum(1, axis_name))
+
+
+def shard_map(*args, **kwargs):
+    """`jax.shard_map` (new home) or `jax.experimental.shard_map` (old).
+
+    Also translates the `check_vma` kwarg to its pre-rename spelling
+    `check_rep` when the installed version only knows the old one.
+    """
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+    try:
+        return fn(*args, **kwargs)
+    except TypeError:
+        if "check_vma" not in kwargs:
+            raise
+        kwargs = dict(kwargs)
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+        return fn(*args, **kwargs)

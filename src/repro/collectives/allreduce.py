@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.core.schedules import Schedule
 from .bruck_rs_ag import bruck_all_gather, bruck_reduce_scatter
+from ._compat import axis_size as _axis_size
 
 
 def _shift_perm(n: int, offset: int) -> list[tuple[int, int]]:
@@ -42,7 +43,7 @@ def _from_chunks(chunks: jax.Array, pad: int, shape, dtype) -> jax.Array:
 def ring_reduce_scatter(x: jax.Array, axis_name: str) -> jax.Array:
     """x: (n, ...) contributions; device i returns reduced block i.
     n - 1 unit-offset steps (neighbor-only: no congestion, minimal bytes)."""
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     if x.shape[0] != n:
         raise ValueError(f"leading dim {x.shape[0]} != axis size {n}")
     if n == 1:
@@ -59,7 +60,7 @@ def ring_reduce_scatter(x: jax.Array, axis_name: str) -> jax.Array:
 
 def ring_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
     """x: (...) local block; returns (n, ...): n - 1 unit-offset steps."""
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     if n == 1:
         return x[None]
     i = jax.lax.axis_index(axis_name)
@@ -74,7 +75,7 @@ def ring_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
 
 def ring_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
     """Bandwidth-optimal ring allreduce (sum), any shape."""
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     if n == 1:
         return x
     chunks, pad = _to_chunks(x, n)
@@ -96,7 +97,7 @@ def bruck_all_reduce(
 
     With schedules given, the permute chain follows the BRIDGE subring
     store-and-forward execution (see bruck_rs_ag docstring)."""
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     if n == 1:
         return x
     chunks, pad = _to_chunks(x, n)

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bruck import num_steps
+from ._compat import axis_size as _axis_size
 
 
 def _shift_perm(n: int, offset: int) -> list[tuple[int, int]]:
@@ -29,7 +30,7 @@ def _shift_perm(n: int, offset: int) -> list[tuple[int, int]]:
 
 def bruck_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
     """Log-step all-to-all; x.shape[0] must equal the axis size."""
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     if x.shape[0] != n:
         raise ValueError(f"leading dim {x.shape[0]} != axis size {n}")
     if n == 1:

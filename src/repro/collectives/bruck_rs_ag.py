@@ -5,9 +5,13 @@ to global block (i + r) mod n for RS, (i - r) mod n for AG) so every device
 executes the same static slot schedule — the cyclic symmetry that makes
 Bruck's pattern subring-friendly (paper Section 3.1).
 
-Data volumes per step match the paper exactly:
+Data volumes per step match the paper exactly for power-of-two n:
   RS step k sends n / 2^{k+1} blocks  (m/2, m/4, ... — Section 3.4)
   AG step k sends 2^k blocks          (m/n, 2m/n, ... — Section 3.5)
+Arbitrary axis sizes are handled by the remainder rule: a slot only
+participates in a step when its target coordinate exists (< n), which is the
+slot-level view of the mixed-radix digit classes in `repro.core.bruck`
+(empty digit classes are simply skipped).
 
 If a BRIDGE `Schedule` is supplied, each step is lowered as
 h_k = offset_k / g ppermutes at the segment's subring link offset g —
@@ -24,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.core.bruck import num_steps
 from repro.core.schedules import Schedule
+from ._compat import axis_size as _axis_size
 
 
 def _shift_perm(n: int, offset: int) -> list[tuple[int, int]]:
@@ -56,13 +61,11 @@ def bruck_reduce_scatter(x: jax.Array, axis_name: str,
     """x: (n, ...) local contributions; returns sum over devices of block i
     at device i (shape x.shape[1:]).  Equivalent to
     psum(x)[axis_index] but in log2(n) Bruck steps."""
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     if x.shape[0] != n:
         raise ValueError(f"leading dim {x.shape[0]} != axis size {n}")
     if n == 1:
         return x[0]
-    if n & (n - 1):
-        raise ValueError("bruck_reduce_scatter requires power-of-two axis size")
     i = jax.lax.axis_index(axis_name)
     s = num_steps(n)
     link = _link_offsets(schedule, s, [2**k for k in range(s)])
@@ -72,7 +75,8 @@ def bruck_reduce_scatter(x: jax.Array, axis_name: str,
     for k in range(s):
         off = 2**k
         # active rows with bit k set: r = 2^k (mod 2^{k+1}); receiver merges
-        # them at r - 2^k (rows = 0 mod 2^{k+1}).
+        # them at r - 2^k (rows = 0 mod 2^{k+1}).  Restricting to r < n is
+        # the arbitrary-n remainder rule (digit classes empty above n).
         send = np.array([r for r in range(n) if r % (2 * off) == off], dtype=np.int32)
         moved = _permute_hops(buf[send], axis_name, n, off, link[k])
         buf = buf.at[send - off].add(moved)
@@ -84,11 +88,9 @@ def bruck_all_gather(x: jax.Array, axis_name: str,
     """x: (...) local block; returns (n, ...) with row p = device p's block.
     Equivalent to lax.all_gather(x, axis_name) in log2(n) Bruck steps with
     *decreasing* offsets 2^{s-1-k} (paper Section 3.5)."""
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     if n == 1:
         return x[None]
-    if n & (n - 1):
-        raise ValueError("bruck_all_gather requires power-of-two axis size")
     i = jax.lax.axis_index(axis_name)
     s = num_steps(n)
     offsets = [2 ** (s - 1 - k) for k in range(s)]
@@ -99,10 +101,12 @@ def bruck_all_gather(x: jax.Array, axis_name: str,
     held = [0]
     for k in range(s):
         off = offsets[k]
-        send = np.array(sorted(held), dtype=np.int32)
+        # arbitrary-n remainder rule: only slots whose target coordinate
+        # exists participate (time-reverse of the RS digit classes).
+        send = np.array([r for r in sorted(held) if r + off < n], dtype=np.int32)
         moved = _permute_hops(buf[send], axis_name, n, off, link[k])
         buf = buf.at[send + off].set(moved)
-        held = held + [r + off for r in held]
+        held = held + [r + off for r in held if r + off < n]
     assert sorted(held) == list(range(n))
     # out[p] = block from device p = buf[(i - p) mod n]
     return jnp.take(buf, (i - jnp.arange(n)) % n, axis=0)

@@ -49,7 +49,7 @@ def plan_gradient_sync(
     cm = cm or TPU_V5E
     alts: dict[str, float] = {}
     rs = ag = None
-    if "bruck" in allow and (n & (n - 1)) == 0 and n > 1:
+    if "bruck" in allow and n > 1:
         if fabric == "ocs":
             rs = plan("rs", n, m_bytes, cm).schedule
             ag = plan("ag", n, m_bytes, cm).schedule

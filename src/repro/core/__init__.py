@@ -3,8 +3,9 @@
 Paper: "BRIDGE: Optimizing Collective Communication Schedules in Reconfigurable
 Networks with Reusable Subrings" (Juerss & Schmid, 2026).
 """
-from .bruck import (Collective, Step, a2a_steps, ag_steps, num_steps,
-                    rs_steps, simulate_a2a_data, simulate_rs_data, steps_for)
+from .bruck import (Collective, Step, a2a_steps, ag_steps, is_pow2, num_steps,
+                    rs_steps, schedule_length, simulate_a2a_data,
+                    simulate_ag_data, simulate_rs_data, steps_for)
 from .cost_model import (OCS_TECHNOLOGIES, PAPER_DEFAULT, TPU_V5E, CostModel,
                          gbps, ocs_ports, ocs_preset)
 from .schedules import (Plan, Schedule, ag_transmission_optimal,
@@ -17,8 +18,9 @@ from .subrings import BlockedRing, Topology, ring, subring_topology
 from . import baselines  # noqa: E402  (module-level namespace for baselines)
 
 __all__ = [
-    "Collective", "Step", "a2a_steps", "ag_steps", "num_steps", "rs_steps",
-    "simulate_a2a_data", "simulate_rs_data", "steps_for",
+    "Collective", "Step", "a2a_steps", "ag_steps", "is_pow2", "num_steps",
+    "rs_steps", "schedule_length", "simulate_a2a_data", "simulate_ag_data",
+    "simulate_rs_data", "steps_for",
     "OCS_TECHNOLOGIES", "PAPER_DEFAULT", "TPU_V5E", "CostModel", "gbps",
     "ocs_ports", "ocs_preset",
     "Plan", "Schedule", "ag_transmission_optimal", "candidate_schedules",

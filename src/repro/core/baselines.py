@@ -24,12 +24,14 @@ from .schedules import (Schedule, every_step_schedule, plan, static_schedule)
 from .simulator import StepCost, TimeBreakdown, collective_time
 
 
-def s_bruck(kind: Collective, n: int, m: float, cm: CostModel, **kw) -> TimeBreakdown:
-    return collective_time(static_schedule(kind, n), m, cm, **kw)
+def s_bruck(kind: Collective, n: int, m: float, cm: CostModel, r: int = 2,
+            **kw) -> TimeBreakdown:
+    return collective_time(static_schedule(kind, n, r), m, cm, **kw)
 
 
-def g_bruck(kind: Collective, n: int, m: float, cm: CostModel, **kw) -> TimeBreakdown:
-    return collective_time(every_step_schedule(kind, n), m, cm, **kw)
+def g_bruck(kind: Collective, n: int, m: float, cm: CostModel, r: int = 2,
+            **kw) -> TimeBreakdown:
+    return collective_time(every_step_schedule(kind, n, r), m, cm, **kw)
 
 
 def _uniform_steps(count: int, nbytes: float, cm: CostModel) -> TimeBreakdown:
@@ -70,16 +72,17 @@ def direct_a2a(n: int, m: float, cm: CostModel) -> TimeBreakdown:
 # --- Halving-Doubling --------------------------------------------------------
 
 
-def _hd_phase_steps(kind: Collective, n: int, m: float) -> list:
+def _hd_phase_steps(kind: Collective, n: int, m: float, r: int = 2) -> list:
     """HD has the same (distance, bytes) sequence per phase as Bruck (paper S2)."""
-    return steps_for(kind, n, m)
+    return steps_for(kind, n, m, r)
 
 
-def hd_static(kind: Collective, n: int, m: float, cm: CostModel) -> TimeBreakdown:
+def hd_static(kind: Collective, n: int, m: float, cm: CostModel,
+              r: int = 2) -> TimeBreakdown:
     """Static HD: h = c = distance on the ring for every step."""
     startup = hop = tx = 0.0
     per = []
-    for st in _hd_phase_steps(kind, n, m):
+    for st in _hd_phase_steps(kind, n, m, r):
         h = st.offset
         t = cm.step_cost(hops=h, nbytes=st.nbytes, congestion=float(h))
         startup += cm.alpha_s
@@ -94,7 +97,7 @@ def hd_allreduce_static(n: int, m: float, cm: CostModel) -> TimeBreakdown:
 
 
 def r_hd(
-    kind: str, n: int, m: float, cm: CostModel, R: int
+    kind: str, n: int, m: float, cm: CostModel, R: int, r: int = 2
 ) -> TimeBreakdown:
     """Reconfigurable HD with exactly R reconfigurations (suffix-matched).
 
@@ -103,9 +106,9 @@ def r_hd(
     earlier steps run on the static ring.
     """
     if kind == "ar":
-        seq = _hd_phase_steps("rs", n, m) + _hd_phase_steps("ag", n, m)
+        seq = _hd_phase_steps("rs", n, m, r) + _hd_phase_steps("ag", n, m, r)
     else:
-        seq = _hd_phase_steps(kind, n, m)
+        seq = _hd_phase_steps(kind, n, m, r)
     total = len(seq)
     if not (0 <= R <= total):
         raise ValueError(f"R={R} out of range for {total} steps")
@@ -124,19 +127,21 @@ def r_hd(
     return TimeBreakdown(startup, hop, tx, R * cm.delta, tuple(per))
 
 
-def r_hd_optimal(kind: str, n: int, m: float, cm: CostModel) -> tuple[TimeBreakdown, int]:
+def r_hd_optimal(kind: str, n: int, m: float, cm: CostModel,
+                 r: int = 2) -> tuple[TimeBreakdown, int]:
     """R-HD with the completion-time-optimal number of reconfigurations."""
-    total = (2 if kind == "ar" else 1) * num_steps(n)
+    total = len(_hd_phase_steps("rs", n, m, r)) * (2 if kind == "ar" else 1)
     best, best_R = None, 0
     for R in range(total + 1):
-        t = r_hd(kind, n, m, cm, R)
+        t = r_hd(kind, n, m, cm, R, r)
         if best is None or t.total < best.total:
             best, best_R = t, R
     assert best is not None
     return best, best_R
 
 
-def r_hd_episodic_time(kind: str, n: int, m: float, cm: CostModel) -> float:
+def r_hd_episodic_time(kind: str, n: int, m: float, cm: CostModel,
+                       r: int = 2) -> float:
     """Beyond-paper *strengthened* R-HD adversary (returns completion time).
 
     The paper's R-HD reconfigures once and must then keep reconfiguring (the
@@ -148,9 +153,9 @@ def r_hd_episodic_time(kind: str, n: int, m: float, cm: CostModel) -> float:
     Solved exactly by a tiny DP over (step, currently-matched) states.
     """
     if kind == "ar":
-        seq = _hd_phase_steps("rs", n, m) + _hd_phase_steps("ag", n, m)
+        seq = _hd_phase_steps("rs", n, m, r) + _hd_phase_steps("ag", n, m, r)
     else:
-        seq = _hd_phase_steps(kind, n, m)
+        seq = _hd_phase_steps(kind, n, m, r)
     INF = float("inf")
     # dp[state]: state 0 = on ring, 1 = on matching (must pay delta to leave
     # or to re-match for the next step's pairs)
@@ -173,39 +178,41 @@ def r_hd_episodic_time(kind: str, n: int, m: float, cm: CostModel) -> float:
 
 
 def bridge(kind: Collective, n: int, m: float, cm: CostModel,
-           paper_faithful: bool = True) -> TimeBreakdown:
+           paper_faithful: bool = True, r: int = 2) -> TimeBreakdown:
     """BRIDGE with the optimal schedule and optimal R (paper Section 3.6)."""
-    p = plan(kind, n, m, cm, paper_faithful=paper_faithful)
+    p = plan(kind, n, m, cm, paper_faithful=paper_faithful, r=r)
     return collective_time(p.schedule, m, cm)
 
 
 def bridge_allreduce(n: int, m: float, cm: CostModel,
-                     paper_faithful: bool = True) -> TimeBreakdown:
+                     paper_faithful: bool = True, r: int = 2) -> TimeBreakdown:
     """BRIDGE AllReduce = optimal RS phase + optimal AG phase (+ transition)."""
     from .simulator import allreduce_time
 
-    rs = plan("rs", n, m, cm, paper_faithful=paper_faithful).schedule
-    ag = plan("ag", n, m, cm, paper_faithful=paper_faithful).schedule
+    rs = plan("rs", n, m, cm, paper_faithful=paper_faithful, r=r).schedule
+    ag = plan("ag", n, m, cm, paper_faithful=paper_faithful, r=r).schedule
     return allreduce_time(rs, ag, m, cm)
 
 
-def bridge_allreduce_fixed_R(n: int, m: float, cm: CostModel, R: int) -> TimeBreakdown:
+def bridge_allreduce_fixed_R(n: int, m: float, cm: CostModel, R: int,
+                             r: int = 2) -> TimeBreakdown:
     """Best BRIDGE AllReduce using exactly R reconfigurations total (Fig. 1).
 
     Searches the split of R between the RS and AG phases; within a phase uses
     the exact fixed-R schedule (full-cost DP).
     """
+    from .bruck import schedule_length
     from .schedules import full_cost_optimal
     from .simulator import allreduce_time
 
-    s = num_steps(n)
+    s = schedule_length("rs", n, r)
     best = None
     for r_rs in range(0, min(R, s - 1) + 1):
         r_ag = R - r_rs
         if r_ag > s - 1:
             continue
-        rs = full_cost_optimal("rs", n, m, cm, r_rs)
-        ag = full_cost_optimal("ag", n, m, cm, r_ag)
+        rs = full_cost_optimal("rs", n, m, cm, r_rs, r)
+        ag = full_cost_optimal("ag", n, m, cm, r_ag, r)
         t = allreduce_time(rs, ag, m, cm)
         if best is None or t.total < best.total:
             best = t

@@ -98,7 +98,7 @@ def collective_time_event(
 ) -> float:
     """Event-level completion time of a Bruck collective under a schedule."""
     n, kind = schedule.n, schedule.kind
-    steps = steps_for(kind, n, m)
+    steps = steps_for(kind, n, m, schedule.r)
     link = schedule.link_offsets(steps)
     total = schedule.R * cm.delta
     for st, g in zip(steps, link):

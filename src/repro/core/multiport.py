@@ -6,10 +6,14 @@ radix-(p+1) generalization.  In step k, node u sends to the p peers
 u + j * (p+1)^k (j = 1..p) simultaneously; data for All-to-All is the blocks
 whose destination's k-th radix-(p+1) digit equals j.
 
-Subring structure generalizes: reconfiguring at step k forms (p+1)^k
-interleaved sub-fabrics (residues mod (p+1)^k); all later offsets are
-multiples of (p+1)^k, so reachability and reuse (Conditions 1-3) carry over
-whenever (p+1)^k divides n.
+This module reuses the mixed-radix step generation in `bruck.py`: a
+multiport *step* is one digit phase, executing all of the phase's sub-steps
+(one per digit value) concurrently on separate port pairs.  Sub-step data
+volumes are the exact digit-class sizes, so arbitrary n is supported.
+
+Subring structure generalizes: reconfiguring at phase k forms interleaved
+sub-fabrics (residues mod (p+1)^k); all later offsets are multiples of
+(p+1)^k, so reachability and reuse (Conditions 1-3) carry over.
 
 Cost model per step (single-port-per-peer serialization, the paper's
 convention): each of the p transfers uses its own port pair, so a step costs
@@ -17,16 +21,17 @@ convention): each of the p transfers uses its own port pair, so a step costs
 """
 from __future__ import annotations
 
-import math
+import itertools
 
+from .bruck import a2a_steps, num_steps
 from .cost_model import CostModel
-from .simulator import TimeBreakdown, StepCost
+from .simulator import StepCost, TimeBreakdown
 
 
 def num_steps_multiport(n: int, p: int) -> int:
     if p < 1:
         raise ValueError("need p >= 1 ports")
-    return int(math.ceil(math.log(n, p + 1))) if n > 1 else 0
+    return num_steps(n, p + 1) if n > 1 else 0
 
 
 def a2a_multiport_time(
@@ -34,39 +39,34 @@ def a2a_multiport_time(
 ) -> TimeBreakdown:
     """All-to-All with radix-(p+1) Bruck and optional periodic reconfiguration.
 
-    reconfigure_every = r > 0 reconfigures before steps r, 2r, ... (the
+    reconfigure_every = r > 0 reconfigures before phases r, 2r, ... (the
     periodic-optimal structure of Theorem 3.2 applies unchanged: segment cost
     is convex in length for any radix).  r = 0 means static.
     """
-    s = num_steps_multiport(n, p)
     radix = p + 1
     startup = hop_lat = tx = 0.0
     steps: list[StepCost] = []
     n_reconf = 0
     link = 1  # current link offset (smallest offset of the active segment)
-    for k in range(s):
-        offset = radix ** k
+    by_phase = itertools.groupby(a2a_steps(n, m, radix), key=lambda st: st.phase)
+    for k, phase_steps in by_phase:
         reconf = reconfigure_every and k and k % reconfigure_every == 0
         if reconf:
-            link = offset
+            link = radix ** k
             n_reconf += 1
-        # per-port transfer j: offset j*radix^k, same data volume per port:
-        # fraction of blocks with k-th digit == j is 1/radix each
+        # per-port transfer j: offset j*radix^k, volume = its digit-class size
         worst = 0.0
         h_max = 0
-        for j in range(1, radix):
-            off_j = (j * offset) % n
-            if off_j == 0:
-                continue
-            h = max(1, off_j // link)
-            m_j = m / radix
-            t_j = h * cm.alpha_h + m_j * h * cm.beta  # c = h on uniform rings
+        m_max = 0.0
+        for st in phase_steps:
+            h = max(1, st.offset // link)
+            t_j = h * cm.alpha_h + st.nbytes * h * cm.beta  # c = h on rings
             if t_j > worst:
-                worst, h_max = t_j, h
+                worst, h_max, m_max = t_j, h, st.nbytes
         startup += cm.alpha_s
         hop_lat += h_max * cm.alpha_h
         tx += worst - h_max * cm.alpha_h
-        steps.append(StepCost(k, h_max, float(h_max), m / radix, bool(reconf),
+        steps.append(StepCost(k, h_max, float(h_max), m_max, bool(reconf),
                               cm.alpha_s + worst))
     return TimeBreakdown(startup, hop_lat, tx, n_reconf * cm.delta,
                          tuple(steps))

@@ -1,24 +1,33 @@
-"""BRIDGE reconfiguration-schedule synthesis (paper Sections 3.3-3.6).
+"""BRIDGE reconfiguration-schedule synthesis (paper Sections 3.3-3.6),
+generalized to arbitrary world sizes n and radix r.
 
-A schedule for an s-step Bruck collective is x in {0,1}^s, x_k = 1 meaning the
-OCS is reconfigured immediately before step k.  x_0 = 0 always: the initial
-topology is established before the collective starts (the physical ring for
-All-to-All / Reduce-Scatter; the first segment's subring for AllGather,
-paper Section 3.5) and is therefore free.
+A schedule for an S-sub-step Bruck collective is x in {0,1}^S, x_k = 1
+meaning the OCS is reconfigured immediately before sub-step k.  x_0 = 0
+always: the initial topology is established before the collective starts
+(the physical ring for All-to-All / Reduce-Scatter; the first segment's
+subring for AllGather, paper Section 3.5) and is therefore free.
 
-Equivalently a schedule is a partition of the steps 0..s-1 into R+1 contiguous
-*segments*; the topology is reconfigured at each segment boundary and *reused*
-within a segment.  The OCS link offset of a segment is the smallest Bruck
-message offset inside it (= first step's offset for A2A/RS whose offsets
-double; = last step's offset for AG whose offsets halve), so that every step
-in the segment stays inside its subring (Lemma 3.2).
+Equivalently a schedule is a partition of the sub-steps 0..S-1 into R+1
+contiguous *segments*; the topology is reconfigured at each segment boundary
+and *reused* within a segment.  The OCS link offset of a segment is the
+greatest common divisor of the Bruck message offsets inside it, so that
+every step in the segment stays inside its subring (generalized Lemma 3.2:
+a destination is reachable iff the message offset is divisible by the link
+offset).  For radix 2 the offsets in a segment are successive powers of two
+and the gcd is the smallest offset — exactly the paper's rule.
 
   - All-to-All:      optimal segments are balanced (Lemma 3.1 / Theorem 3.2)
                      => periodic reconfigurations.
   - Reduce-Scatter:  transmission-optimal segments are found by an interval
                      partition DP (the paper's ILP, Theorem 3.3) => early.
   - AllGather:       the time-reverse of Reduce-Scatter => late (Section 3.5).
-  - Optimal R:       argmin over 0 <= R < s of modeled completion time (3.6).
+  - Optimal R:       argmin over 0 <= R < S of modeled completion time (3.6).
+
+All DPs below score segments with the *actual* per-sub-step hop counts and
+send volumes from `bruck.steps_for`, so they remain exact for non-power-of-
+two n and radix r > 2 where the paper's closed forms (2^len - 1, len / 2^a)
+no longer apply.  For power-of-two n at radix 2 the synthesized schedules
+are bit-identical to the paper's Table 1 (tested).
 """
 from __future__ import annotations
 
@@ -26,22 +35,37 @@ import dataclasses
 import math
 from typing import Callable, Literal, Sequence
 
-from .bruck import Collective, Step, num_steps, steps_for
+from .bruck import Collective, Step, num_steps, schedule_length, steps_for
 from .cost_model import CostModel
+
+
+def _segment_gcd(steps: Sequence[Step], a: int, b: int) -> int:
+    """Link offset of segment [a, b]: gcd of its message offsets."""
+    g = 0
+    for j in range(a, b + 1):
+        g = math.gcd(g, steps[j].offset)
+    return g
 
 
 @dataclasses.dataclass(frozen=True)
 class Schedule:
-    """Reconfiguration schedule for one collective execution."""
+    """Reconfiguration schedule for one collective execution.
+
+    ``r`` is the Bruck radix the sub-step sequence was generated with
+    (r = 2 is the paper's pattern; r > 2 is the multiport/radix-r
+    generalization of Section 3.1).
+    """
 
     kind: Collective
     n: int
     x: tuple[int, ...]
+    r: int = 2
 
     def __post_init__(self):
-        s = num_steps(self.n)
+        s = schedule_length(self.kind, self.n, self.r)
         if len(self.x) != s:
-            raise ValueError(f"schedule length {len(self.x)} != s={s}")
+            raise ValueError(
+                f"schedule length {len(self.x)} != S={s} (n={self.n}, r={self.r})")
         if any(v not in (0, 1) for v in self.x):
             raise ValueError("x must be 0/1")
         if self.x and self.x[0] != 0:
@@ -63,18 +87,19 @@ class Schedule:
         return tuple(segs)
 
     def link_offsets(self, steps: Sequence[Step] | None = None) -> list[int]:
-        """OCS link offset in force during each step."""
-        steps = steps if steps is not None else steps_for(self.kind, self.n, 1.0)
+        """OCS link offset in force during each sub-step."""
+        steps = steps if steps is not None else steps_for(self.kind, self.n, 1.0, self.r)
         out = [0] * len(self.x)
         for a, b in self.segments:
-            g = min(steps[j].offset for j in range(a, b + 1))
+            g = _segment_gcd(steps, a, b)
             for j in range(a, b + 1):
                 out[j] = g
         return out
 
     @staticmethod
-    def from_segments(kind: Collective, n: int, lengths: Sequence[int]) -> "Schedule":
-        s = num_steps(n)
+    def from_segments(kind: Collective, n: int, lengths: Sequence[int],
+                      r: int = 2) -> "Schedule":
+        s = schedule_length(kind, n, r)
         if sum(lengths) != s or any(l <= 0 for l in lengths):
             raise ValueError(f"segment lengths {lengths} must be positive and sum to {s}")
         x = [0] * s
@@ -82,21 +107,21 @@ class Schedule:
         for l in lengths[:-1]:
             pos += l
             x[pos] = 1
-        return Schedule(kind=kind, n=n, x=tuple(x))
+        return Schedule(kind=kind, n=n, x=tuple(x), r=r)
 
     @property
     def segment_lengths(self) -> tuple[int, ...]:
         return tuple(b - a + 1 for a, b in self.segments)
 
 
-def static_schedule(kind: Collective, n: int) -> Schedule:
-    return Schedule(kind=kind, n=n, x=tuple([0] * num_steps(n)))
+def static_schedule(kind: Collective, n: int, r: int = 2) -> Schedule:
+    return Schedule(kind=kind, n=n, x=tuple([0] * schedule_length(kind, n, r)), r=r)
 
 
-def every_step_schedule(kind: Collective, n: int) -> Schedule:
-    """Greedy (G-BRUCK-like): reconfigure before every step after the first."""
-    s = num_steps(n)
-    return Schedule(kind=kind, n=n, x=tuple([0] + [1] * (s - 1)))
+def every_step_schedule(kind: Collective, n: int, r: int = 2) -> Schedule:
+    """Greedy (G-BRUCK-like): reconfigure before every sub-step after the first."""
+    s = schedule_length(kind, n, r)
+    return Schedule(kind=kind, n=n, x=tuple([0] + [1] * (s - 1)), r=r)
 
 
 # --- Generic segment-partition DP -------------------------------------------
@@ -140,49 +165,84 @@ def _partition_dp(
 # --- Paper-faithful schedules ------------------------------------------------
 
 
-def periodic_a2a(n: int, R: int) -> Schedule:
-    """Theorem 3.2: optimal All-to-All schedule is periodic (balanced segments).
+def _hop_sum_cost(steps: Sequence[Step]) -> Callable[[int, int], float]:
+    """Total hop count of a segment: sum of offset / gcd over its sub-steps.
 
-    Computed by the exact DP on the A2A objective sum(2^len - 1); by Lemma 3.1
-    the result always has segment lengths differing by at most one.
+    For radix-2 power-of-two A2A this is 2^len - 1, the paper's Lemma 3.1
+    objective; for general (n, r) it is the exact per-segment hop latency.
     """
-    s = num_steps(n)
-    _, lens = _partition_dp(s, R + 1, lambda a, b: float(2 ** (b - a + 1) - 1))
-    assert max(lens) - min(lens) <= 1, "Lemma 3.1 violated"
-    return Schedule.from_segments("a2a", n, lens)
+
+    def seg_cost(a: int, b: int) -> float:
+        g = _segment_gcd(steps, a, b)
+        return float(sum(steps[j].offset // g for j in range(a, b + 1)))
+
+    return seg_cost
 
 
-def rs_transmission_optimal(n: int, R: int) -> Schedule:
+def _transmission_cost(steps: Sequence[Step]) -> Callable[[int, int], float]:
+    """Transmission term of a segment: sum of nbytes * congestion, with
+    congestion = hops = offset / gcd (uniform-offset ring traffic).
+
+    For radix-2 power-of-two RS this is len / 2^{a+1} (the paper's Theorem
+    3.3 objective up to a constant factor); exact for general (n, r).
+    """
+
+    def seg_cost(a: int, b: int) -> float:
+        g = _segment_gcd(steps, a, b)
+        return sum(steps[j].nbytes * (steps[j].offset // g) for j in range(a, b + 1))
+
+    return seg_cost
+
+
+def periodic_a2a(n: int, R: int, r: int = 2) -> Schedule:
+    """Theorem 3.2: optimal All-to-All schedule, periodic for radix 2
+    (balanced segments by Lemma 3.1).
+
+    Computed by the exact DP on the hop-sum objective (2^len - 1 in the
+    radix-2 case); for radix 2 the result always has segment lengths
+    differing by at most one.
+    """
+    steps = a2a_steps_cached(n, r)
+    _, lens = _partition_dp(len(steps), R + 1, _hop_sum_cost(steps))
+    if r == 2:
+        assert max(lens) - min(lens) <= 1, "Lemma 3.1 violated"
+    return Schedule.from_segments("a2a", n, lens, r)
+
+
+def rs_transmission_optimal(n: int, R: int, r: int = 2) -> Schedule:
     """Theorem 3.3: transmission-optimal Reduce-Scatter schedule.
 
-    Minimizes sum over periods [a,b] of (b - a + 1) / 2^a — the paper's ILP,
-    solved exactly as an interval-partition DP (schedules are parameter-free).
+    The paper's ILP minimizes sum over periods [a,b] of (b - a + 1) / 2^a;
+    the DP below minimizes the exact per-segment transmission (identical up
+    to a constant factor for radix-2 power-of-two n, exact otherwise) as an
+    interval-partition DP (schedules are parameter-free).
     """
-    s = num_steps(n)
-    _, lens = _partition_dp(s, R + 1, lambda a, b: (b - a + 1) / 2.0**a)
-    return Schedule.from_segments("rs", n, lens)
+    steps = _steps_cached("rs", n, r)
+    _, lens = _partition_dp(len(steps), R + 1, _transmission_cost(steps))
+    return Schedule.from_segments("rs", n, lens, r)
 
 
-def ag_transmission_optimal(n: int, R: int) -> Schedule:
+def ag_transmission_optimal(n: int, R: int, r: int = 2) -> Schedule:
     """Section 3.5: AllGather optimum is the reversed Reduce-Scatter schedule."""
-    rs = rs_transmission_optimal(n, R)
-    return Schedule.from_segments("ag", n, list(reversed(rs.segment_lengths)))
+    rs = rs_transmission_optimal(n, R, r)
+    return Schedule.from_segments("ag", n, list(reversed(rs.segment_lengths)), r)
 
 
-def periodic(kind: Collective, n: int, R: int) -> Schedule:
+def periodic(kind: Collective, n: int, R: int, r: int = 2) -> Schedule:
     """Latency-optimal (periodic) schedule for any of the three collectives.
 
     For A2A this is Theorem 3.2; for RS/AG the paper notes the latency-optimal
     case is identical to All-to-All (Section 3.6 / Section 5).
     """
-    lens = periodic_a2a(n, R).segment_lengths
+    lens = periodic_a2a(n, R, r).segment_lengths
     if kind == "ag":
         lens = tuple(reversed(lens))
-    return Schedule.from_segments(kind, n, list(lens))
+    return Schedule.from_segments(kind, n, list(lens), r)
 
 
 def cstar_a2a(n: int, R: int, cm: CostModel, m: float) -> float:
-    """Closed-form optimal A2A cost (Theorem 3.2), exact when (R+1) | s.
+    """Closed-form optimal A2A cost (Theorem 3.2; radix 2, power-of-two n),
+    exact when (R+1) | s.
 
     C* = s*alpha_s + (R+1) * c * (n^{1/(R+1)} - 1) + R*delta,  c = alpha_h + beta*m/2.
     """
@@ -191,12 +251,28 @@ def cstar_a2a(n: int, R: int, cm: CostModel, m: float) -> float:
     return s * cm.alpha_s + (R + 1) * c * (n ** (1.0 / (R + 1)) - 1.0) + R * cm.delta
 
 
+# --- Step-sequence cache (schedule synthesis calls these in tight loops) -----
+
+_STEP_CACHE: dict[tuple[str, int, int], tuple[Step, ...]] = {}
+
+
+def _steps_cached(kind: Collective, n: int, r: int) -> tuple[Step, ...]:
+    key = (kind, n, r)
+    if key not in _STEP_CACHE:
+        _STEP_CACHE[key] = tuple(steps_for(kind, n, 1.0, r))
+    return _STEP_CACHE[key]
+
+
+def a2a_steps_cached(n: int, r: int) -> tuple[Step, ...]:
+    return _steps_cached("a2a", n, r)
+
+
 # --- Exact full-cost schedules (beyond paper: joint latency+transmission DP) --
 
 
 def _segment_cost_exact(kind: Collective, steps: Sequence[Step], cm: CostModel) -> Callable:
     def seg_cost(a: int, b: int) -> float:
-        g = min(steps[j].offset for j in range(a, b + 1))
+        g = _segment_gcd(steps, a, b)
         t = 0.0
         for j in range(a, b + 1):
             h = steps[j].offset // g
@@ -206,16 +282,17 @@ def _segment_cost_exact(kind: Collective, steps: Sequence[Step], cm: CostModel) 
     return seg_cost
 
 
-def full_cost_optimal(kind: Collective, n: int, m: float, cm: CostModel, R: int) -> Schedule:
+def full_cost_optimal(kind: Collective, n: int, m: float, cm: CostModel,
+                      R: int, r: int = 2) -> Schedule:
     """Exact minimum-completion-time schedule for fixed R under the full model.
 
     Beyond-paper: jointly minimizes latency + transmission (+ the fixed R*delta)
     instead of picking the better of the latency-only and transmission-only
     optima (paper Section 3.6).
     """
-    steps = steps_for(kind, n, m)
+    steps = steps_for(kind, n, m, r)
     _, lens = _partition_dp(len(steps), R + 1, _segment_cost_exact(kind, steps, cm))
-    return Schedule.from_segments(kind, n, lens)
+    return Schedule.from_segments(kind, n, lens, r)
 
 
 # --- Optimal number of reconfigurations (Section 3.6) -------------------------
@@ -229,29 +306,31 @@ class Plan:
 
 
 def candidate_schedules(
-    kind: Collective, n: int, m: float, cm: CostModel, paper_faithful: bool = False
+    kind: Collective, n: int, m: float, cm: CostModel,
+    paper_faithful: bool = False, r: int = 2
 ) -> list[tuple[str, Schedule]]:
-    s = num_steps(n)
+    s = schedule_length(kind, n, r)
     cands: list[tuple[str, Schedule]] = []
     for R in range(0, s):
-        cands.append((f"periodic(R={R})", periodic(kind, n, R)))
+        cands.append((f"periodic(R={R})", periodic(kind, n, R, r)))
         if kind == "rs":
-            cands.append((f"rs-early(R={R})", rs_transmission_optimal(n, R)))
+            cands.append((f"rs-early(R={R})", rs_transmission_optimal(n, R, r)))
         elif kind == "ag":
-            cands.append((f"ag-late(R={R})", ag_transmission_optimal(n, R)))
+            cands.append((f"ag-late(R={R})", ag_transmission_optimal(n, R, r)))
         if not paper_faithful:
-            cands.append((f"exact-dp(R={R})", full_cost_optimal(kind, n, m, cm, R)))
+            cands.append((f"exact-dp(R={R})", full_cost_optimal(kind, n, m, cm, R, r)))
     return cands
 
 
 def plan(
-    kind: Collective, n: int, m: float, cm: CostModel, paper_faithful: bool = False
+    kind: Collective, n: int, m: float, cm: CostModel,
+    paper_faithful: bool = False, r: int = 2
 ) -> Plan:
     """Pick the schedule (incl. R, Section 3.6) minimizing modeled completion time."""
     from .simulator import collective_time  # local import to avoid cycle
 
     best: Plan | None = None
-    for name, sched in candidate_schedules(kind, n, m, cm, paper_faithful):
+    for name, sched in candidate_schedules(kind, n, m, cm, paper_faithful, r):
         t = collective_time(sched, m, cm).total
         if best is None or t < best.predicted_time:
             best = Plan(schedule=sched, predicted_time=t, strategy=name)

@@ -84,7 +84,7 @@ def collective_time(
       are preserved).
     """
     n, kind = schedule.n, schedule.kind
-    steps = steps_for(kind, n, m / 2 if mirrored else m)
+    steps = steps_for(kind, n, m / 2 if mirrored else m, schedule.r)
     link = schedule.link_offsets(steps)
     blocked = BlockedRing(n=n, ports=ports) if ports is not None and ports < 2 * n else None
 

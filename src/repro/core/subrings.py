@@ -4,13 +4,21 @@ A topology in this model is always a *uniform-offset ring family*: the OCS
 links are { u -> (u + g) mod n : all u } for a single link offset ``g``.
 
   g = 1      : the initial physical ring.
-  g = 2^k    : the BRIDGE reconfiguration for Bruck step k.  It partitions the
-               network into gcd(g, n) = 2^k subrings
+  g = 2^k    : the BRIDGE reconfiguration for radix-2 Bruck step k.  It
+               partitions the network into gcd(g, n) = 2^k subrings
                S_i^{(k)} = { u : u = i (mod 2^k) }, each of size n / 2^k.
+  g = r^k    : the radix-r generalization (and, within a segment spanning
+               several digit values j * r^k, the gcd of the segment's
+               message offsets).
 
-Lemma (3.2): S_i^{(k)} contains exactly the current peer, all future peers and
-peers-of-peers of Bruck from step k onward - every later offset 2^j (j >= k)
-is a multiple of 2^k, so traffic never leaves the subring.
+Lemma (3.2), generalized: Topology(n, g) partitions the nodes into
+gcd(g, n) subrings of size n / gcd(g, n), and a destination at message
+offset ``mo`` is reachable iff g divides mo — in exactly mo / g hops
+(mo < n and mo/g < n/g <= subring cycle length, so the walk never wraps).
+For the paper's radix-2 power-of-two case every later offset 2^j (j >= k)
+is a multiple of 2^k, so traffic never leaves the subring; for mixed-radix
+schedules the segment link offset is the gcd of the segment's offsets,
+which preserves the same divisibility invariant at arbitrary n.
 
 Port-constrained networks (paper Section 3.7): with z < 2n OCS ports, blocks
 of ceil(2n/z) consecutive nodes share one optical ingress/egress pair, so a
@@ -95,16 +103,17 @@ def ring(n: int) -> Topology:
     return Topology(n=n, g=1)
 
 
-def subring_topology(n: int, k: int) -> Topology:
-    """The BRIDGE topology after reconfiguring for Bruck step k (offset 2^k)."""
-    return Topology(n=n, g=2**k)
+def subring_topology(n: int, k: int, r: int = 2) -> Topology:
+    """The BRIDGE topology after reconfiguring for Bruck phase k (offset r^k)."""
+    return Topology(n=n, g=r**k)
 
 
 def validate_schedule_reachability(n: int, offsets: list[int], link_offsets: list[int]) -> None:
     """Assert every step's destination is reachable on its assigned topology.
 
-    offsets[k]      : message offset of step k  (2^k for RS/A2A, 2^{s-1-k} for AG)
-    link_offsets[k] : OCS link offset in force during step k
+    offsets[k]      : message offset of sub-step k (j * r^k for RS/A2A,
+                      reversed for AG; 2^k in the radix-2 case)
+    link_offsets[k] : OCS link offset in force during sub-step k
     """
     for k, (mo, lo) in enumerate(zip(offsets, link_offsets)):
         if mo % lo != 0:

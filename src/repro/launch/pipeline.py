@@ -17,6 +17,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.collectives._compat import axis_size as _axis_size
 
 
 def _shift_perm(n: int, offset: int) -> list[tuple[int, int]]:
@@ -32,7 +33,7 @@ def pipeline_apply(stage_fn, stage_params, x_micro, axis_name: str):
     Returns (M, mb, ...) final-stage outputs (valid on the last stage; other
     stages return zeros), suitable for psum/gather by the caller.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     m = x_micro.shape[0]
     mb_shape = x_micro.shape[1:]

@@ -13,7 +13,7 @@ import pytest
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-@pytest.mark.parametrize("n", [4, 8])
+@pytest.mark.parametrize("n", [4, 6, 8])  # 6: non-power-of-two world size
 def test_collectives_vs_lax_oracles(n):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")

@@ -65,8 +65,8 @@ def test_elastic_restore_onto_different_mesh(tmp_path):
 
     # Pretend the new job has a different mesh: single-device CPU can still
     # express the sharding metadata path via NamedSharding on a (1, 1) mesh.
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     sh = jax.sharding.NamedSharding(
         mesh, jax.sharding.PartitionSpec("data", "model"))
     back = restore_into(d, tree, sharding_fn=lambda k, a: sh)

@@ -30,9 +30,13 @@ def test_collective_planner_regimes():
     p_big = plan_gradient_sync(64, 4e9, cm)
     assert p_big.impl == "ring"
     assert p_big.alternatives["ring"] < p_big.alternatives["bruck"]
-    # non-power-of-two world: falls back to ring
+    # non-power-of-two world: generalized Bruck is available and wins the
+    # latency-dominated regime (log-step beats 2(n-1) ring steps)
     p_np2 = plan_gradient_sync(48, 1e3, cm)
-    assert p_np2.impl == "ring"
+    assert p_np2.impl == "bruck"
+    assert p_np2.alternatives["bruck"] < p_np2.alternatives["ring"]
+    # ... and still loses the bandwidth-dominated regime to ring
+    assert plan_gradient_sync(48, 4e9, cm).impl == "ring"
 
 
 def test_param_sharding_rules():

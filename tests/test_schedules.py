@@ -1,4 +1,5 @@
-"""Schedule-synthesis tests: Table 1 exact match, Theorems 3.2/3.3, Lemma 3.1."""
+"""Schedule-synthesis tests: Table 1 exact match, Theorems 3.2/3.3, Lemma 3.1,
+and the mixed-radix / arbitrary-n generalization."""
 import math
 
 import pytest
@@ -7,7 +8,7 @@ from repro.core import (CostModel, PAPER_DEFAULT, Schedule, baselines,
                         collective_time, cstar_a2a, full_cost_optimal,
                         num_steps, periodic, periodic_a2a, plan,
                         rs_transmission_optimal, ag_transmission_optimal,
-                        static_schedule)
+                        schedule_length, static_schedule, steps_for)
 
 
 # --- Table 1 (n = 64): the paper's published schedules, exact ---------------
@@ -180,3 +181,125 @@ def test_link_offsets_rs_vs_ag():
     ag = Schedule(kind="ag", n=64, x=(0, 0, 0, 0, 1, 0))
     # AG offsets: 32 16 8 4 2 1; segment [0,3] min offset 4, [4,5] min 1
     assert ag.link_offsets() == [4, 4, 4, 4, 1, 1]
+
+
+# --- Mixed-radix / arbitrary-n generalization ---------------------------------
+
+NONPOW2_NS = [6, 12, 48, 96]
+RADIXES = [2, 3, 4]
+
+
+@pytest.mark.parametrize("n", NONPOW2_NS)
+@pytest.mark.parametrize("r", RADIXES)
+@pytest.mark.parametrize("kind", ["a2a", "rs", "ag"])
+def test_generalized_step_sequences(kind, n, r):
+    """Step sequences are well-formed for arbitrary (n, r): offsets in [1, n),
+    total payload conserved, and S identical across the three kinds."""
+    m = 1.0
+    steps = steps_for(kind, n, m, r)
+    assert len(steps) == schedule_length(kind, n, r)
+    assert len(steps) == schedule_length("a2a", n, r)  # same S for all kinds
+    for st in steps:
+        assert 1 <= st.offset < n
+        assert st.offset == st.digit * r**st.phase
+        assert st.nbytes > 0
+    if kind == "a2a":
+        # every block except the diagonal moves exactly once per nonzero digit
+        total_blocks = sum(st.nbytes for st in steps) * n / m
+        want = sum(len([k for k in range(20) if (d // r**k) % r]) for d in range(n))
+        assert total_blocks == pytest.approx(want)
+    else:
+        # RS forwards each of the n-1 non-local blocks' partials exactly once
+        # per nonzero digit of its offset; AG is the exact reverse
+        rs = steps_for("rs", n, m, r)
+        ag = steps_for("ag", n, m, r)
+        assert [st.offset for st in ag] == [st.offset for st in reversed(rs)]
+        assert [st.nbytes for st in ag] == [st.nbytes for st in reversed(rs)]
+
+
+@pytest.mark.parametrize("n", NONPOW2_NS)
+@pytest.mark.parametrize("r", RADIXES)
+@pytest.mark.parametrize("kind", ["a2a", "rs", "ag"])
+def test_generalized_schedules_reachable(kind, n, r):
+    """Every synthesized schedule keeps destinations reachable: the segment
+    link offset (gcd) divides every message offset in the segment."""
+    from repro.core.subrings import validate_schedule_reachability
+
+    S = schedule_length(kind, n, r)
+    for R in range(0, S, max(1, S // 3)):
+        for sched in (periodic(kind, n, R, r),
+                      full_cost_optimal(kind, n, 2**20, PAPER_DEFAULT, R, r)):
+            steps = steps_for(kind, n, 1.0, r)
+            validate_schedule_reachability(
+                n, [st.offset for st in steps], sched.link_offsets(steps))
+            t = collective_time(sched, 2**20, PAPER_DEFAULT, validate=True)
+            assert t.total > 0
+            assert t.reconfig == pytest.approx(R * PAPER_DEFAULT.delta)
+
+
+@pytest.mark.parametrize("n", [8, 64, 256])
+def test_radix2_pow2_matches_seed_closed_forms(n):
+    """No regression of paper-faithful results: for power-of-two n at r=2 the
+    generalized step generator reproduces the paper's byte sequences and the
+    DP segment costs reduce to 2^len - 1 / len / 2^a."""
+    s = num_steps(n)
+    m = 1024.0
+    a2a = steps_for("a2a", n, m, 2)
+    rs = steps_for("rs", n, m, 2)
+    ag = steps_for("ag", n, m, 2)
+    assert [st.offset for st in a2a] == [2**k for k in range(s)]
+    assert [st.nbytes for st in a2a] == [m / 2] * s
+    assert [st.nbytes for st in rs] == [m / 2 ** (k + 1) for k in range(s)]
+    assert [st.offset for st in ag] == [2 ** (s - 1 - k) for k in range(s)]
+    assert [st.nbytes for st in ag] == [m / 2 ** (s - k) for k in range(s)]
+
+
+def test_radix2_nonpow2_a2a_truncated_digit_classes():
+    """At non-pow2 n the digit classes shrink: n=6 sends m/2, m/3, m/3."""
+    steps = steps_for("a2a", 6, 6.0, 2)
+    assert [(st.offset, st.nbytes) for st in steps] == [(1, 3.0), (2, 2.0), (4, 2.0)]
+
+
+@pytest.mark.parametrize("n,r", [(6, 2), (12, 3), (48, 4), (96, 3)])
+def test_generalized_dp_beats_exhaustive(n, r):
+    """The generalized DPs stay exact: no 0/1 schedule with the same R does
+    better under the full cost model."""
+    import itertools
+
+    cm = PAPER_DEFAULT.replace(delta=0.0)
+    m = 2**20
+    S = schedule_length("rs", n, r)
+    if S > 8:
+        pytest.skip("exhaustive check only feasible for short step sequences")
+    best_by_R = {}
+    for bits in itertools.product([0, 1], repeat=S - 1):
+        x = (0,) + bits
+        sched = Schedule(kind="rs", n=n, x=x, r=r)
+        t = collective_time(sched, m, cm).total
+        R = sum(x)
+        best_by_R[R] = min(best_by_R.get(R, float("inf")), t)
+    for R in range(S):
+        t_dp = collective_time(
+            full_cost_optimal("rs", n, m, cm, R, r), m, cm).total
+        assert t_dp == pytest.approx(best_by_R[R], rel=1e-12), (n, r, R)
+
+
+@pytest.mark.parametrize("n", [6, 12, 48, 96, 384])
+@pytest.mark.parametrize("r", RADIXES)
+@pytest.mark.parametrize("kind", ["a2a", "rs", "ag"])
+def test_plan_valid_at_acceptance_grid(kind, n, r):
+    """Acceptance grid: plan() returns a valid, reachability-checked schedule
+    for every kind at n in {6,12,48,96,384}, r in {2,3,4}."""
+    p = plan(kind, n, 2**20, PAPER_DEFAULT, r=r)
+    assert p.schedule.kind == kind and p.schedule.n == n and p.schedule.r == r
+    t = collective_time(p.schedule, 2**20, PAPER_DEFAULT, validate=(n <= 96))
+    assert t.total == pytest.approx(p.predicted_time, rel=1e-12)
+
+
+def test_higher_radix_fewer_phases():
+    """Radix r collapses the phase count to ceil(log_r n) (Section 3.1
+    multiport); per-phase sub-steps multiply by at most r - 1."""
+    for n in (64, 96, 384):
+        assert num_steps(n, 4) <= num_steps(n, 3) <= num_steps(n, 2)
+        s2 = schedule_length("a2a", n, 2)
+        assert s2 == num_steps(n, 2)  # radix 2: one sub-step per phase
