@@ -1,6 +1,6 @@
 PYTHONPATH := src
 
-.PHONY: test bench bench-smoke sweep lint
+.PHONY: test bench bench-smoke plan-bench sweep lint
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -12,6 +12,11 @@ bench:
 # Tiny generalized schedule sweep: catches benchmark/scheduler rot in CI.
 bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --sweep --smoke
+
+# Candidate-set planning timings + DP relaxation counts at n in {96, 384}:
+# all-R single-pass DP vs the legacy per-R loop, recorded to BENCH_planner.json.
+plan-bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.planner_bench --json BENCH_planner.json
 
 # Full n x r x m sweep, recorded for the perf trajectory.
 sweep:

@@ -1,0 +1,100 @@
+"""Planner DP benchmark: all-R single-pass DP vs the legacy per-R loop.
+
+Times full candidate-set generation (all three collectives, every strategy
+family, every R) and counts `_partition_dp` cell relaxations for both the
+current all-R implementation (`core.schedules.candidate_schedules`, one DP
+table per family with O(1) segment costs) and the pre-planner per-R
+reference (`core.schedules._legacy_candidate_schedules`, one capped DP per
+(family, R) with O(segment) costs).
+
+Run via ``make plan-bench``; results land in BENCH_planner.json and the CI
+smoke job re-runs it on every push to catch DP-work regressions.  The
+acceptance bar is relaxation_ratio >= 5 at n = 384 (also asserted in
+tests/test_planner.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+KINDS = ("a2a", "rs", "ag")
+
+
+def bench_candidate_planning(ns=(96, 384), r: int = 2, m: int = 16 * 2**20) -> dict:
+    from repro.core import PAPER_DEFAULT
+    from repro.core import schedules as S
+
+    cm = PAPER_DEFAULT
+    rows = []
+    for n in ns:
+        S.clear_schedule_caches()
+        S.reset_dp_stats()
+        t0 = time.perf_counter()
+        for kind in KINDS:
+            S.candidate_schedules(kind, n, float(m), cm, r=r)
+        us_all = (time.perf_counter() - t0) * 1e6
+        stats_all = S.dp_stats()
+
+        S.reset_dp_stats()
+        t0 = time.perf_counter()
+        for kind in KINDS:
+            S._legacy_candidate_schedules(kind, n, float(m), cm, r=r)
+        us_per_r = (time.perf_counter() - t0) * 1e6
+        stats_per_r = S.dp_stats()
+
+        rows.append({
+            "n": n, "r": r, "m_bytes": m, "kinds": list(KINDS),
+            "relaxations_all_r": stats_all["relaxations"],
+            "relaxations_per_r": stats_per_r["relaxations"],
+            "relaxation_ratio": round(
+                stats_per_r["relaxations"] / max(1, stats_all["relaxations"]), 2),
+            "dp_calls_all_r": stats_all["dp_calls"],
+            "dp_calls_per_r": stats_per_r["dp_calls"],
+            "candidate_gen_us_all_r": round(us_all, 1),
+            "candidate_gen_us_per_r": round(us_per_r, 1),
+            "wall_speedup": round(us_per_r / max(1e-9, us_all), 2),
+        })
+    return {
+        "meta": {
+            "what": "full candidate-set planning: all-R single-pass DP vs "
+                    "legacy per-R loop (DP work only; candidate evaluation "
+                    "via collective_time is identical on both sides)",
+            "cost_model": {"alpha_s": cm.alpha_s, "alpha_h": cm.alpha_h,
+                           "bandwidth": cm.bandwidth, "delta": cm.delta},
+        },
+        "rows": rows,
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ns", default="96,384")
+    ap.add_argument("--radix", type=int, default=2)
+    ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--min-ratio", type=float, default=5.0,
+                    help="fail (exit 1) if any row's relaxation_ratio drops "
+                         "below this — the DP-work regression gate run in CI")
+    args = ap.parse_args(argv)
+    out = bench_candidate_planning(
+        ns=tuple(int(v) for v in args.ns.split(",")), r=args.radix)
+    print("n,r,relax_all_r,relax_per_r,ratio,us_all_r,us_per_r,wall_speedup")
+    for row in out["rows"]:
+        print(f"{row['n']},{row['r']},{row['relaxations_all_r']},"
+              f"{row['relaxations_per_r']},{row['relaxation_ratio']},"
+              f"{row['candidate_gen_us_all_r']},{row['candidate_gen_us_per_r']},"
+              f"{row['wall_speedup']}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"# wrote {len(out['rows'])} rows to {args.json}")
+    bad = [r for r in out["rows"] if r["relaxation_ratio"] < args.min_ratio]
+    if bad:
+        print(f"# FAIL: relaxation_ratio below {args.min_ratio} at "
+              f"n={[r['n'] for r in bad]}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -149,17 +149,28 @@ def radix_sweep(
     reported for n <= event_check_max_n where the discrete-event sim is
     cheap; it must sit within the eventsim fluid-limit tolerance (±15%).
     """
-    from repro.core import PAPER_DEFAULT, baselines, collective_time, plan
+    from repro.core import (PAPER_DEFAULT, baselines, clear_schedule_caches,
+                            collective_time)
     from repro.core.eventsim import collective_time_event
+    from repro.planner import Planner, PlanRequest
 
     cm = PAPER_DEFAULT
+    planner = Planner()
     rows = []
     for n in ns:
         for r in radixes:
             for m in ms:
                 for kind in ("a2a", "rs", "ag"):
+                    # plan_us records cold *DP* cost per cell: the memoized
+                    # all-R tables would otherwise make every cell after the
+                    # first a warm lookup, masking DP-cost regressions vs the
+                    # committed baseline.  The step-sequence cache stays warm,
+                    # matching the baseline's per-R planner semantics.
+                    clear_schedule_caches()
                     t0 = time.perf_counter()
-                    p = plan(kind, n, float(m), cm, r=r)
+                    p = planner.plan(PlanRequest(kind=kind, n=n,
+                                                 m_bytes=float(m),
+                                                 cost_model=cm, r=r))
                     plan_us = (time.perf_counter() - t0) * 1e6
                     t_bridge = collective_time(p.schedule, float(m), cm,
                                                validate=(n <= 96)).total

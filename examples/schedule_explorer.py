@@ -10,18 +10,22 @@ and the generalized scenario space beyond the paper (any n, radix r):
   PYTHONPATH=src python examples/schedule_explorer.py \
       --collective a2a --n 96 --radix 3 --m-mb 4
 
-prints every baseline, the BRIDGE plan (schedule + R), and the speedups.
+prints the BRIDGE plan (schedule + R), the planner's ranked alternatives
+table, every baseline, and the speedups.  Planning goes through the unified
+`repro.planner` API; pass --save-plan to write the lossless PlanResult JSON.
 """
 import argparse
 
-from repro.core import (PAPER_DEFAULT, baselines, collective_time, plan)
+from repro.core import PAPER_DEFAULT, baselines, collective_time
+from repro.planner import Planner, PlanRequest
 
 MB = 1024.0 ** 2
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--collective", default="a2a", choices=["a2a", "rs", "ag"])
+    ap.add_argument("--collective", default="a2a",
+                    choices=["a2a", "rs", "ag", "ar"])
     ap.add_argument("--n", type=int, default=64)
     ap.add_argument("--m-mb", type=float, default=4.0)
     ap.add_argument("--delta-us", type=float, default=10.0)
@@ -30,29 +34,60 @@ def main():
                     help="OCS ports (< 2n engages the Section 3.7 model)")
     ap.add_argument("--radix", type=int, default=2,
                     help="Bruck radix r (mixed-radix generalization; 2 = paper)")
+    ap.add_argument("--max-r", type=int, default=None,
+                    help="cap on reconfigurations R")
+    ap.add_argument("--top", type=int, default=5,
+                    help="alternatives table rows to print")
+    ap.add_argument("--save-plan", default=None, metavar="PATH",
+                    help="write the PlanResult JSON (lossless, cacheable)")
     args = ap.parse_args()
 
     n, m = args.n, args.m_mb * MB
     cm = PAPER_DEFAULT.replace(delta=args.delta_us * 1e-6,
                                alpha_h=args.alpha_h_us * 1e-6)
 
-    p = plan(args.collective, n, m, cm, paper_faithful=True, r=args.radix)
-    t_bridge = collective_time(p.schedule, m, cm, ports=args.ports).total
-    print(f"BRIDGE plan: {p.strategy}  x={p.schedule.x}")
-    print(f"  completion time {t_bridge * 1e3:.3f} ms\n")
+    res = Planner().plan(PlanRequest(
+        kind=args.collective, n=n, m_bytes=m, cost_model=cm, r=args.radix,
+        paper_faithful=True, max_R=args.max_r, ports=args.ports))
+    t_bridge = res.predicted_time
+    if args.collective == "ar":
+        print(f"BRIDGE plan: {res.strategy}")
+        print(f"  rs x={res.rs_schedule.x}  ag x={res.ag_schedule.x}")
+    else:
+        print(f"BRIDGE plan: {res.strategy}  x={res.schedule.x}")
+        t_bridge = collective_time(res.schedule, m, cm, ports=args.ports).total
+    print(f"  completion time {t_bridge * 1e3:.3f} ms")
 
-    rows = [("S-BRUCK (static)",
-             baselines.s_bruck(args.collective, n, m, cm, r=args.radix).total),
-            ("G-BRUCK (every step)",
-             baselines.g_bruck(args.collective, n, m, cm, r=args.radix).total)]
-    if args.collective in ("rs", "ag"):
-        rows.append(("RING", baselines.ring(args.collective, n, m, cm).total))
-        t_rhd, R = baselines.r_hd_optimal(args.collective, n, m, cm,
-                                          r=args.radix)
+    print(f"\n  ranked alternatives (top {args.top} of {len(res.alternatives)}):")
+    for alt in res.alternatives[:args.top]:
+        r_str = f"R={alt.R}" if alt.R is not None else "-"
+        print(f"    {alt.strategy:<22s} {alt.impl:<6s} {r_str:<6s}"
+              f" {alt.predicted_time * 1e3:10.3f} ms")
+    print()
+
+    kind = args.collective
+    if kind == "ar":
+        t_static = (baselines.s_bruck("rs", n, m, cm, r=args.radix).total
+                    + baselines.s_bruck("ag", n, m, cm, r=args.radix).total)
+        rows = [("S-BRUCK (static)", t_static)]
+    else:
+        rows = [("S-BRUCK (static)",
+                 baselines.s_bruck(kind, n, m, cm, r=args.radix).total),
+                ("G-BRUCK (every step)",
+                 baselines.g_bruck(kind, n, m, cm, r=args.radix).total)]
+    if kind in ("rs", "ag", "ar"):
+        rows.append(("RING", baselines.ring(kind, n, m, cm).total))
+    if kind in ("rs", "ag"):
+        t_rhd, R = baselines.r_hd_optimal(kind, n, m, cm, r=args.radix)
         rows.append((f"R-HD (R*={R})", t_rhd.total))
     for name, t in rows:
         print(f"  {name:<22s} {t * 1e3:10.3f} ms   bridge speedup "
               f"{t / t_bridge:6.2f}x")
+
+    if args.save_plan:
+        with open(args.save_plan, "w") as f:
+            f.write(res.to_json(indent=1))
+        print(f"\nwrote plan to {args.save_plan}")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,19 @@
-"""JAX version compatibility shims for the collectives package.
+"""JAX version compatibility shims (collectives, kernels, launch).
 
-The repo targets a range of JAX releases; the collectives only rely on two
-APIs whose home has moved across versions.
+The repo targets a range of JAX releases; everything that relies on an API
+whose home or name has moved across versions goes through here.  Current
+shims and the drift they triage:
+
+  axis_size              `jax.lax.axis_size` is new; old releases constant-
+                         fold `psum(1)` instead.
+  shard_map              moved from `jax.experimental.shard_map` to `jax.
+                         shard_map`, and `check_rep` was renamed `check_vma`.
+  pallas_compiler_params `jax.experimental.pallas.tpu.TPUCompilerParams` was
+                         renamed `CompilerParams` (jax 0.6); constructing it
+                         through this helper works on both spellings.
+  cost_analysis_dict     `Compiled.cost_analysis()` returned a one-element
+                         list of dicts on older releases and a flat dict on
+                         newer ones; normalize to a dict.
 """
 from __future__ import annotations
 
@@ -37,3 +49,42 @@ def shard_map(*args, **kwargs):
         kwargs = dict(kwargs)
         kwargs["check_rep"] = kwargs.pop("check_vma")
         return fn(*args, **kwargs)
+
+
+def pcast(x, axis_names, to: str = "varying"):
+    """`jax.lax.pcast` (varying-manual-axes casts, new jax) or identity.
+
+    Releases without the vma system (pre-`check_vma` shard_map) treat
+    replicated and varying values interchangeably inside shard_map, so the
+    cast is a no-op there.
+    """
+    fn = getattr(jax.lax, "pcast", None)
+    if fn is None:
+        return x
+    return fn(x, axis_names, to=to)
+
+
+def pallas_compiler_params(**kwargs):
+    """TPU Pallas compiler params across the TPUCompilerParams rename.
+
+    jax >= 0.6 spells it `pltpu.CompilerParams`; 0.4/0.5 releases spell it
+    `pltpu.TPUCompilerParams` with the same fields (dimension_semantics, ...).
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """`Compiled.cost_analysis()` normalized to a flat dict.
+
+    Older jax returned `[{...}]` (one entry per computation), newer returns
+    `{...}`; either may be None on backends without cost analysis.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    return dict(cost) if cost else {}

@@ -1,12 +1,20 @@
 """Glue: BRIDGE schedule synthesis -> collective implementation choice.
 
 `plan_gradient_sync` is the deployment entry point: given the data-parallel
-axis size and the gradient payload, it runs the paper's Section 3.6 optimizer
-under the hardware cost model and returns which collective implementation the
-training step should lower (and with which reconfiguration schedules).
+axis size and the gradient payload, it plans the paper's Section 3.6
+composite AllReduce under the hardware cost model and returns which
+collective implementation the training step should lower (and with which
+reconfiguration schedules).
 
-On a static TPU fabric the three implementations trade off exactly the terms
-the paper's model scores (DESIGN.md Section 3):
+It is a documented thin wrapper over the unified planner: it issues one
+`repro.planner.PlanRequest` with the composite kind ``ar`` (= RS phase + AG
+phase, Rabenseifner decomposition) and maps the `PlanResult` back onto the
+legacy `CollectivePlan` shape.  Use `repro.planner` directly for the ranked
+alternatives table, constraints (max R / delta budget), objectives, and
+plan serialization.
+
+On a static TPU fabric the implementations trade off exactly the terms the
+paper's model scores (DESIGN.md Section 3):
   ring  : 2(n-1) unit-offset steps — bandwidth-optimal, latency Omega(n)
   bruck : 2 log2(n) steps at offsets 2^k — latency-optimal, h_k-hop permutes
   psum  : XLA's built-in (typically ring/tree hybrid) as the oracle fallback
@@ -15,11 +23,10 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core import CostModel, plan
-from repro.core.baselines import ring as ring_cost
+from repro.core import CostModel
 from repro.core.cost_model import TPU_V5E
 from repro.core.schedules import Schedule
-from repro.core.simulator import allreduce_time
+from repro.planner import Planner, PlanRequest, default_strategy_names
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,35 +49,36 @@ def plan_gradient_sync(
 
     fabric='static' (TPU ICI): Bruck is costed with *static* semantics — a
     step at offset 2^k pays h = c = 2^k regardless of schedule (there is no
-    OCS to rewire; DESIGN.md S3).  fabric='ocs' uses the paper's model where
-    reconfigurations reset hop distances, and the returned schedules drive
-    the optical fabric.
+    OCS to rewire; DESIGN.md S3) and the returned schedules are None so the
+    lowering emits one ppermute per Bruck step.  fabric='ocs' uses the
+    paper's model where reconfigurations reset hop distances, and the
+    returned schedules drive the optical fabric.
+
+    Thin wrapper over ``Planner().plan(PlanRequest(kind='ar', ...))``;
+    signature and behavior are unchanged from the pre-planner version.
     """
     cm = cm or TPU_V5E
-    alts: dict[str, float] = {}
-    rs = ag = None
-    if "bruck" in allow and n > 1:
-        if fabric == "ocs":
-            rs = plan("rs", n, m_bytes, cm).schedule
-            ag = plan("ag", n, m_bytes, cm).schedule
-            alts["bruck"] = allreduce_time(rs, ag, m_bytes, cm).total
-        else:
-            # static fabric: hardware routes each offset-2^k permute; cost it
-            # with the static (R=0) model and leave schedules None so the
-            # lowering emits one ppermute per Bruck step.
-            from repro.core import static_schedule
-            alts["bruck"] = allreduce_time(
-                static_schedule("rs", n), static_schedule("ag", n),
-                m_bytes, cm).total
-    if "ring" in allow and n > 1:
-        alts["ring"] = ring_cost("ar", n, m_bytes, cm).total
-    if not alts:
+    names: tuple[str, ...] = ()
+    if "bruck" in allow:
+        names += default_strategy_names()
+    if "ring" in allow:
+        names += ("ring",)
+    if n <= 1 or not names:
         return CollectivePlan("psum", None, None, 0.0, {})
-    impl = min(alts, key=alts.get)  # type: ignore[arg-type]
+
+    res = Planner().plan(PlanRequest(
+        kind="ar", n=n, m_bytes=float(m_bytes), cost_model=cm,
+        fabric=fabric, strategies=names))
+
+    alts: dict[str, float] = {}
+    for a in res.alternatives:
+        t = alts.get(a.impl)
+        alts[a.impl] = a.predicted_time if t is None else min(t, a.predicted_time)
+    use_schedules = res.impl == "bruck" and fabric == "ocs"
     return CollectivePlan(
-        impl=impl,
-        rs_schedule=rs if impl == "bruck" else None,
-        ag_schedule=ag if impl == "bruck" else None,
-        predicted_time=alts[impl],
+        impl=res.impl,
+        rs_schedule=res.rs_schedule if use_schedules else None,
+        ag_schedule=res.ag_schedule if use_schedules else None,
+        predicted_time=res.predicted_time,
         alternatives=alts,
     )

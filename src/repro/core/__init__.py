@@ -8,10 +8,14 @@ from .bruck import (Collective, Step, a2a_steps, ag_steps, is_pow2, num_steps,
                     simulate_ag_data, simulate_rs_data, steps_for)
 from .cost_model import (OCS_TECHNOLOGIES, PAPER_DEFAULT, TPU_V5E, CostModel,
                          gbps, ocs_ports, ocs_preset)
-from .schedules import (Plan, Schedule, ag_transmission_optimal,
-                        candidate_schedules, cstar_a2a, every_step_schedule,
-                        full_cost_optimal, periodic, periodic_a2a, plan,
-                        rs_transmission_optimal, static_schedule)
+from .schedules import (Plan, Schedule, SegmentTables, ag_transmission_optimal,
+                        ag_transmission_optimal_all, candidate_schedules,
+                        clear_schedule_caches, cstar_a2a, dp_stats,
+                        every_step_schedule, full_cost_optimal,
+                        full_cost_optimal_all, periodic, periodic_a2a,
+                        periodic_a2a_all, periodic_all, plan, reset_dp_stats,
+                        rs_transmission_optimal, rs_transmission_optimal_all,
+                        static_schedule)
 from .simulator import StepCost, TimeBreakdown, allreduce_time, collective_time
 from .subrings import BlockedRing, Topology, ring, subring_topology
 
@@ -23,9 +27,13 @@ __all__ = [
     "simulate_rs_data", "steps_for",
     "OCS_TECHNOLOGIES", "PAPER_DEFAULT", "TPU_V5E", "CostModel", "gbps",
     "ocs_ports", "ocs_preset",
-    "Plan", "Schedule", "ag_transmission_optimal", "candidate_schedules",
-    "cstar_a2a", "every_step_schedule", "full_cost_optimal", "periodic",
-    "periodic_a2a", "plan", "rs_transmission_optimal", "static_schedule",
+    "Plan", "Schedule", "SegmentTables", "ag_transmission_optimal",
+    "ag_transmission_optimal_all", "candidate_schedules",
+    "clear_schedule_caches", "cstar_a2a", "dp_stats", "every_step_schedule",
+    "full_cost_optimal", "full_cost_optimal_all", "periodic", "periodic_a2a",
+    "periodic_a2a_all", "periodic_all", "plan", "reset_dp_stats",
+    "rs_transmission_optimal", "rs_transmission_optimal_all",
+    "static_schedule",
     "StepCost", "TimeBreakdown", "allreduce_time", "collective_time",
     "BlockedRing", "Topology", "ring", "subring_topology", "baselines",
 ]

@@ -31,6 +31,13 @@ class StepCost:
     reconfigured: bool
     time: float
 
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "StepCost":
+        return StepCost(**d)
+
 
 @dataclasses.dataclass(frozen=True)
 class TimeBreakdown:
@@ -61,6 +68,26 @@ class TimeBreakdown:
             t += sc.time
             out.append(t)
         return out
+
+    def to_dict(self) -> dict:
+        """Lossless plain-data form (floats survive JSON bit-exactly)."""
+        return {
+            "startup": self.startup,
+            "hop_latency": self.hop_latency,
+            "transmission": self.transmission,
+            "reconfig": self.reconfig,
+            "steps": [sc.to_dict() for sc in self.steps],
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "TimeBreakdown":
+        return TimeBreakdown(
+            startup=d["startup"],
+            hop_latency=d["hop_latency"],
+            transmission=d["transmission"],
+            reconfig=d["reconfig"],
+            steps=tuple(StepCost.from_dict(sc) for sc in d.get("steps", [])),
+        )
 
 
 def collective_time(

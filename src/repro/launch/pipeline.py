@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.collectives._compat import axis_size as _axis_size
+from repro.collectives._compat import pcast as _pcast
+from repro.collectives._compat import shard_map as _shard_map
 
 
 def _shift_perm(n: int, offset: int) -> list[tuple[int, int]]:
@@ -43,8 +45,8 @@ def pipeline_apply(stage_fn, stage_params, x_micro, axis_name: str):
     carry = jnp.zeros(mb_shape, x_micro.dtype)
     # mark the loop state as device-varying over the pipeline axis (the loop
     # body mixes in axis_index / ppermute results, which are varying)
-    out = jax.lax.pcast(out, (axis_name,), to="varying")
-    carry = jax.lax.pcast(carry, (axis_name,), to="varying")
+    out = _pcast(out, (axis_name,), to="varying")
+    carry = _pcast(carry, (axis_name,), to="varying")
 
     def tick(t, state):
         out, carry = state
@@ -86,7 +88,7 @@ def run_pipeline(mesh, axis_name, stage_fn, all_stage_params, x, n_micro):
         # broadcast final-stage outputs to every stage for uniform return
         return jax.lax.psum(out, axis_name)
 
-    out = jax.shard_map(
+    out = _shard_map(
         body, mesh=mesh,
         in_specs=(P(axis_name), P()),
         out_specs=P(),

@@ -1,0 +1,35 @@
+"""Unified planning API for BRIDGE collectives (paper Sections 3.3-3.6).
+
+One entry point for all four collectives — All-to-All, Reduce-Scatter,
+AllGather, and the composite AllReduce (``ar`` = RS + AG):
+
+    from repro.planner import Planner, PlanRequest
+
+    res = Planner().plan(PlanRequest(kind="rs", n=96, m_bytes=16 * 2**20, r=3))
+    res.schedule, res.predicted_time, res.breakdown, res.alternatives
+    cached = PlanResult.from_json(res.to_json())   # lossless round trip
+
+Strategy families are pluggable via the registry (`register_strategy`);
+importing this package registers the built-ins (periodic, rs-early, ag-late,
+exact-dp, static, every-step, ring).  The legacy `repro.core.plan` and
+`repro.collectives.plan_gradient_sync` entry points are thin shims over this
+package.
+"""
+from .api import (Candidate, PlanRequest, PlanResult,  # noqa: F401
+                  RankedAlternative)
+from .planner import Planner  # noqa: F401
+from .registry import (StrategyInfo, available_strategies,  # noqa: F401
+                       default_strategy_names, get_strategy,
+                       register_strategy, select_strategies,
+                       unregister_strategy)
+
+from . import strategies  # noqa: F401, E402  (registers the built-in families)
+
+__all__ = [
+    "Candidate", "PlanRequest", "PlanResult", "RankedAlternative",
+    "Planner",
+    "StrategyInfo", "available_strategies", "default_strategy_names",
+    "get_strategy", "register_strategy", "select_strategies",
+    "unregister_strategy",
+    "strategies",
+]

@@ -1,0 +1,243 @@
+"""Planner API surface: PlanRequest -> Planner -> PlanResult.
+
+`PlanRequest` describes *what* to plan (collective kind — including the
+composite AllReduce ``ar`` = RS + AG —, world size, radix, payload, cost
+model, fabric, objective, constraints) and optionally *how* (an explicit
+strategy subset from the registry).  `PlanResult` carries the winning
+schedule(s), the full `TimeBreakdown`, a ranked table of every evaluated
+alternative, and lossless JSON (de)serialization so plans can be cached on
+disk and shipped as benchmark artifacts.
+
+All floats survive the JSON round trip bit-exactly (json uses repr), and
+schedules are plain (kind, n, x, r) tuples, so
+``PlanResult.from_json(res.to_json())`` reconstructs bit-identical schedules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Literal
+
+from repro.core.cost_model import PAPER_DEFAULT, CostModel
+from repro.core.schedules import Schedule
+from repro.core.simulator import TimeBreakdown
+
+PlanKind = Literal["a2a", "rs", "ag", "ar"]
+PLAN_KINDS = ("a2a", "rs", "ag", "ar")
+Fabric = Literal["static", "ocs"]
+Objective = Literal["time", "latency", "transmission"]
+OBJECTIVES = ("time", "latency", "transmission")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanRequest:
+    """One planning problem for the unified `Planner`.
+
+    kind          : 'a2a' | 'rs' | 'ag' | 'ar' (composite AllReduce = RS+AG).
+    n, r          : world size and Bruck radix (r=2 is the paper's pattern).
+    m_bytes       : total per-node payload in bytes (the paper's m).
+    cost_model    : alpha-beta-delta parameters (Section 2).
+    fabric        : 'ocs' (reconfigurable, the paper's setting) or 'static'
+                    (no OCS: only R=0 schedules are feasible; DESIGN.md S3).
+    objective     : 'time' (total completion time, Section 3.6), 'latency'
+                    (startup + hop latency + reconfig), or 'transmission'
+                    (transmission + reconfig) — selects the score used to
+                    rank candidates; predicted_time is always the total.
+    paper_faithful: restrict to the paper's schedule families (drops the
+                    beyond-paper exact-dp strategy).
+    strategies    : explicit registry subset (None = all default strategies).
+    max_R         : cap on reconfigurations per collective execution; for
+                    the composite 'ar' the cap covers RS + AG together (the
+                    best split across the phases is searched; the RS->AG
+                    transition delta is topology-dependent and not counted).
+    delta_budget  : cap on total reconfiguration time R * delta, seconds
+                    (combined with max_R; the tighter bound wins).
+    ports         : OCS port count; < 2n engages the Section 3.7 blocked-ring
+                    distance floor during evaluation.
+    """
+
+    kind: PlanKind
+    n: int
+    m_bytes: float
+    cost_model: CostModel = PAPER_DEFAULT
+    r: int = 2
+    fabric: Fabric = "ocs"
+    objective: Objective = "time"
+    paper_faithful: bool = False
+    strategies: tuple[str, ...] | None = None
+    max_R: int | None = None
+    delta_budget: float | None = None
+    ports: int | None = None
+
+    def __post_init__(self):
+        if self.kind not in PLAN_KINDS:
+            raise ValueError(f"kind must be one of {PLAN_KINDS}, got {self.kind!r}")
+        if self.n < 2:
+            raise ValueError(f"need at least 2 nodes, got n={self.n}")
+        if self.r < 2:
+            raise ValueError(f"radix must be >= 2, got r={self.r}")
+        if self.m_bytes < 0:
+            raise ValueError(f"payload must be >= 0, got m_bytes={self.m_bytes}")
+        if self.fabric not in ("static", "ocs"):
+            raise ValueError(f"fabric must be 'static' or 'ocs', got {self.fabric!r}")
+        if self.objective not in OBJECTIVES:
+            raise ValueError(
+                f"objective must be one of {OBJECTIVES}, got {self.objective!r}")
+        if self.max_R is not None and self.max_R < 0:
+            raise ValueError(f"max_R must be >= 0, got {self.max_R}")
+        if self.delta_budget is not None and self.delta_budget < 0:
+            raise ValueError(f"delta_budget must be >= 0, got {self.delta_budget}")
+        if self.ports is not None and self.ports < 1:
+            raise ValueError(f"ports must be >= 1, got {self.ports}")
+        if self.strategies is not None and not isinstance(self.strategies, tuple):
+            object.__setattr__(self, "strategies", tuple(self.strategies))
+        object.__setattr__(self, "m_bytes", float(self.m_bytes))
+
+    def effective_max_R(self) -> int | None:
+        """Tightest reconfiguration cap implied by max_R and delta_budget."""
+        caps = []
+        if self.max_R is not None:
+            caps.append(self.max_R)
+        if self.delta_budget is not None:
+            d = self.cost_model.delta
+            caps.append(int(self.delta_budget / d) if d > 0 else None)
+            caps = [c for c in caps if c is not None]
+        return min(caps) if caps else None
+
+    def to_dict(self) -> dict:
+        return {
+            "kind": self.kind, "n": self.n, "m_bytes": self.m_bytes,
+            "cost_model": _cost_model_to_dict(self.cost_model),
+            "r": self.r, "fabric": self.fabric, "objective": self.objective,
+            "paper_faithful": self.paper_faithful,
+            "strategies": list(self.strategies) if self.strategies is not None else None,
+            "max_R": self.max_R, "delta_budget": self.delta_budget,
+            "ports": self.ports,
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "PlanRequest":
+        strategies = d.get("strategies")
+        return PlanRequest(
+            kind=d["kind"], n=d["n"], m_bytes=d["m_bytes"],
+            cost_model=CostModel(**d["cost_model"]),
+            r=d.get("r", 2), fabric=d.get("fabric", "ocs"),
+            objective=d.get("objective", "time"),
+            paper_faithful=d.get("paper_faithful", False),
+            strategies=tuple(strategies) if strategies is not None else None,
+            max_R=d.get("max_R"), delta_budget=d.get("delta_budget"),
+            ports=d.get("ports"),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One evaluable alternative produced by a strategy.
+
+    ``schedule`` is None for non-Bruck implementations (the ring baseline),
+    in which case ``impl`` tells the planner how to cost it.
+    """
+
+    name: str
+    schedule: Schedule | None = None
+    impl: str = "bruck"  # 'bruck' | 'ring'
+
+
+@dataclasses.dataclass(frozen=True)
+class RankedAlternative:
+    """One row of the PlanResult alternatives table (best score first)."""
+
+    strategy: str               # candidate name, e.g. 'periodic(R=2)'
+    impl: str                   # 'bruck' | 'ring'
+    predicted_time: float       # total modeled completion time [s]
+    score: float                # value of the request's objective
+    R: int | None = None        # reconfiguration count (None for non-Bruck)
+    x: tuple[int, ...] | None = None  # schedule bits (None for non-Bruck / ar)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["x"] = list(self.x) if self.x is not None else None
+        return d
+
+    @staticmethod
+    def from_dict(d: dict) -> "RankedAlternative":
+        x = d.get("x")
+        return RankedAlternative(
+            strategy=d["strategy"], impl=d["impl"],
+            predicted_time=d["predicted_time"], score=d["score"],
+            R=d.get("R"), x=tuple(x) if x is not None else None)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanResult:
+    """Outcome of one `Planner.plan` call.
+
+    For single collectives (a2a / rs / ag) the winner is ``schedule``; for
+    the composite ``ar`` the winner is the (rs_schedule, ag_schedule) pair
+    (None when the ring implementation won or the fabric is static-planned
+    without explicit schedules).  ``alternatives`` ranks every evaluated
+    candidate by the request's objective, best first.
+    """
+
+    request: PlanRequest
+    strategy: str
+    impl: str
+    predicted_time: float
+    breakdown: TimeBreakdown
+    schedule: Schedule | None = None
+    rs_schedule: Schedule | None = None
+    ag_schedule: Schedule | None = None
+    alternatives: tuple[RankedAlternative, ...] = ()
+
+    def to_dict(self) -> dict:
+        return {
+            "version": 1,
+            "request": self.request.to_dict(),
+            "strategy": self.strategy,
+            "impl": self.impl,
+            "predicted_time": self.predicted_time,
+            "breakdown": self.breakdown.to_dict(),
+            "schedule": _schedule_to_dict(self.schedule),
+            "rs_schedule": _schedule_to_dict(self.rs_schedule),
+            "ag_schedule": _schedule_to_dict(self.ag_schedule),
+            "alternatives": [a.to_dict() for a in self.alternatives],
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "PlanResult":
+        return PlanResult(
+            request=PlanRequest.from_dict(d["request"]),
+            strategy=d["strategy"],
+            impl=d["impl"],
+            predicted_time=d["predicted_time"],
+            breakdown=TimeBreakdown.from_dict(d["breakdown"]),
+            schedule=_schedule_from_dict(d.get("schedule")),
+            rs_schedule=_schedule_from_dict(d.get("rs_schedule")),
+            ag_schedule=_schedule_from_dict(d.get("ag_schedule")),
+            alternatives=tuple(RankedAlternative.from_dict(a)
+                               for a in d.get("alternatives", [])),
+        )
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @staticmethod
+    def from_json(s: str) -> "PlanResult":
+        return PlanResult.from_dict(json.loads(s))
+
+
+def _cost_model_to_dict(cm: CostModel) -> dict:
+    return {"alpha_s": cm.alpha_s, "alpha_h": cm.alpha_h,
+            "bandwidth": cm.bandwidth, "delta": cm.delta}
+
+
+def _schedule_to_dict(s: Schedule | None) -> dict | None:
+    if s is None:
+        return None
+    return {"kind": s.kind, "n": s.n, "x": list(s.x), "r": s.r}
+
+
+def _schedule_from_dict(d: dict | None) -> Schedule | None:
+    if d is None:
+        return None
+    return Schedule(kind=d["kind"], n=d["n"], x=tuple(d["x"]), r=d["r"])

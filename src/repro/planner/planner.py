@@ -1,0 +1,179 @@
+"""The unified Planner: one entry point for all four collectives.
+
+Evaluates every candidate from the selected strategy families under the
+request's cost model and fabric, ranks them by the request's objective, and
+returns a `PlanResult` with the winner, its full `TimeBreakdown`, and the
+ranked alternatives table.
+
+The composite AllReduce (`kind='ar'`) follows the Rabenseifner
+decomposition the paper evaluates: the RS and AG phases are planned
+independently (each over the schedule-producing strategies), combined by
+`core.simulator.allreduce_time` (which charges the RS->AG topology
+transition), and compared against implementation-level alternatives such as
+the ring baseline when one is selected (ring registers with default=False;
+name it in `PlanRequest.strategies`, as `plan_gradient_sync` does).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import baselines
+from repro.core.schedules import Schedule, static_schedule
+from repro.core.simulator import TimeBreakdown, allreduce_time, collective_time
+
+from .api import Candidate, PlanRequest, PlanResult, RankedAlternative
+from .registry import select_strategies
+
+
+def _objective_score(bd: TimeBreakdown, objective: str) -> float:
+    if objective == "time":
+        return bd.total
+    if objective == "latency":
+        return bd.startup + bd.hop_latency + bd.reconfig
+    return bd.transmission + bd.reconfig  # "transmission"
+
+
+class Planner:
+    """Plans any of a2a / rs / ag / ar via the strategy registry.
+
+    Stateless: safe to construct per call.  Candidate generation reuses the
+    memoized all-R DP tables in `core.schedules`, so repeated planning at
+    the same (n, r) is cheap.
+    """
+
+    def plan(self, req: PlanRequest) -> PlanResult:
+        if req.kind == "ar":
+            return self._plan_allreduce(req)
+        return self._plan_collective(req)
+
+    # --- single collectives --------------------------------------------------
+
+    def _candidates(self, req: PlanRequest, kind: str):
+        max_R = req.effective_max_R()
+        for si in select_strategies(req, kind):
+            for cand in si.fn(req, kind):
+                sched = cand.schedule
+                if sched is not None:
+                    if max_R is not None and sched.R > max_R:
+                        continue
+                    if req.fabric == "static" and sched.R > 0:
+                        continue  # no OCS to rewire mid-collective
+                yield cand
+
+    def _evaluate(self, req: PlanRequest, kind: str, cand: Candidate) -> TimeBreakdown:
+        if cand.impl == "ring":
+            return baselines.ring(kind, req.n, req.m_bytes, req.cost_model)
+        assert cand.schedule is not None
+        return collective_time(cand.schedule, req.m_bytes, req.cost_model,
+                               ports=req.ports)
+
+    def _plan_collective(self, req: PlanRequest) -> PlanResult:
+        best: tuple[float, Candidate, TimeBreakdown] | None = None
+        ranked: list[RankedAlternative] = []
+        seen_x: set[tuple[int, ...]] = set()
+        for cand in self._candidates(req, req.kind):
+            # families overlap at the endpoints (static == periodic(R=0),
+            # every-step == periodic(R=S-1)); evaluate each schedule once,
+            # first-registered family keeps the name
+            if cand.schedule is not None:
+                if cand.schedule.x in seen_x:
+                    continue
+                seen_x.add(cand.schedule.x)
+            bd = self._evaluate(req, req.kind, cand)
+            score = _objective_score(bd, req.objective)
+            sched = cand.schedule
+            ranked.append(RankedAlternative(
+                strategy=cand.name, impl=cand.impl, predicted_time=bd.total,
+                score=score, R=sched.R if sched is not None else None,
+                x=sched.x if sched is not None else None))
+            if best is None or score < best[0]:
+                best = (score, cand, bd)
+        if best is None:
+            raise ValueError(
+                f"no strategy produced a candidate for {req.kind} "
+                f"(strategies={req.strategies}, constraints may be infeasible)")
+        _, cand, bd = best
+        ranked.sort(key=lambda a: a.score)
+        return PlanResult(
+            request=req, strategy=cand.name, impl=cand.impl,
+            predicted_time=bd.total, breakdown=bd, schedule=cand.schedule,
+            alternatives=tuple(ranked))
+
+    # --- composite AllReduce -------------------------------------------------
+
+    def _plan_rs_ag_phases(self, req: PlanRequest,
+                           sched_names: tuple[str, ...] | None
+                           ) -> tuple[PlanResult, PlanResult]:
+        """Plan the RS and AG phases of an 'ar' request.
+
+        Unconstrained, the phases are independent.  A reconfiguration cap
+        (max_R / delta_budget) applies to the *whole* AllReduce, so the cap
+        is split across the phases and the best split wins (cf.
+        `baselines.bridge_allreduce_fixed_R`); the RS->AG transition delta
+        charged by `allreduce_time` is topology-dependent and not counted
+        against the cap.
+        """
+
+        def sub(kind: str, cap: int | None) -> PlanResult:
+            return self._plan_collective(dataclasses.replace(
+                req, kind=kind, strategies=sched_names,
+                max_R=cap, delta_budget=None))
+
+        total_cap = req.effective_max_R()
+        if total_cap is None:
+            return sub("rs", None), sub("ag", None)
+        best: tuple[float, PlanResult, PlanResult] | None = None
+        for k in range(total_cap + 1):
+            rs_res = sub("rs", k)
+            ag_res = sub("ag", total_cap - k)
+            t = allreduce_time(rs_res.schedule, ag_res.schedule, req.m_bytes,
+                               req.cost_model, ports=req.ports)
+            score = _objective_score(t, req.objective)
+            if best is None or score < best[0]:
+                best = (score, rs_res, ag_res)
+        assert best is not None
+        return best[1], best[2]
+
+    def _plan_allreduce(self, req: PlanRequest) -> PlanResult:
+        names = req.strategies
+        sched_names = (None if names is None
+                       else tuple(nm for nm in names if nm != "ring"))
+        want_bruck = sched_names is None or len(sched_names) > 0
+        want_ring = names is not None and "ring" in names
+
+        evaluated: list[tuple[str, str, TimeBreakdown,
+                              Schedule | None, Schedule | None]] = []
+        if want_bruck:
+            if req.fabric == "ocs":
+                rs_res, ag_res = self._plan_rs_ag_phases(req, sched_names)
+                rs_sched, ag_sched = rs_res.schedule, ag_res.schedule
+                name = f"bruck[{rs_res.strategy} + {ag_res.strategy}]"
+            else:
+                # static fabric: hardware routes each Bruck offset directly;
+                # cost with the R=0 model (DESIGN.md S3).
+                rs_sched = static_schedule("rs", req.n, req.r)
+                ag_sched = static_schedule("ag", req.n, req.r)
+                name = "bruck[static]"
+            assert rs_sched is not None and ag_sched is not None
+            bd = allreduce_time(rs_sched, ag_sched, req.m_bytes,
+                                req.cost_model, ports=req.ports)
+            evaluated.append((name, "bruck", bd, rs_sched, ag_sched))
+        if want_ring:
+            bd = baselines.ring("ar", req.n, req.m_bytes, req.cost_model)
+            evaluated.append(("ring", "ring", bd, None, None))
+        if not evaluated:
+            raise ValueError(
+                f"no strategy produced an AllReduce candidate "
+                f"(strategies={req.strategies})")
+
+        scored = [(_objective_score(e[2], req.objective), e) for e in evaluated]
+        scored.sort(key=lambda p: p[0])
+        _, (name, impl, bd, rs_sched, ag_sched) = scored[0]
+        ranked = tuple(
+            RankedAlternative(strategy=nm, impl=im, predicted_time=b.total,
+                              score=sc, R=(rs.R + ag.R) if rs and ag else None)
+            for sc, (nm, im, b, rs, ag) in scored)
+        return PlanResult(
+            request=req, strategy=name, impl=impl, predicted_time=bd.total,
+            breakdown=bd, rs_schedule=rs_sched, ag_schedule=ag_sched,
+            alternatives=ranked)

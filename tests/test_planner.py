@@ -1,0 +1,302 @@
+"""Unified planner tests: JSON round trip, registry plug-ins, parity with the
+legacy per-R `plan()`, constraints, fabric semantics, and the all-R DP
+relaxation savings."""
+import pytest
+
+from repro.core import PAPER_DEFAULT, collective_time, num_steps
+from repro.core import schedules as core_schedules
+from repro.planner import (Candidate, Planner, PlanRequest, PlanResult,
+                           available_strategies, register_strategy,
+                           unregister_strategy)
+
+MB = 2**20
+
+# the n x r grid of tests/test_schedules.py::test_plan_valid_at_acceptance_grid
+GRID_NS = [6, 12, 48, 96, 384]
+GRID_RS = [2, 3, 4]
+
+
+# --- JSON (de)serialization ---------------------------------------------------
+
+
+@pytest.mark.parametrize("kind,n,r", [("a2a", 64, 2), ("rs", 96, 3),
+                                      ("ag", 48, 2)])
+def test_plan_result_json_round_trip(kind, n, r):
+    req = PlanRequest(kind=kind, n=n, m_bytes=16 * MB,
+                      cost_model=PAPER_DEFAULT, r=r)
+    res = Planner().plan(req)
+    back = PlanResult.from_json(res.to_json())
+    # bit-identical schedules and exact floats (json repr round trip)
+    assert back.schedule == res.schedule
+    assert back.schedule.x == res.schedule.x
+    assert back.predicted_time == res.predicted_time
+    assert back.breakdown == res.breakdown
+    assert back.alternatives == res.alternatives
+    assert back.request == res.request
+    assert back == res
+
+
+def test_plan_result_json_round_trip_allreduce():
+    req = PlanRequest(kind="ar", n=48, m_bytes=4 * MB,
+                      cost_model=PAPER_DEFAULT, fabric="ocs",
+                      strategies=tuple(available_strategies()))
+    res = Planner().plan(req)
+    back = PlanResult.from_json(res.to_json())
+    assert back.rs_schedule == res.rs_schedule
+    assert back.ag_schedule == res.ag_schedule
+    assert back == res
+    # ring participated as an implementation-level alternative
+    assert {a.impl for a in res.alternatives} == {"bruck", "ring"}
+
+
+# --- Registry plug-in ---------------------------------------------------------
+
+
+def test_registered_strategy_participates_in_selection():
+    from repro.core import Schedule
+
+    # a schedule no built-in family produces at n=16 (lens (3, 1))
+    novel = Schedule(kind="a2a", n=16, x=(0, 0, 0, 1))
+
+    @register_strategy("dummy-test", kinds=("a2a",), paper_faithful=False)
+    def dummy(req, kind):
+        yield Candidate("dummy-test", novel)
+
+    try:
+        # explicit selection: the plug-in is the only (and winning) candidate
+        res = Planner().plan(PlanRequest(kind="a2a", n=16, m_bytes=1.0,
+                                         strategies=("dummy-test",)))
+        assert res.strategy == "dummy-test"
+        assert res.schedule == novel
+        # default selection: the plug-in shows up in the alternatives table
+        res = Planner().plan(PlanRequest(kind="a2a", n=16, m_bytes=1.0))
+        assert any(a.strategy == "dummy-test" for a in res.alternatives)
+    finally:
+        unregister_strategy("dummy-test")
+    with pytest.raises(KeyError):
+        Planner().plan(PlanRequest(kind="a2a", n=16, m_bytes=1.0,
+                                   strategies=("dummy-test",)))
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError):
+        register_strategy("periodic")(lambda req, kind: [])
+
+
+# --- Parity with the legacy per-R plan() --------------------------------------
+
+
+@pytest.mark.parametrize("n", GRID_NS)
+@pytest.mark.parametrize("r", GRID_RS)
+@pytest.mark.parametrize("kind", ["a2a", "rs", "ag"])
+def test_parity_with_legacy_plan(kind, n, r):
+    """The Planner never does worse than the pre-planner per-R reference on
+    the full acceptance grid (tolerance covers grouped vs per-step float
+    summation in the exact-dp family)."""
+    m = float(MB)
+    legacy = core_schedules._legacy_plan(kind, n, m, PAPER_DEFAULT, r=r)
+    res = Planner().plan(PlanRequest(kind=kind, n=n, m_bytes=m,
+                                     cost_model=PAPER_DEFAULT, r=r))
+    assert res.predicted_time <= legacy.predicted_time * (1 + 1e-12)
+    # the winner is a real schedule whose simulated time matches the claim
+    t = collective_time(res.schedule, m, PAPER_DEFAULT).total
+    assert t == pytest.approx(res.predicted_time, rel=1e-12)
+
+
+@pytest.mark.parametrize("n", [8, 64, 256])
+@pytest.mark.parametrize("kind", ["a2a", "rs", "ag"])
+def test_paper_families_bit_identical_to_per_r(kind, n):
+    """pow2 r=2: the all-R DP reproduces the per-R DP schedules bit-for-bit
+    for the paper's families (Table 1 pinning transfers to the planner)."""
+    old = core_schedules._legacy_candidate_schedules(
+        kind, n, 4.0 * MB, PAPER_DEFAULT, paper_faithful=True)
+    new = core_schedules.candidate_schedules(
+        kind, n, 4.0 * MB, PAPER_DEFAULT, paper_faithful=True)
+    assert [(nm, s.x) for nm, s in old] == [(nm, s.x) for nm, s in new]
+
+
+def test_plan_shim_matches_planner():
+    """core.schedules.plan is a thin shim: same winner as the Planner."""
+    res = Planner().plan(PlanRequest(kind="rs", n=96, m_bytes=16.0 * MB,
+                                     cost_model=PAPER_DEFAULT, r=3))
+    p = core_schedules.plan("rs", 96, 16.0 * MB, PAPER_DEFAULT, r=3)
+    assert p.schedule == res.schedule
+    assert p.predicted_time == res.predicted_time
+    assert p.strategy == res.strategy
+
+
+# --- Constraints, fabric, objective -------------------------------------------
+
+
+def test_max_r_constraint_caps_reconfigurations():
+    cm = PAPER_DEFAULT.replace(delta=0.0)  # unconstrained optimum is R=S-1
+    m = 64.0 * MB
+    free = Planner().plan(PlanRequest(kind="a2a", n=64, m_bytes=m,
+                                      cost_model=cm))
+    assert free.schedule.R == num_steps(64) - 1
+    capped = Planner().plan(PlanRequest(kind="a2a", n=64, m_bytes=m,
+                                        cost_model=cm, max_R=2))
+    assert capped.schedule.R <= 2
+    assert all(a.R <= 2 for a in capped.alternatives if a.R is not None)
+
+
+def test_delta_budget_constraint():
+    cm = PAPER_DEFAULT  # delta = 10 us
+    res = Planner().plan(PlanRequest(kind="rs", n=256, m_bytes=64.0 * MB,
+                                     cost_model=cm,
+                                     delta_budget=2.5 * cm.delta))
+    assert res.schedule.R <= 2
+
+
+def test_allreduce_cap_covers_both_phases():
+    """For composite 'ar' the reconfiguration cap applies to RS + AG
+    together, with the best split across the phases."""
+    cm = PAPER_DEFAULT
+    free = Planner().plan(PlanRequest(kind="ar", n=256, m_bytes=64.0 * MB,
+                                      cost_model=cm))
+    free_R = free.rs_schedule.R + free.ag_schedule.R
+    assert free_R > 2  # the cap below actually binds
+    for cap_kw in ({"max_R": 2}, {"delta_budget": 2.5 * cm.delta}):
+        res = Planner().plan(PlanRequest(kind="ar", n=256, m_bytes=64.0 * MB,
+                                         cost_model=cm, **cap_kw))
+        assert res.rs_schedule.R + res.ag_schedule.R <= 2
+        # + at most one topology-transition delta (not counted against cap)
+        assert res.breakdown.reconfig <= 3 * cm.delta
+    # capped at the unconstrained optimum's total, the split recovers it
+    res = Planner().plan(PlanRequest(kind="ar", n=256, m_bytes=64.0 * MB,
+                                     cost_model=cm, max_R=free_R))
+    assert res.predicted_time <= free.predicted_time * (1 + 1e-12)
+
+
+def test_static_fabric_only_r0():
+    res = Planner().plan(PlanRequest(kind="a2a", n=64, m_bytes=4.0 * MB,
+                                     cost_model=PAPER_DEFAULT,
+                                     fabric="static"))
+    assert res.schedule.R == 0
+    assert all(a.R == 0 for a in res.alternatives if a.R is not None)
+
+
+def test_objective_selects_scoring():
+    # transmission objective must pick a schedule whose transmission term is
+    # minimal among candidates, even if its total time is not
+    req_t = PlanRequest(kind="rs", n=128, m_bytes=64.0 * MB,
+                        cost_model=PAPER_DEFAULT.replace(alpha_h=5e-5),
+                        objective="transmission")
+    res_t = Planner().plan(req_t)
+    res_time = Planner().plan(PlanRequest(
+        kind="rs", n=128, m_bytes=64.0 * MB,
+        cost_model=PAPER_DEFAULT.replace(alpha_h=5e-5)))
+    tx = res_t.breakdown.transmission + res_t.breakdown.reconfig
+    tx_time = res_time.breakdown.transmission + res_time.breakdown.reconfig
+    assert tx <= tx_time * (1 + 1e-12)
+
+
+def test_request_validation():
+    with pytest.raises(ValueError):
+        PlanRequest(kind="bogus", n=8, m_bytes=1.0)
+    with pytest.raises(ValueError):
+        PlanRequest(kind="a2a", n=1, m_bytes=1.0)
+    with pytest.raises(ValueError):
+        PlanRequest(kind="a2a", n=8, m_bytes=-1.0)
+    with pytest.raises(ValueError):
+        PlanRequest(kind="a2a", n=8, m_bytes=1.0, fabric="wireless")
+    with pytest.raises(ValueError):
+        PlanRequest(kind="a2a", n=8, m_bytes=1.0, objective="vibes")
+    with pytest.raises(ValueError):
+        PlanRequest(kind="a2a", n=8, m_bytes=1.0, ports=0)
+    with pytest.raises(ValueError):
+        PlanRequest(kind="a2a", n=8, m_bytes=1.0, ports=-4)
+
+
+def test_alternatives_table_has_no_duplicate_schedules():
+    """Family endpoints overlap (static == periodic(R=0), every-step ==
+    periodic(R=S-1)); each schedule is evaluated and listed once."""
+    res = Planner().plan(PlanRequest(kind="a2a", n=64, m_bytes=4.0 * MB,
+                                     cost_model=PAPER_DEFAULT))
+    xs = [a.x for a in res.alternatives if a.x is not None]
+    assert len(xs) == len(set(xs))
+    names = {a.strategy for a in res.alternatives}
+    assert "static" not in names and "every-step" not in names  # deduped
+    # explicitly selected, the endpoint family still plans on its own
+    res = Planner().plan(PlanRequest(kind="a2a", n=64, m_bytes=4.0 * MB,
+                                     cost_model=PAPER_DEFAULT,
+                                     strategies=("static",)))
+    assert res.strategy == "static" and res.schedule.R == 0
+
+
+# --- All-R DP performance ------------------------------------------------------
+
+
+def test_all_r_dp_relaxation_savings():
+    """Acceptance: planning the full candidate set at n=384 performs >= 5x
+    fewer DP cell relaxations than the legacy per-R loop."""
+    m = float(MB)
+    core_schedules.clear_schedule_caches()
+    core_schedules.reset_dp_stats()
+    for kind in ("a2a", "rs", "ag"):
+        core_schedules.candidate_schedules(kind, 384, m, PAPER_DEFAULT, r=2)
+    relax_all = core_schedules.dp_stats()["relaxations"]
+    core_schedules.reset_dp_stats()
+    for kind in ("a2a", "rs", "ag"):
+        core_schedules._legacy_candidate_schedules(kind, 384, m, PAPER_DEFAULT,
+                                                   r=2)
+    relax_per_r = core_schedules.dp_stats()["relaxations"]
+    assert relax_per_r >= 5 * relax_all, (relax_per_r, relax_all)
+
+
+def test_all_r_dp_matches_capped_dp_per_r():
+    """best[i][r] is cap-independent: every all-R entry equals the capped
+    per-R DP bit-for-bit (integer hop objective)."""
+    steps = core_schedules._steps_cached("a2a", 96, 3)
+    tables = core_schedules.SegmentTables(steps)
+    s = len(steps)
+    all_r = core_schedules._partition_dp_all(s, tables.hop_sum)
+    for R in range(s):
+        cost, lens = core_schedules._partition_dp(s, R + 1, tables.hop_sum)
+        assert (cost, tuple(lens)) == all_r[R]
+
+
+def test_segment_tables_match_naive_costs():
+    """O(1) prefix/gcd segment costs equal the O(len) closures exactly for
+    integer hop sums, and to float tolerance for transmission."""
+    for (n, r) in ((96, 3), (384, 2), (48, 4)):
+        steps = core_schedules._steps_cached("rs", n, r)
+        tables = core_schedules.SegmentTables(steps)
+        hop_naive = core_schedules._hop_sum_cost(steps)
+        tx_naive = core_schedules._transmission_cost(steps)
+        S = len(steps)
+        for a in range(S):
+            for b in range(a, S):
+                assert tables.gcd(a, b) == core_schedules._segment_gcd(steps, a, b)
+                assert tables.hop_sum(a, b) == hop_naive(a, b)
+                assert tables.tx_sum(a, b) == pytest.approx(tx_naive(a, b),
+                                                            rel=1e-12)
+
+
+# --- plan_gradient_sync wrapper ------------------------------------------------
+
+
+def test_plan_gradient_sync_is_thin_wrapper():
+    """Unchanged public behavior: same winners/alternatives as planning an
+    'ar' request directly."""
+    from repro.collectives import plan_gradient_sync
+    from repro.planner import default_strategy_names
+
+    cm = PAPER_DEFAULT
+    for fabric in ("static", "ocs"):
+        p = plan_gradient_sync(64, 4.0 * MB, cm, fabric=fabric)
+        res = Planner().plan(PlanRequest(
+            kind="ar", n=64, m_bytes=4.0 * MB, cost_model=cm, fabric=fabric,
+            strategies=default_strategy_names() + ("ring",)))
+        assert p.impl == res.impl
+        assert p.predicted_time == res.predicted_time
+        if p.impl == "bruck" and fabric == "ocs":
+            assert p.rs_schedule == res.rs_schedule
+            assert p.ag_schedule == res.ag_schedule
+        else:
+            assert p.rs_schedule is None and p.ag_schedule is None
+    # psum fallback unchanged
+    p = plan_gradient_sync(1, 4.0 * MB, cm)
+    assert (p.impl, p.predicted_time, p.alternatives) == ("psum", 0.0, {})
+    p = plan_gradient_sync(64, 4.0 * MB, cm, allow=())
+    assert p.impl == "psum"

@@ -123,6 +123,33 @@ def test_rs_reconfigures_earlier_than_periodic_ag_later():
         assert first(rs) <= first(a2a) <= first(ag)
 
 
+def test_cstar_a2a_rejects_invalid_inputs():
+    """The Theorem 3.2 closed form assumes radix-2 offsets on n = 2^s nodes;
+    other inputs used to silently return wrong values and now raise."""
+    cm = PAPER_DEFAULT
+    for n in (6, 48, 96, 384):
+        with pytest.raises(ValueError):
+            cstar_a2a(n, 1, cm, 1024.0)
+    with pytest.raises(ValueError):
+        cstar_a2a(64, -1, cm, 1024.0)
+    with pytest.raises(ValueError):
+        cstar_a2a(64, num_steps(64), cm, 1024.0)  # R must be < s
+    assert cstar_a2a(64, 1, cm, 1024.0) > 0  # valid inputs still work
+
+
+def test_link_offsets_uses_step_cache():
+    """Schedule.link_offsets routes through the shared step cache instead of
+    regenerating the step sequence per call."""
+    from repro.core.schedules import _STEP_CACHE, _steps_cached
+
+    _STEP_CACHE.pop(("ag", 40, 2), None)
+    sched = static_schedule("ag", 40)
+    first = sched.link_offsets()
+    assert ("ag", 40, 2) in _STEP_CACHE
+    assert _steps_cached("ag", 40, 2) is _STEP_CACHE[("ag", 40, 2)]
+    assert sched.link_offsets() == first
+
+
 # --- Cost scaling: Omega(n) -> O(R n^{1/(R+1)}) ------------------------------
 
 
