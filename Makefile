@@ -1,9 +1,13 @@
 PYTHONPATH := src
 
-.PHONY: test bench bench-smoke plan-bench sweep lint
+.PHONY: test test-fast bench bench-smoke plan-bench fabric-bench sweep lint
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+# Tier-1 CI subset: everything not marked slow.
+test-fast:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q -m "not slow"
 
 # Full paper-figure benchmark CSV.
 bench:
@@ -18,9 +22,16 @@ bench-smoke:
 plan-bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.planner_bench --json BENCH_planner.json
 
+# Sparse vs full-pause vs analytic completion times on the asynchronous
+# per-link fabric (FabricSim) over the n x r x delta grid, with the
+# event/analytic ratio and sparse-margin gates; recorded to
+# BENCH_fabric_overlap.json.
+fabric-bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.fabric_bench --json BENCH_fabric_overlap.json
+
 # Full n x r x m sweep, recorded for the perf trajectory.
 sweep:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --sweep --json BENCH_bridge_radix.json
 
 lint:
-	ruff check --select E9,F63,F7,F82 src tests benchmarks examples
+	ruff check --select E,F,W,I src tests benchmarks examples

@@ -1,0 +1,110 @@
+"""Benchmark regression gate: freshly-measured results vs committed baseline.
+
+Usage:
+
+    python -m benchmarks.check_regression BASELINE.json FRESH.json
+
+The file schema is auto-detected from the row keys:
+
+  - planner rows (``wall_speedup``, BENCH_planner.json): the relaxation
+    counts are deterministic and must match the baseline exactly; the wall
+    speedup is timing-noisy, so it only has to stay above ``--wall-frac``
+    of the committed value (and above 1x absolutely).
+  - fabric rows (``event_analytic_ratio``, BENCH_fabric_overlap.json): the
+    event simulator is deterministic, so the event/analytic ratio and the
+    sparse speedup must match the baseline within ``--rel-tol``.
+
+Rows are matched on their identifying keys (n / r / delta), so a smoke run
+covering a subset of the baseline grid still gates every row it produced.
+Exit 1 on any drift.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _index(rows: list[dict], keys: tuple[str, ...]) -> dict:
+    return {tuple(row[k] for k in keys): row for row in rows}
+
+
+def check_planner(base_rows: list[dict], fresh_rows: list[dict],
+                  wall_frac: float) -> tuple[list[str], int]:
+    errors, matched = [], 0
+    base = _index(base_rows, ("n", "r"))
+    for key, fresh in _index(fresh_rows, ("n", "r")).items():
+        if key not in base:
+            continue
+        matched += 1
+        ref = base[key]
+        tag = f"planner n={key[0]} r={key[1]}"
+        for field in ("relaxations_all_r", "relaxations_per_r",
+                      "dp_calls_all_r", "dp_calls_per_r"):
+            if fresh[field] != ref[field]:
+                errors.append(f"{tag}: {field} {fresh[field]} != baseline "
+                              f"{ref[field]} (DP work is deterministic)")
+        floor = max(1.0, wall_frac * ref["wall_speedup"])
+        if fresh["wall_speedup"] < floor:
+            errors.append(f"{tag}: wall_speedup {fresh['wall_speedup']} < "
+                          f"{floor:.2f} (baseline {ref['wall_speedup']}, "
+                          f"frac {wall_frac})")
+    return errors, matched
+
+
+def check_fabric(base_rows: list[dict], fresh_rows: list[dict],
+                 rel_tol: float) -> tuple[list[str], int]:
+    errors, matched = [], 0
+    base = _index(base_rows, ("n", "r", "delta"))
+    for key, fresh in _index(fresh_rows, ("n", "r", "delta")).items():
+        if key not in base:
+            continue
+        matched += 1
+        ref = base[key]
+        tag = f"fabric n={key[0]} r={key[1]} delta={key[2]}"
+        for field in ("event_analytic_ratio", "sparse_speedup"):
+            drift = abs(fresh[field] - ref[field]) / max(abs(ref[field]), 1e-12)
+            if drift > rel_tol:
+                errors.append(f"{tag}: {field} {fresh[field]} drifted "
+                              f"{drift:.2e} from baseline {ref[field]} "
+                              f"(> {rel_tol})")
+    return errors, matched
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("fresh", help="freshly measured JSON")
+    ap.add_argument("--wall-frac", type=float, default=0.25,
+                    help="min fraction of the baseline wall_speedup (planner)")
+    ap.add_argument("--rel-tol", type=float, default=1e-6,
+                    help="relative tolerance for deterministic fabric ratios")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        base = json.load(f)["rows"]
+    with open(args.fresh) as f:
+        fresh = json.load(f)["rows"]
+    if not base or not fresh:
+        print("# FAIL: baseline or fresh result has no rows", file=sys.stderr)
+        sys.exit(1)
+    if ("wall_speedup" in fresh[0]) != ("wall_speedup" in base[0]):
+        print(f"# FAIL: baseline/fresh schema mismatch ({args.baseline} vs "
+              f"{args.fresh}): one is a planner result, the other a fabric "
+              f"result — check the file arguments", file=sys.stderr)
+        sys.exit(1)
+    if "wall_speedup" in fresh[0]:
+        errors, matched = check_planner(base, fresh, args.wall_frac)
+    else:
+        errors, matched = check_fabric(base, fresh, args.rel_tol)
+    if matched == 0:
+        print("# FAIL: no fresh row matches the baseline grid", file=sys.stderr)
+        sys.exit(1)
+    if errors:
+        for e in errors:
+            print(f"# FAIL: {e}", file=sys.stderr)
+        sys.exit(1)
+    print(f"# OK: {matched} rows checked against {args.baseline}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,165 @@
+"""Fabric-level benchmark: sparse vs full-pause vs analytic completion times.
+
+Sweeps the n x r x delta grid and, at each point, runs the same periodic
+BRIDGE schedule through three evaluators:
+
+  - ``analytic``    : the Section 2 closed-form model (`collective_time`);
+  - ``full-pause``  : the synchronized event simulator (global barrier per
+                      sub-step, whole-fabric delta pause) — the legacy
+                      `collective_time_event` semantics;
+  - ``sparse``      : `FabricSim` — asynchronous per-link fabric, delta paid
+                      only on circuits that change, per-node dependencies —
+                      at overlap 0 and at the headline overlap credit.
+
+Gates (exit 1 on violation; re-run in CI against the committed baseline by
+`benchmarks.check_regression`):
+
+  - the full-pause event/analytic ratio stays within ``--tol`` of 1 (the
+    fluid-limit honesty check at benchmark scale);
+  - sparse completion is <= full-pause completion at every grid point;
+  - at ms-scale delta the overlap run hides at least half of the nominal
+    overlap credit ``overlap * R * delta`` (the expected sparse margin).
+
+Also records two scenario rows (straggler, skewed payloads) demonstrating
+the per-link knobs; these are informational, not gated.
+
+Run via ``make fabric-bench``; results land in BENCH_fabric_overlap.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+MB = 1024.0 ** 2
+OVERLAP = 0.75
+
+
+def bench_grid(ns=(8, 16, 32, 48, 96), radices=(2, 3),
+               deltas=(10e-6, 1e-3, 15e-3), m: float = 4 * MB,
+               chunks: int = 16, overlap: float = OVERLAP) -> list[dict]:
+    from repro.core import PAPER_DEFAULT, FabricSim, collective_time, periodic
+    from repro.core.bruck import schedule_length
+
+    rows = []
+    for n in ns:
+        for r in radices:
+            R = min(2, schedule_length("a2a", n, r) - 1)
+            sched = periodic("a2a", n, R, r)
+            for delta in deltas:
+                cm = PAPER_DEFAULT.replace(delta=delta)
+                analytic = collective_time(sched, m, cm).total
+                full = FabricSim(chunks_per_msg=chunks,
+                                 mode="full-pause").run(sched, m, cm)
+                sparse = FabricSim(chunks_per_msg=chunks,
+                                   mode="sparse").run(sched, m, cm)
+                hidden = FabricSim(chunks_per_msg=chunks, mode="sparse",
+                                   overlap=overlap).run(sched, m, cm)
+                rows.append({
+                    "n": n, "r": r, "delta": delta, "R": R,
+                    "m_bytes": m, "chunks": chunks, "overlap": overlap,
+                    "analytic_s": analytic,
+                    "full_pause_s": full.completion,
+                    "sparse_s": sparse.completion,
+                    "sparse_overlap_s": hidden.completion,
+                    "event_analytic_ratio": round(full.completion / analytic, 6),
+                    "sparse_speedup": round(full.completion / hidden.completion, 6),
+                    # overlap credit alone: sparse at overlap=0 minus sparse at
+                    # the headline overlap (the full-pause vs sparse gap also
+                    # contains barrier-removal savings, which are not credit)
+                    "hidden_frac": round(
+                        (sparse.completion - hidden.completion) / (R * delta), 6)
+                    if R else 0.0,
+                })
+    return rows
+
+
+def bench_scenarios(n: int = 32, m: float = 4 * MB, chunks: int = 16) -> list[dict]:
+    """Per-link scenario knobs on the sparse fabric (informational)."""
+    from repro.core import PAPER_DEFAULT, FabricSim, periodic, straggler_speeds
+
+    cm = PAPER_DEFAULT.replace(delta=1e-3)
+    sched = periodic("a2a", n, 2)
+    base = FabricSim(chunks_per_msg=chunks).run(sched, m, cm).completion
+    slow = FabricSim(chunks_per_msg=chunks,
+                     link_speed=straggler_speeds(n, {n // 2: 0.25}))
+    skew = [1.0] * n
+    skew[0] = 4.0  # one hot destination receives 4x the payload
+    skewed = FabricSim(chunks_per_msg=chunks, payload_scale=skew)
+    return [
+        {"scenario": "nominal", "n": n, "completion_s": base},
+        {"scenario": "straggler(kappa=4)", "n": n,
+         "completion_s": slow.run(sched, m, cm).completion},
+        {"scenario": "skew(dest0=4x)", "n": n,
+         "completion_s": skewed.run(sched, m, cm).completion},
+    ]
+
+
+def check_gates(rows: list[dict], tol: float, min_hidden: float) -> list[str]:
+    errors = []
+    for row in rows:
+        key = f"n={row['n']} r={row['r']} delta={row['delta']}"
+        ratio = row["event_analytic_ratio"]
+        if not (1 - tol) <= ratio <= (1 + tol):
+            errors.append(f"{key}: event/analytic ratio {ratio} outside "
+                          f"[{1 - tol}, {1 + tol}]")
+        if row["sparse_s"] > row["full_pause_s"] * (1 + 1e-9):
+            errors.append(f"{key}: sparse {row['sparse_s']} > full-pause "
+                          f"{row['full_pause_s']}")
+        if row["R"] and row["delta"] >= 1e-3 and row["hidden_frac"] < min_hidden:
+            errors.append(f"{key}: hidden_frac {row['hidden_frac']} < "
+                          f"{min_hidden} (overlap credit not realized)")
+    return errors
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small grid for CI (subset of the full grid so the "
+                         "committed baseline still covers every row)")
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="full-pause event/analytic ratio tolerance")
+    ap.add_argument("--min-hidden", type=float, default=0.5 * OVERLAP,
+                    help="min fraction of R*delta the overlap run must hide "
+                         "at ms-scale delta")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        rows = bench_grid(ns=(8, 32), radices=(2,), deltas=(10e-6, 15e-3))
+    else:
+        rows = bench_grid()
+    scen = bench_scenarios()
+    print("n,r,delta,R,analytic_s,full_pause_s,sparse_s,sparse_overlap_s,"
+          "ratio,sparse_speedup,hidden_frac")
+    for row in rows:
+        print(f"{row['n']},{row['r']},{row['delta']},{row['R']},"
+              f"{row['analytic_s']:.6e},{row['full_pause_s']:.6e},"
+              f"{row['sparse_s']:.6e},{row['sparse_overlap_s']:.6e},"
+              f"{row['event_analytic_ratio']},{row['sparse_speedup']},"
+              f"{row['hidden_frac']}")
+    for row in scen:
+        print(f"# scenario {row['scenario']}: {row['completion_s']:.6e} s")
+    errors = check_gates(rows, args.tol, args.min_hidden)
+    if errors:
+        # gate first: never overwrite the committed baseline with violating data
+        for e in errors:
+            print(f"# FAIL: {e}", file=sys.stderr)
+        sys.exit(1)
+    if args.json:
+        out = {
+            "meta": {
+                "what": "sparse vs full-pause vs analytic completion over "
+                        "the n x r x delta grid (FabricSim, "
+                        "BENCH_fabric_overlap baseline)",
+                "overlap": OVERLAP,
+            },
+            "rows": rows,
+            "scenarios": scen,
+        }
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"# wrote {len(rows)} rows to {args.json}")
+
+
+if __name__ == "__main__":
+    main()

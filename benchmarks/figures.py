@@ -8,11 +8,10 @@ model) — see DESIGN.md S8 for the Astra-Sim/ns-3 -> analytic mapping.
 from __future__ import annotations
 
 import itertools
-import math
 import time
 
-from repro.core import (CostModel, PAPER_DEFAULT, baselines, collective_time,
-                        gbps, num_steps, plan)
+from repro.core import (PAPER_DEFAULT, baselines, collective_time,
+                        num_steps, plan)
 
 KB, MB = 1024.0, 1024.0 ** 2
 US, MS = 1e-6, 1e-3

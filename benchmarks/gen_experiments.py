@@ -8,7 +8,7 @@ import glob
 import json
 import os
 
-from .roofline import ICI_BW, PEAK_FLOPS, derive, load_cells
+from .roofline import derive, load_cells
 
 
 def fmt_bytes(b):

@@ -2,7 +2,7 @@
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import (PAPER_DEFAULT, baselines, collective_time, ocs_preset,
+from repro.core import (baselines, collective_time, ocs_preset,
                         periodic_a2a, plan, rs_transmission_optimal)
 
 MB = 1024.0 ** 2

@@ -17,7 +17,7 @@ table, every baseline, and the speedups.  Planning goes through the unified
 import argparse
 
 from repro.core import PAPER_DEFAULT, baselines, collective_time
-from repro.planner import Planner, PlanRequest
+from repro.planner import PlanRequest, Planner
 
 MB = 1024.0 ** 2
 
@@ -34,6 +34,13 @@ def main():
                     help="OCS ports (< 2n engages the Section 3.7 model)")
     ap.add_argument("--radix", type=int, default=2,
                     help="Bruck radix r (mixed-radix generalization; 2 = paper)")
+    ap.add_argument("--fabric", default="ocs",
+                    choices=["ocs", "static", "ocs-overlap"],
+                    help="'ocs-overlap' = sparse reconfiguration with "
+                         "hidden-delta credit (see core/fabricsim.py)")
+    ap.add_argument("--overlap", type=float, default=0.0,
+                    help="fraction of delta hidden behind communication "
+                         "(requires --fabric ocs-overlap)")
     ap.add_argument("--max-r", type=int, default=None,
                     help="cap on reconfigurations R")
     ap.add_argument("--top", type=int, default=5,
@@ -48,14 +55,17 @@ def main():
 
     res = Planner().plan(PlanRequest(
         kind=args.collective, n=n, m_bytes=m, cost_model=cm, r=args.radix,
-        paper_faithful=True, max_R=args.max_r, ports=args.ports))
+        fabric=args.fabric, overlap=args.overlap,
+        paper_faithful=(args.fabric != "ocs-overlap"),
+        max_R=args.max_r, ports=args.ports))
     t_bridge = res.predicted_time
     if args.collective == "ar":
         print(f"BRIDGE plan: {res.strategy}")
         print(f"  rs x={res.rs_schedule.x}  ag x={res.ag_schedule.x}")
     else:
         print(f"BRIDGE plan: {res.strategy}  x={res.schedule.x}")
-        t_bridge = collective_time(res.schedule, m, cm, ports=args.ports).total
+        if args.fabric != "ocs-overlap":
+            t_bridge = collective_time(res.schedule, m, cm, ports=args.ports).total
     print(f"  completion time {t_bridge * 1e3:.3f} ms")
 
     print(f"\n  ranked alternatives (top {args.top} of {len(res.alternatives)}):")
@@ -65,19 +75,30 @@ def main():
               f" {alt.predicted_time * 1e3:10.3f} ms")
     print()
 
+    # under ocs-overlap, score reconfiguring baselines with the same
+    # hidden-delta credit so the printed speedups compare one fabric semantics
+    hidden = args.fabric == "ocs-overlap"
     kind = args.collective
     if kind == "ar":
         t_static = (baselines.s_bruck("rs", n, m, cm, r=args.radix).total
                     + baselines.s_bruck("ag", n, m, cm, r=args.radix).total)
         rows = [("S-BRUCK (static)", t_static)]
     else:
+        if hidden:
+            from repro.core import collective_time_overlap, every_step_schedule
+            t_gbruck = collective_time_overlap(
+                every_step_schedule(kind, n, args.radix), m, cm,
+                args.overlap).total
+        else:
+            t_gbruck = baselines.g_bruck(kind, n, m, cm, r=args.radix).total
         rows = [("S-BRUCK (static)",
                  baselines.s_bruck(kind, n, m, cm, r=args.radix).total),
-                ("G-BRUCK (every step)",
-                 baselines.g_bruck(kind, n, m, cm, r=args.radix).total)]
+                ("G-BRUCK (every step)", t_gbruck)]
     if kind in ("rs", "ag", "ar"):
         rows.append(("RING", baselines.ring(kind, n, m, cm).total))
-    if kind in ("rs", "ag"):
+    if kind in ("rs", "ag") and not hidden:
+        # R-HD's schedule is internal to the baseline; it cannot be re-scored
+        # with the overlap credit, so skip it on the ocs-overlap fabric
         t_rhd, R = baselines.r_hd_optimal(kind, n, m, cm, r=args.radix)
         rows.append((f"R-HD (R*={R})", t_rhd.total))
     for name, t in rows:

@@ -5,10 +5,10 @@ Maps the paper's OCS subring communication pattern onto `shard_map` +
 offset 2^k; the BRIDGE schedule (from `repro.core.schedules`) selects the
 offset decomposition (see DESIGN.md Section 3 for the hardware adaptation).
 """
-from .bruck_a2a import bruck_all_to_all
-from .bruck_rs_ag import bruck_all_gather, bruck_reduce_scatter
 from .allreduce import (bridge_all_reduce, bruck_all_reduce, ring_all_gather,
                         ring_all_reduce, ring_reduce_scatter)
+from .bruck_a2a import bruck_all_to_all
+from .bruck_rs_ag import bruck_all_gather, bruck_reduce_scatter
 from .compression import compressed_all_reduce, make_error_feedback_state
 from .schedule_bridge import CollectivePlan, plan_gradient_sync
 

@@ -7,14 +7,13 @@ followed by a BRIDGE-scheduled AllGather (late reconfigurations).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from repro.core.schedules import Schedule
-from .bruck_rs_ag import bruck_all_gather, bruck_reduce_scatter
+
 from ._compat import axis_size as _axis_size
+from .bruck_rs_ag import bruck_all_gather, bruck_reduce_scatter
 
 
 def _shift_perm(n: int, offset: int) -> list[tuple[int, int]]:

@@ -14,12 +14,12 @@ min(2^k, n - 2^k) hops — the same h_k the cost model scores (DESIGN.md S3).
 """
 from __future__ import annotations
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.bruck import num_steps
+
 from ._compat import axis_size as _axis_size
 
 

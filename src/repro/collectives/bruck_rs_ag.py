@@ -21,13 +21,13 @@ the step offset (hardware-routed; the TPU default).
 """
 from __future__ import annotations
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.bruck import num_steps
 from repro.core.schedules import Schedule
+
 from ._compat import axis_size as _axis_size
 
 

@@ -26,7 +26,7 @@ import dataclasses
 from repro.core import CostModel
 from repro.core.cost_model import TPU_V5E
 from repro.core.schedules import Schedule
-from repro.planner import Planner, PlanRequest, default_strategy_names
+from repro.planner import PlanRequest, Planner, default_strategy_names
 
 
 @dataclasses.dataclass(frozen=True)

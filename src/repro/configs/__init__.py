@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import importlib
 
-from repro.models.config import SHAPES, ArchConfig, ShapeConfig
+from repro.models.config import ArchConfig, SHAPES, ShapeConfig
 
 ARCHS: tuple[str, ...] = (
     "recurrentgemma-9b",

@@ -3,11 +3,13 @@
 Paper: "BRIDGE: Optimizing Collective Communication Schedules in Reconfigurable
 Networks with Reusable Subrings" (Juerss & Schmid, 2026).
 """
+from . import baselines
 from .bruck import (Collective, Step, a2a_steps, ag_steps, is_pow2, num_steps,
                     rs_steps, schedule_length, simulate_a2a_data,
                     simulate_ag_data, simulate_rs_data, steps_for)
-from .cost_model import (OCS_TECHNOLOGIES, PAPER_DEFAULT, TPU_V5E, CostModel,
+from .cost_model import (CostModel, OCS_TECHNOLOGIES, PAPER_DEFAULT, TPU_V5E,
                          gbps, ocs_ports, ocs_preset)
+from .fabricsim import FabricResult, FabricSim, simulate_fabric, straggler_speeds
 from .schedules import (Plan, Schedule, SegmentTables, ag_transmission_optimal,
                         ag_transmission_optimal_all, candidate_schedules,
                         clear_schedule_caches, cstar_a2a, dp_stats,
@@ -16,10 +18,10 @@ from .schedules import (Plan, Schedule, SegmentTables, ag_transmission_optimal,
                         periodic_a2a_all, periodic_all, plan, reset_dp_stats,
                         rs_transmission_optimal, rs_transmission_optimal_all,
                         static_schedule)
-from .simulator import StepCost, TimeBreakdown, allreduce_time, collective_time
+from .simulator import (StepCost, TimeBreakdown, allreduce_time,
+                        allreduce_time_overlap, collective_time,
+                        collective_time_overlap)
 from .subrings import BlockedRing, Topology, ring, subring_topology
-
-from . import baselines  # noqa: E402  (module-level namespace for baselines)
 
 __all__ = [
     "Collective", "Step", "a2a_steps", "ag_steps", "is_pow2", "num_steps",
@@ -34,6 +36,8 @@ __all__ = [
     "periodic_a2a_all", "periodic_all", "plan", "reset_dp_stats",
     "rs_transmission_optimal", "rs_transmission_optimal_all",
     "static_schedule",
-    "StepCost", "TimeBreakdown", "allreduce_time", "collective_time",
+    "FabricResult", "FabricSim", "simulate_fabric", "straggler_speeds",
+    "StepCost", "TimeBreakdown", "allreduce_time", "allreduce_time_overlap",
+    "collective_time", "collective_time_overlap",
     "BlockedRing", "Topology", "ring", "subring_topology", "baselines",
 ]

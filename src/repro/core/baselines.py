@@ -16,11 +16,9 @@
 """
 from __future__ import annotations
 
-import dataclasses
-
-from .bruck import Collective, num_steps, steps_for
+from .bruck import Collective, steps_for
 from .cost_model import CostModel
-from .schedules import (Schedule, every_step_schedule, plan, static_schedule)
+from .schedules import every_step_schedule, plan, static_schedule
 from .simulator import StepCost, TimeBreakdown, collective_time
 
 

@@ -37,7 +37,6 @@ as used throughout the paper's evaluation).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Literal
 
 import numpy as np

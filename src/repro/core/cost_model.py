@@ -40,6 +40,23 @@ class CostModel:
         """Cost of a single communication step (no reconfiguration term)."""
         return self.alpha_s + hops * self.alpha_h + nbytes * congestion * self.beta
 
+    def delta_sparse(self, changed_links: int, overlap: float = 0.0) -> float:
+        """Effective stall of one *sparse* reconfiguration event.
+
+        Only the ``changed_links`` circuits that actually differ between
+        consecutive segments are rewired; the surviving subring links keep
+        carrying traffic, and a fraction ``overlap`` of the switching time is
+        hidden behind concurrent communication (SWOT-style
+        reconfiguration/communication overlap).  Switching is parallel across
+        ports, so any change blocks its dependent paths for the residual
+        ``delta * (1 - overlap)``; a boundary that changes nothing is free.
+        """
+        if not 0.0 <= overlap <= 1.0:
+            raise ValueError(f"overlap must be in [0, 1], got {overlap}")
+        if changed_links <= 0:
+            return 0.0
+        return self.delta * (1.0 - overlap)
+
     def total(self, steps: Iterable[tuple[int, float, float]], n_reconfigs: int) -> float:
         """Sum step costs (hops, nbytes, congestion) plus R * delta."""
         t = n_reconfigs * self.delta

@@ -16,13 +16,17 @@ Relationship to the cost model (tested in tests/test_eventsim.py):
 
 This is the reproduction-honesty layer: BRIDGE/baseline *ratios* measured at
 event level must match the analytic figures (Figs 5-12) within tolerance.
+
+`collective_time_event` is a thin compatibility wrapper over
+`fabricsim.FabricSim` in full-pause mode (synchronized steps, whole-fabric
+delta pauses); the asynchronous per-link fabric with sparse reconfiguration
+and overlap credit lives in `fabricsim.py`.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 
-from .bruck import Collective, steps_for
 from .cost_model import CostModel
 from .schedules import Schedule
 
@@ -54,12 +58,16 @@ def simulate_step(
     """
     if msg_offset % link_offset:
         raise ValueError("destination unreachable on this topology")
+    if link_speed is not None and len(link_speed) != n:
+        raise ValueError(
+            f"link_speed has length {len(link_speed)} != n={n}; per-node "
+            f"rates would be misattributed")
     hops = msg_offset // link_offset
     if hops == 0 or nbytes <= 0:
         return EventStepResult(0.0, 0.0, 0)
     k = max(1, int(chunks_per_msg))
     chunk = nbytes / k
-    speed = link_speed or [1.0] * n
+    speed = link_speed if link_speed is not None else [1.0] * n
 
     # event = (time, seq, node, chunk_id, hops_done); links serve FIFO.
     link_free = [0.0] * n            # link u: u -> (u + link_offset) % n
@@ -96,16 +104,18 @@ def collective_time_event(
     chunks_per_msg: int = 32,
     link_speed: list[float] | None = None,
 ) -> float:
-    """Event-level completion time of a Bruck collective under a schedule."""
-    n, kind = schedule.n, schedule.kind
-    steps = steps_for(kind, n, m, schedule.r)
-    link = schedule.link_offsets(steps)
-    total = schedule.R * cm.delta
-    for st, g in zip(steps, link):
-        total += cm.alpha_s
-        total += simulate_step(n, g, st.offset, st.nbytes, cm,
-                               chunks_per_msg, link_speed).completion
-    return total
+    """Event-level completion time of a Bruck collective under a schedule.
+
+    Thin compatibility wrapper: synchronized steps with whole-fabric delta
+    pauses, i.e. `fabricsim.FabricSim` in full-pause mode (bit-stable with
+    the pre-FabricSim implementation).  Use `FabricSim(mode="sparse")` for
+    the asynchronous per-link fabric with sparse reconfiguration.
+    """
+    from .fabricsim import FabricSim  # deferred: fabricsim imports simulate_step
+
+    sim = FabricSim(chunks_per_msg=chunks_per_msg, link_speed=link_speed,
+                    mode="full-pause")
+    return sim.run(schedule, m, cm).completion
 
 
 def ring_allreduce_event(n: int, m: float, cm: CostModel) -> float:

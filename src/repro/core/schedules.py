@@ -109,16 +109,32 @@ class Schedule:
                 out[j] = g
         return out
 
+    def reconfig_changed_links(self, steps: Sequence[Step] | None = None) -> tuple[int, ...]:
+        """Circuits that physically change at each reconfiguration point.
+
+        Entry i corresponds to the i-th set bit of ``x`` (the boundary before
+        segment i+1) and is the number of egress circuits whose target
+        differs between the adjacent segments' link offsets.  Under
+        uniform-offset subrings every node's egress retargets when the
+        offset changes, so each entry is ``n`` (all circuits) or ``0`` (the
+        boundary reuses the same offset — possible for duplicate-gcd
+        segments, e.g. at radix r > 2).  FabricSim and the overlap-aware
+        analytic model charge delta only where an entry is nonzero.
+        """
+        steps = steps if steps is not None else _steps_cached(self.kind, self.n, self.r)
+        gs = [_segment_gcd(steps, a, b) for a, b in self.segments]
+        return tuple(self.n if gs[i] != gs[i - 1] else 0 for i in range(1, len(gs)))
+
     @staticmethod
     def from_segments(kind: Collective, n: int, lengths: Sequence[int],
                       r: int = 2) -> "Schedule":
         s = schedule_length(kind, n, r)
-        if sum(lengths) != s or any(l <= 0 for l in lengths):
+        if sum(lengths) != s or any(seg_len <= 0 for seg_len in lengths):
             raise ValueError(f"segment lengths {lengths} must be positive and sum to {s}")
         x = [0] * s
         pos = 0
-        for l in lengths[:-1]:
-            pos += l
+        for seg_len in lengths[:-1]:
+            pos += seg_len
             x[pos] = 1
         return Schedule(kind=kind, n=n, x=tuple(x), r=r)
 

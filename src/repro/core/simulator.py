@@ -14,9 +14,8 @@ cost model, so every theorem is checkable bit-for-bit (see tests/).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
-from .bruck import Collective, Step, num_steps, steps_for
+from .bruck import steps_for
 from .cost_model import CostModel
 from .schedules import Schedule
 from .subrings import BlockedRing, Topology
@@ -153,6 +152,40 @@ def collective_time(
     )
 
 
+def collective_time_overlap(
+    schedule: Schedule,
+    m: float,
+    cm: CostModel,
+    overlap: float,
+    *,
+    ports: int | None = None,
+) -> TimeBreakdown:
+    """Analytic completion time with sparse-reconfiguration overlap credit.
+
+    Identical to `collective_time` except for the reconfiguration term: each
+    reconfiguration point is charged `CostModel.delta_sparse(changed,
+    overlap)` — zero when the boundary reuses the previous segment's link
+    offset, and `delta * (1 - overlap)` otherwise — instead of a flat
+    delta.  This is the analytic counterpart of `fabricsim.FabricSim`'s
+    per-link swap accounting, used by the planner's ``ocs-overlap`` fabric.
+    """
+    bd = collective_time(schedule, m, cm, ports=ports)
+    changed = schedule.reconfig_changed_links()
+    recon_steps = [sc.index for sc in bd.steps if sc.reconfigured]
+    if len(recon_steps) != len(changed):
+        raise RuntimeError(
+            f"reconfigured step count {len(recon_steps)} != "
+            f"boundary count {len(changed)}")
+    sparse_by_step = {k: cm.delta_sparse(c, overlap)
+                      for k, c in zip(recon_steps, changed)}
+    new_steps = tuple(
+        dataclasses.replace(sc, time=sc.time - cm.delta + sparse_by_step[sc.index])
+        if sc.reconfigured else sc
+        for sc in bd.steps)
+    return dataclasses.replace(bd, reconfig=sum(sparse_by_step.values()),
+                               steps=new_steps)
+
+
 def allreduce_time(
     rs_schedule: Schedule,
     ag_schedule: Schedule,
@@ -176,4 +209,33 @@ def allreduce_time(
     rs_final = rs_schedule.link_offsets()[-1]
     ag_first = ag_schedule.link_offsets()[0]
     transition = cm.delta if rs_final != ag_first else 0.0
+    return t_rs + t_ag + TimeBreakdown(0.0, 0.0, 0.0, transition)
+
+
+def allreduce_time_overlap(
+    rs_schedule: Schedule,
+    ag_schedule: Schedule,
+    m: float,
+    cm: CostModel,
+    overlap: float,
+    *,
+    ports: int | None = None,
+) -> TimeBreakdown:
+    """`allreduce_time` under the sparse-reconfiguration overlap credit.
+
+    Both phases are scored with `collective_time_overlap`, and the RS->AG
+    topology transition (when the AG phase's initial link offset differs
+    from the RS phase's final one) is likewise a sparse swap of every
+    circuit, charged `delta_sparse(n, overlap)`.
+    """
+    if rs_schedule.kind != "rs" or ag_schedule.kind != "ag":
+        raise ValueError("expected an rs schedule and an ag schedule")
+    if rs_schedule.n != ag_schedule.n:
+        raise ValueError("mismatched n")
+    t_rs = collective_time_overlap(rs_schedule, m, cm, overlap, ports=ports)
+    t_ag = collective_time_overlap(ag_schedule, m, cm, overlap, ports=ports)
+    rs_final = rs_schedule.link_offsets()[-1]
+    ag_first = ag_schedule.link_offsets()[0]
+    changed = rs_schedule.n if rs_final != ag_first else 0
+    transition = cm.delta_sparse(changed, overlap)
     return t_rs + t_ag + TimeBreakdown(0.0, 0.0, 0.0, transition)

@@ -23,9 +23,9 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.experimental.pallas.tpu as pltpu
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 from repro.collectives._compat import pallas_compiler_params
 
@@ -94,10 +94,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr,
 
     @pl.when(ki == nk - 1)
     def finalize():
-        l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0, :, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, :] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
         if lse_ref is not None:
-            lse_ref[0, :] = m_scr[...] + jnp.log(l)
+            lse_ref[0, :] = m_scr[...] + jnp.log(denom)
 
 
 @functools.partial(

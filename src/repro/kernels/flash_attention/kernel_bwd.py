@@ -19,9 +19,9 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.experimental.pallas.tpu as pltpu
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 from repro.collectives._compat import pallas_compiler_params
 
@@ -145,8 +145,11 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, scale, causal, window,
     block_q = min(block_q, sq)
     block_k = min(block_k, sk)
     pq, pk = (-sq) % block_q, (-sk) % block_k
-    pad_q = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pq), (0, 0))) if pq else x
-    pad_k = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else x
+    def pad_q(x):
+        return jnp.pad(x, ((0, 0), (0, 0), (0, pq), (0, 0))) if pq else x
+
+    def pad_k(x):
+        return jnp.pad(x, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else x
     qf = pad_q(q).reshape(b * h, sq + pq, d)
     of = pad_q(o).reshape(b * h, sq + pq, d)
     dof = pad_q(do).reshape(b * h, sq + pq, d)

@@ -24,9 +24,9 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.experimental.pallas.tpu as pltpu
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 from repro.collectives._compat import pallas_compiler_params
 
@@ -94,7 +94,8 @@ def wkv6_fwd(r, k, v, log_w, u, *, block_t: int = 64, interpret: bool = True):
         log_w = jnp.pad(log_w, pad4)
     Tp = T + pt
 
-    fold = lambda x: x.reshape(B * H, Tp, x.shape[-1])
+    def fold(x):
+        return x.reshape(B * H, Tp, x.shape[-1])
     rf, kf, vf, lwf = fold(r), fold(k), fold(v), fold(log_w)
     uf = jnp.broadcast_to(u[None], (B, H, dk)).reshape(B * H, dk)
 

@@ -30,7 +30,8 @@ def wkv6_scan(r, k, v, w, u, s0=None):
         S = wt[..., :, None] * S + kv
         return S, y
 
-    f32 = lambda x: x.astype(jnp.float32)
+    def f32(x):
+        return x.astype(jnp.float32)
     xs = (f32(r).transpose(2, 0, 1, 3), f32(k).transpose(2, 0, 1, 3),
           f32(v).transpose(2, 0, 1, 3), f32(w).transpose(2, 0, 1, 3))
     s_last, ys = jax.lax.scan(step, f32(s0), xs)

@@ -36,6 +36,7 @@ from repro.models import (SHAPES, decode_step, init_caches, init_params,  # noqa
                           loss_fn, prefill)
 from repro.models.sharding import activation_sharding  # noqa: E402
 from repro.optim import adamw_init, adamw_update  # noqa: E402
+
 from .mesh import batch_axes, make_production_mesh  # noqa: E402
 from .shardings import (activation_rules, batch_shardings, cache_shardings,  # noqa: E402
                         param_shardings)

@@ -12,11 +12,10 @@ available to the launcher for cross-pod pipelining (DESIGN.md S5).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
 from repro.collectives._compat import axis_size as _axis_size
 from repro.collectives._compat import pcast as _pcast
 from repro.collectives._compat import shard_map as _shard_map

@@ -17,7 +17,6 @@ ten architectures.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .mesh import batch_axes

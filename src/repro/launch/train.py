@@ -15,12 +15,10 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import functools
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.checkpoint import latest_step, restore_into, save
@@ -31,8 +29,9 @@ from repro.data import SyntheticLM
 from repro.models import init_params, loss_fn
 from repro.models.sharding import activation_sharding
 from repro.optim import adamw_init, adamw_update, cosine_warmup_schedule
-from .mesh import batch_axes, make_mesh
-from .shardings import activation_rules, batch_shardings, param_shardings
+
+from .mesh import make_mesh
+from .shardings import activation_rules, param_shardings
 
 
 @dataclasses.dataclass

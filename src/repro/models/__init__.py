@@ -1,5 +1,5 @@
 """Model zoo: 10 assigned architectures over a shared functional substrate."""
-from .config import SHAPES, ArchConfig, MLAConfig, MoEConfig, ShapeConfig
+from .config import ArchConfig, MLAConfig, MoEConfig, SHAPES, ShapeConfig
 from .model import (decode_step, forward, init_caches, init_params, loss_fn,
                     prefill, segments)
 

@@ -16,16 +16,14 @@ only rank-r tensors.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-
 import jax
 import jax.numpy as jnp
 
-from . import layers
-from .config import ArchConfig
 from repro.kernels.flash_attention import ref as attn_ref
 from repro.kernels.flash_attention.ops import flash_attention
+
+from . import layers
+from .config import ArchConfig
 
 
 # --- shared scaled-dot-product helpers ------------------------------------------

@@ -17,7 +17,6 @@ FFN kinds (per block, fixed per arch): "swiglu", "gelu" (whisper), "moe".
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Literal
 
 Family = Literal["dense", "moe", "ssm", "hybrid", "vlm", "audio"]
@@ -154,8 +153,9 @@ class ArchConfig:
             return self.param_count()
         assert self.moe is not None
         full = self.param_count()
-        expert_all = self.num_layers * self.moe.num_experts * 3 * self.d_model * self.moe.d_ff_expert
-        expert_active = self.num_layers * self.moe.top_k * 3 * self.d_model * self.moe.d_ff_expert
+        per_ff = 3 * self.d_model * self.moe.d_ff_expert
+        expert_all = self.num_layers * self.moe.num_experts * per_ff
+        expert_active = self.num_layers * self.moe.top_k * per_ff
         return full - expert_all + expert_active
 
     def scaled_down(self, max_layers: int = 4, max_d: int = 128,

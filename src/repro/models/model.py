@@ -12,7 +12,6 @@ Caches thread through the same scan as per-segment stacked pytrees.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -251,7 +250,8 @@ def _run_segments(cfg: ArchConfig, segs_params, segs_caches, x, positions, *,
             auxs = jnp.zeros((), jnp.float32)
             ncs_list = []
             for r in range(reps):
-                take = lambda t, r=r: jax.tree.map(lambda a: a[r], t)
+                def take(t, r=r):
+                    return jax.tree.map(lambda a: a[r], t)
                 c_r = take(per_pos_caches) if per_pos_caches is not None else None
                 x, (nc, aux) = body_fn(x, (take(per_pos_params), c_r))
                 auxs += aux

@@ -35,9 +35,12 @@ def init_moe(cfg: ArchConfig, key, dtype):
     s_in, s_ff = d ** -0.5, m.d_ff_expert ** -0.5
     p = {
         "router": (jax.random.normal(ks[0], (d, m.num_experts)) * s_in).astype(jnp.float32),
-        "w_gate": (jax.random.normal(ks[1], (m.num_experts, d, m.d_ff_expert)) * s_in).astype(dtype),
-        "w_up": (jax.random.normal(ks[2], (m.num_experts, d, m.d_ff_expert)) * s_in).astype(dtype),
-        "w_down": (jax.random.normal(ks[3], (m.num_experts, m.d_ff_expert, d)) * s_ff).astype(dtype),
+        "w_gate": (jax.random.normal(ks[1], (m.num_experts, d, m.d_ff_expert))
+                   * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (m.num_experts, d, m.d_ff_expert))
+                 * s_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (m.num_experts, m.d_ff_expert, d))
+                   * s_ff).astype(dtype),
     }
     if m.dense_residual_d_ff:
         p["dense"] = layers.init_swiglu(ks[4], d, m.dense_residual_d_ff, dtype)

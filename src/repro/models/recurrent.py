@@ -23,12 +23,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from . import layers
-from .config import ArchConfig
 from repro.kernels.rg_lru import ref as lru_ref
 from repro.kernels.rg_lru.ops import rg_lru
 from repro.kernels.wkv6 import ref as wkv_ref
 from repro.kernels.wkv6.ops import wkv6
+
+from . import layers
+from .config import ArchConfig
 
 _C_RGLRU = 8.0
 
@@ -165,7 +166,8 @@ def rwkv6_block(cfg: ArchConfig, p, x, *, state=None):
                      p["decay_B"])
     log_w = -jnp.exp(p["decay_base"][None, None, :] + dec)   # (B,S,d) <= 0
 
-    split = lambda t: t.reshape(b, s, H, hd).transpose(0, 2, 1, 3)
+    def split(t):
+        return t.reshape(b, s, H, hd).transpose(0, 2, 1, 3)
     rh, kh, vh, lwh = split(r), split(k), split(v), split(log_w.astype(x.dtype))
 
     s0 = state["wkv"] if state is not None else None
@@ -201,7 +203,8 @@ def rwkv_cmix(cfg: ArchConfig, p, x, *, state=None):
     b, s, d = x.shape
     last = state if state is not None else jnp.zeros((b, d), x.dtype)
     xs = _token_shift(x, last)
-    mix = lambda i: (x + (xs - x) * p["mu"][i][None, None, :]).astype(x.dtype)
+    def mix(i):
+        return (x + (xs - x) * p["mu"][i][None, None, :]).astype(x.dtype)
     k = jnp.square(jax.nn.relu(layers.dot(mix(0), p["w_k"]))).astype(x.dtype)
     r = jax.nn.sigmoid(layers.dot(mix(1), p["w_r"]))
     out = (r * layers.dot(k, p["w_v"])).astype(x.dtype)

@@ -7,7 +7,6 @@ the same machinery as params.  Moments are float32 regardless of param dtype
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax
@@ -25,7 +24,8 @@ class AdamWState:
 
 
 def adamw_init(params: PyTree) -> AdamWState:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return AdamWState(
         step=jnp.zeros((), jnp.int32),
         m=jax.tree.map(zeros, params),

@@ -15,6 +15,7 @@ exact-dp, static, every-step, ring).  The legacy `repro.core.plan` and
 `repro.collectives.plan_gradient_sync` entry points are thin shims over this
 package.
 """
+from . import strategies  # noqa: F401  (registers the built-in families)
 from .api import (Candidate, PlanRequest, PlanResult,  # noqa: F401
                   RankedAlternative)
 from .planner import Planner  # noqa: F401
@@ -22,8 +23,6 @@ from .registry import (StrategyInfo, available_strategies,  # noqa: F401
                        default_strategy_names, get_strategy,
                        register_strategy, select_strategies,
                        unregister_strategy)
-
-from . import strategies  # noqa: F401, E402  (registers the built-in families)
 
 __all__ = [
     "Candidate", "PlanRequest", "PlanResult", "RankedAlternative",

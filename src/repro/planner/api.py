@@ -18,13 +18,14 @@ import dataclasses
 import json
 from typing import Literal
 
-from repro.core.cost_model import PAPER_DEFAULT, CostModel
+from repro.core.cost_model import CostModel, PAPER_DEFAULT
 from repro.core.schedules import Schedule
 from repro.core.simulator import TimeBreakdown
 
 PlanKind = Literal["a2a", "rs", "ag", "ar"]
 PLAN_KINDS = ("a2a", "rs", "ag", "ar")
-Fabric = Literal["static", "ocs"]
+Fabric = Literal["static", "ocs", "ocs-overlap"]
+FABRICS = ("static", "ocs", "ocs-overlap")
 Objective = Literal["time", "latency", "transmission"]
 OBJECTIVES = ("time", "latency", "transmission")
 
@@ -37,8 +38,15 @@ class PlanRequest:
     n, r          : world size and Bruck radix (r=2 is the paper's pattern).
     m_bytes       : total per-node payload in bytes (the paper's m).
     cost_model    : alpha-beta-delta parameters (Section 2).
-    fabric        : 'ocs' (reconfigurable, the paper's setting) or 'static'
-                    (no OCS: only R=0 schedules are feasible; DESIGN.md S3).
+    fabric        : 'ocs' (reconfigurable, the paper's setting), 'static'
+                    (no OCS: only R=0 schedules are feasible; DESIGN.md S3),
+                    or 'ocs-overlap' (sparse reconfiguration with
+                    reconfiguration/communication overlap: each boundary is
+                    charged `CostModel.delta_sparse(changed, overlap)`
+                    instead of a flat delta — see `core.fabricsim`).
+    overlap       : fraction of delta hidden behind communication, in [0, 1];
+                    only meaningful (and only allowed nonzero) for the
+                    'ocs-overlap' fabric.
     objective     : 'time' (total completion time, Section 3.6), 'latency'
                     (startup + hop latency + reconfig), or 'transmission'
                     (transmission + reconfig) — selects the score used to
@@ -62,6 +70,7 @@ class PlanRequest:
     cost_model: CostModel = PAPER_DEFAULT
     r: int = 2
     fabric: Fabric = "ocs"
+    overlap: float = 0.0
     objective: Objective = "time"
     paper_faithful: bool = False
     strategies: tuple[str, ...] | None = None
@@ -78,8 +87,14 @@ class PlanRequest:
             raise ValueError(f"radix must be >= 2, got r={self.r}")
         if self.m_bytes < 0:
             raise ValueError(f"payload must be >= 0, got m_bytes={self.m_bytes}")
-        if self.fabric not in ("static", "ocs"):
-            raise ValueError(f"fabric must be 'static' or 'ocs', got {self.fabric!r}")
+        if self.fabric not in FABRICS:
+            raise ValueError(f"fabric must be one of {FABRICS}, got {self.fabric!r}")
+        if not 0.0 <= self.overlap <= 1.0:
+            raise ValueError(f"overlap must be in [0, 1], got {self.overlap}")
+        if self.overlap > 0.0 and self.fabric != "ocs-overlap":
+            raise ValueError(
+                f"overlap={self.overlap} requires fabric='ocs-overlap', "
+                f"got fabric={self.fabric!r}")
         if self.objective not in OBJECTIVES:
             raise ValueError(
                 f"objective must be one of {OBJECTIVES}, got {self.objective!r}")
@@ -108,7 +123,8 @@ class PlanRequest:
         return {
             "kind": self.kind, "n": self.n, "m_bytes": self.m_bytes,
             "cost_model": _cost_model_to_dict(self.cost_model),
-            "r": self.r, "fabric": self.fabric, "objective": self.objective,
+            "r": self.r, "fabric": self.fabric, "overlap": self.overlap,
+            "objective": self.objective,
             "paper_faithful": self.paper_faithful,
             "strategies": list(self.strategies) if self.strategies is not None else None,
             "max_R": self.max_R, "delta_budget": self.delta_budget,
@@ -122,6 +138,7 @@ class PlanRequest:
             kind=d["kind"], n=d["n"], m_bytes=d["m_bytes"],
             cost_model=CostModel(**d["cost_model"]),
             r=d.get("r", 2), fabric=d.get("fabric", "ocs"),
+            overlap=d.get("overlap", 0.0),
             objective=d.get("objective", "time"),
             paper_faithful=d.get("paper_faithful", False),
             strategies=tuple(strategies) if strategies is not None else None,

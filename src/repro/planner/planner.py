@@ -19,7 +19,9 @@ import dataclasses
 
 from repro.core import baselines
 from repro.core.schedules import Schedule, static_schedule
-from repro.core.simulator import TimeBreakdown, allreduce_time, collective_time
+from repro.core.simulator import (TimeBreakdown, allreduce_time,
+                                  allreduce_time_overlap, collective_time,
+                                  collective_time_overlap)
 
 from .api import Candidate, PlanRequest, PlanResult, RankedAlternative
 from .registry import select_strategies
@@ -64,6 +66,10 @@ class Planner:
         if cand.impl == "ring":
             return baselines.ring(kind, req.n, req.m_bytes, req.cost_model)
         assert cand.schedule is not None
+        if req.fabric == "ocs-overlap":
+            return collective_time_overlap(cand.schedule, req.m_bytes,
+                                           req.cost_model, req.overlap,
+                                           ports=req.ports)
         return collective_time(cand.schedule, req.m_bytes, req.cost_model,
                                ports=req.ports)
 
@@ -101,6 +107,16 @@ class Planner:
 
     # --- composite AllReduce -------------------------------------------------
 
+    def _allreduce_bd(self, req: PlanRequest, rs_sched: Schedule,
+                      ag_sched: Schedule) -> TimeBreakdown:
+        """Combined RS+AG breakdown under the request's fabric semantics."""
+        if req.fabric == "ocs-overlap":
+            return allreduce_time_overlap(rs_sched, ag_sched, req.m_bytes,
+                                          req.cost_model, req.overlap,
+                                          ports=req.ports)
+        return allreduce_time(rs_sched, ag_sched, req.m_bytes,
+                              req.cost_model, ports=req.ports)
+
     def _plan_rs_ag_phases(self, req: PlanRequest,
                            sched_names: tuple[str, ...] | None
                            ) -> tuple[PlanResult, PlanResult]:
@@ -126,8 +142,7 @@ class Planner:
         for k in range(total_cap + 1):
             rs_res = sub("rs", k)
             ag_res = sub("ag", total_cap - k)
-            t = allreduce_time(rs_res.schedule, ag_res.schedule, req.m_bytes,
-                               req.cost_model, ports=req.ports)
+            t = self._allreduce_bd(req, rs_res.schedule, ag_res.schedule)
             score = _objective_score(t, req.objective)
             if best is None or score < best[0]:
                 best = (score, rs_res, ag_res)
@@ -144,7 +159,7 @@ class Planner:
         evaluated: list[tuple[str, str, TimeBreakdown,
                               Schedule | None, Schedule | None]] = []
         if want_bruck:
-            if req.fabric == "ocs":
+            if req.fabric != "static":
                 rs_res, ag_res = self._plan_rs_ag_phases(req, sched_names)
                 rs_sched, ag_sched = rs_res.schedule, ag_res.schedule
                 name = f"bruck[{rs_res.strategy} + {ag_res.strategy}]"
@@ -155,8 +170,7 @@ class Planner:
                 ag_sched = static_schedule("ag", req.n, req.r)
                 name = "bruck[static]"
             assert rs_sched is not None and ag_sched is not None
-            bd = allreduce_time(rs_sched, ag_sched, req.m_bytes,
-                                req.cost_model, ports=req.ports)
+            bd = self._allreduce_bd(req, rs_sched, ag_sched)
             evaluated.append((name, "bruck", bd, rs_sched, ag_sched))
         if want_ring:
             bd = baselines.ring("ar", req.n, req.m_bytes, req.cost_model)

@@ -54,6 +54,30 @@ def exact_dp_family(req: PlanRequest, kind: str):
         yield Candidate(f"exact-dp(R={R})", sched)
 
 
+@register_strategy("overlap", paper_faithful=False)
+def overlap_family(req: PlanRequest, kind: str):
+    """Sparse-reconfiguration overlap family (fabric='ocs-overlap' only):
+    re-scores the periodic and exact-dp candidate schedules under the
+    hidden-delta credit `CostModel.delta_sparse(changed, overlap)`.
+
+    Per fixed R the optimal segment partition is delta-independent, so the
+    candidates coincide with the periodic / exact-dp tables; what changes is
+    the scoring — with most of delta hidden, higher-R schedules win at
+    (delta, m) points where the full-pause model would stay static.  The
+    planner evaluates *every* candidate with `collective_time_overlap` when
+    the fabric is 'ocs-overlap', so this family's role is to guarantee the
+    schedule tables are in the candidate set even under an explicit
+    ``strategies=("overlap",)`` subset."""
+    if req.fabric != "ocs-overlap":
+        return
+    for R, sched in enumerate(core_schedules.periodic_all(kind, req.n, req.r)):
+        yield Candidate(f"overlap[periodic](R={R})", sched)
+    exact = core_schedules.full_cost_optimal_all(
+        kind, req.n, float(req.m_bytes), req.cost_model, req.r)
+    for R, sched in enumerate(exact):
+        yield Candidate(f"overlap[exact-dp](R={R})", sched)
+
+
 @register_strategy("static")
 def static_family(req: PlanRequest, kind: str):
     """S-BRUCK endpoint: never reconfigure (the only feasible schedule on a

@@ -18,13 +18,14 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
-from repro.launch.train import TrainConfig, train  # noqa: E402
 from repro.launch.mesh import make_mesh  # noqa: E402
 from repro.launch.pipeline import run_pipeline  # noqa: E402
+from repro.launch.train import TrainConfig, train  # noqa: E402
 
 assert jax.device_count() == N
 
-quiet = lambda *_: None
+def quiet(*_):
+    return None
 
 # --- 1. bridge grad sync equals gspmd sync ------------------------------------
 kw = dict(arch="stablelm-3b", steps=4, batch_size=8, seq_len=32)

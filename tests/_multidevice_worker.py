@@ -18,13 +18,12 @@ import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.collectives import (bridge_all_reduce, bruck_all_gather,  # noqa: E402
-                               bruck_all_to_all, bruck_all_reduce,
+                               bruck_all_reduce, bruck_all_to_all,
                                bruck_reduce_scatter, compressed_all_reduce,
                                make_error_feedback_state, ring_all_gather,
                                ring_all_reduce, ring_reduce_scatter)
 from repro.collectives._compat import shard_map  # noqa: E402
 from repro.core import PAPER_DEFAULT, plan  # noqa: E402
-
 from repro.launch.mesh import make_mesh  # noqa: E402  (AxisType compat inside)
 
 assert jax.device_count() == N, jax.device_count()

@@ -58,6 +58,19 @@ def test_bridge_speedup_holds_at_event_level():
     assert event_ratio > 3.0  # the claim band survives
 
 
+def test_simulate_step_rejects_mismatched_link_speed():
+    """Regression: a link_speed list whose length != n used to be accepted
+    silently, misattributing straggler rates to the wrong nodes."""
+    cm = PAPER_DEFAULT
+    with pytest.raises(ValueError, match="link_speed"):
+        simulate_step(16, 1, 4, 1e6, cm, link_speed=[1.0] * 8)
+    with pytest.raises(ValueError, match="link_speed"):
+        simulate_step(16, 1, 4, 1e6, cm, link_speed=[1.0] * 17)
+    # the correct length still works
+    r = simulate_step(16, 1, 4, 1e6, cm, link_speed=[1.0] * 16)
+    assert r.completion > 0
+
+
 def test_ring_allreduce_event_matches_baseline():
     n, m = 16, 1 * MB
     cm = PAPER_DEFAULT

@@ -1,0 +1,182 @@
+"""FabricSim: asynchronous per-link fabric vs the synchronized event sim.
+
+Pins the tentpole invariants:
+  - full-pause mode reproduces `collective_time_event` bit-for-bit;
+  - sparse (async, per-link delta) completion <= full-pause completion for
+    random schedules across n in {6, 12, 48, 96};
+  - overlap credit is monotone and the duplicate-gcd boundary is free;
+  - the scenario knobs (link_speed, payload_scale) validate their shapes.
+
+The seeded-random versions always run; the hypothesis property tests run
+when hypothesis is installed (CI installs it).
+"""
+import random
+
+import pytest
+
+from repro.core import (CostModel, FabricSim, PAPER_DEFAULT, Schedule,
+                        collective_time, collective_time_overlap, periodic_a2a,
+                        simulate_fabric, straggler_speeds)
+from repro.core.bruck import schedule_length, steps_for
+from repro.core.eventsim import collective_time_event, simulate_step
+
+MB = 1024.0 ** 2
+
+
+def random_schedule(rng: random.Random, kind: str, n: int, r: int = 2) -> Schedule:
+    s = schedule_length(kind, n, r)
+    x = tuple([0] + [rng.randint(0, 1) for _ in range(s - 1)])
+    return Schedule(kind=kind, n=n, x=x, r=r)
+
+
+# --- full-pause compatibility -------------------------------------------------
+
+
+@pytest.mark.parametrize("n,R", [(16, 0), (16, 2), (32, 3), (6, 1)])
+def test_full_pause_matches_collective_time_event_exactly(n, R):
+    """Zero-overlap full-pause FabricSim == the legacy synchronized loop,
+    bit-for-bit (same accumulation order)."""
+    m, cm = 2 * MB, PAPER_DEFAULT
+    sched = periodic_a2a(n, R)
+    # the pre-FabricSim accumulation, recomputed by hand:
+    steps = steps_for("a2a", n, m, sched.r)
+    legacy = sched.R * cm.delta
+    for st, g in zip(steps, sched.link_offsets(steps)):
+        legacy += cm.alpha_s
+        legacy += simulate_step(n, g, st.offset, st.nbytes, cm, 8).completion
+    res = FabricSim(chunks_per_msg=8, mode="full-pause").run(sched, m, cm)
+    assert res.completion == legacy
+    assert collective_time_event(sched, m, cm, chunks_per_msg=8) == legacy
+    assert res.reconfigs_paid == R and res.delta_stall == R * cm.delta
+
+
+def test_full_pause_rejects_sparse_only_knobs():
+    with pytest.raises(ValueError, match="payload_scale"):
+        FabricSim(mode="full-pause", payload_scale=[1.0] * 8)
+    with pytest.raises(ValueError, match="overlap"):
+        FabricSim(mode="full-pause", overlap=0.5)
+    with pytest.raises(ValueError, match="mode"):
+        FabricSim(mode="warp")
+    with pytest.raises(ValueError, match="overlap"):
+        FabricSim(overlap=1.5)
+
+
+# --- sparse mode: monotonicity ------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [6, 12, 48, 96])
+def test_sparse_completion_le_full_pause_random_schedules(n):
+    """Async per-link reconfiguration can only beat the global barrier +
+    whole-fabric pause, for every schedule/kind/delta drawn."""
+    rng = random.Random(n)
+    for kind in ("a2a", "rs", "ag"):
+        for _ in range(3):
+            sched = random_schedule(rng, kind, n)
+            m = rng.choice([0.25, 2.0]) * MB
+            cm = PAPER_DEFAULT.replace(delta=rng.choice([1e-6, 1e-3, 15e-3]))
+            chunks = rng.choice([1, 4])
+            full = FabricSim(chunks_per_msg=chunks, mode="full-pause").run(sched, m, cm)
+            sparse = FabricSim(chunks_per_msg=chunks, mode="sparse").run(sched, m, cm)
+            assert sparse.completion <= full.completion * (1 + 1e-12)
+            assert sparse.chunks_moved == full.chunks_moved
+
+
+def test_sparse_monotone_in_overlap():
+    sched = periodic_a2a(32, 3)
+    m, cm = 4 * MB, PAPER_DEFAULT.replace(delta=1e-3)
+    times = [FabricSim(chunks_per_msg=8, overlap=ov).run(sched, m, cm).completion
+             for ov in (0.0, 0.5, 1.0)]
+    assert times[0] >= times[1] >= times[2]
+    # with everything hidden, all R*delta disappears from the critical path
+    assert times[0] - times[2] == pytest.approx(sched.R * cm.delta, rel=0.05)
+
+
+def test_sparse_straggler_slower_than_nominal():
+    sched = periodic_a2a(16, 2)
+    m, cm = 2 * MB, PAPER_DEFAULT
+    nominal = simulate_fabric(sched, m, cm, chunks_per_msg=8)
+    slow = simulate_fabric(sched, m, cm, chunks_per_msg=8,
+                           link_speed=straggler_speeds(16, {8: 0.25}))
+    assert slow.completion > nominal.completion
+
+
+def test_sparse_payload_skew_slower_than_nominal():
+    sched = periodic_a2a(16, 2)
+    m, cm = 2 * MB, PAPER_DEFAULT
+    skew = [1.0] * 16
+    skew[3] = 4.0
+    nominal = simulate_fabric(sched, m, cm, chunks_per_msg=8)
+    skewed = simulate_fabric(sched, m, cm, chunks_per_msg=8, payload_scale=skew)
+    assert skewed.completion > nominal.completion
+
+
+# --- sparse reconfiguration accounting ----------------------------------------
+
+
+def test_duplicate_gcd_boundary_is_free():
+    """n=16 r=4 offsets [1,2,3,4,8,12]: segments [0],[1,2],[3..5] have link
+    offsets 1,1,4 — the first reconfiguration changes no circuit."""
+    sched = Schedule(kind="a2a", n=16, x=(0, 1, 0, 1, 0, 0), r=4)
+    assert sched.link_offsets() == [1, 1, 1, 4, 4, 4]
+    assert sched.reconfig_changed_links() == (0, 16)
+    cm = PAPER_DEFAULT.replace(delta=1e-3)
+    res = FabricSim(chunks_per_msg=4).run(sched, 1 * MB, cm)
+    # only the second boundary swaps: 16 port swaps, one delta each
+    assert res.reconfigs_paid == 16
+    assert res.delta_stall == pytest.approx(16 * cm.delta)
+    bd = collective_time_overlap(sched, 1 * MB, cm, 0.0)
+    assert bd.reconfig == pytest.approx(cm.delta)  # 1 of 2 boundaries charged
+
+
+def test_ports_skip_unused_segment_circuits():
+    """All boundaries whose segments a port has no traffic in are skipped —
+    with uniform ring traffic every port serves every segment, so the paid
+    swap count is exactly n per changing boundary."""
+    sched = periodic_a2a(12, 2)
+    cm = PAPER_DEFAULT
+    res = FabricSim(chunks_per_msg=2).run(sched, 1 * MB, cm)
+    changing = sum(1 for c in sched.reconfig_changed_links() if c)
+    assert res.reconfigs_paid == 12 * changing
+
+
+def test_delta_sparse_term():
+    cm = CostModel(delta=10e-6)
+    assert cm.delta_sparse(0, 0.0) == 0.0
+    assert cm.delta_sparse(64, 0.0) == cm.delta
+    assert cm.delta_sparse(64, 0.75) == pytest.approx(0.25 * cm.delta)
+    assert cm.delta_sparse(1, 1.0) == 0.0
+    with pytest.raises(ValueError, match="overlap"):
+        cm.delta_sparse(4, 1.5)
+
+
+def test_collective_time_overlap_degenerates_to_collective_time():
+    """overlap=0 with every boundary changing == the plain analytic model."""
+    sched = periodic_a2a(64, 3)
+    m, cm = 4 * MB, PAPER_DEFAULT
+    assert all(c == 64 for c in sched.reconfig_changed_links())
+    bd = collective_time_overlap(sched, m, cm, 0.0)
+    ref = collective_time(sched, m, cm)
+    assert bd.total == ref.total
+    assert bd.steps == ref.steps
+
+
+# --- scenario-knob validation -------------------------------------------------
+
+
+def test_sparse_rejects_bad_link_speed_and_scale():
+    sched = periodic_a2a(16, 1)
+    cm = PAPER_DEFAULT
+    with pytest.raises(ValueError, match="link_speed"):
+        FabricSim(link_speed=[1.0] * 8).run(sched, MB, cm)
+    with pytest.raises(ValueError, match="link_speed"):
+        FabricSim(link_speed=[1.0] * 15 + [0.0]).run(sched, MB, cm)
+    with pytest.raises(ValueError, match="payload_scale"):
+        FabricSim(payload_scale=[1.0] * 17).run(sched, MB, cm)
+    with pytest.raises(ValueError, match="node"):
+        straggler_speeds(8, {9: 0.5})
+    with pytest.raises(ValueError, match="rate"):
+        straggler_speeds(8, {2: 0.0})
+
+
+# The hypothesis property versions of these invariants live in
+# tests/test_fabricsim_properties.py (skipped when hypothesis is absent).

@@ -1,0 +1,51 @@
+"""Hypothesis property tests for FabricSim (skipped if hypothesis is absent;
+CI installs it, and the seeded-random versions in test_fabricsim.py always
+run).
+
+Properties:
+  - full-pause / zero-overlap FabricSim reproduces `collective_time_event`
+    exactly (bit-for-bit) on random schedules;
+  - sparse-diff completion is monotonically <= full-pause across random
+    schedules at n in {6, 12, 48, 96}.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.core import FabricSim, PAPER_DEFAULT, Schedule  # noqa: E402
+from repro.core.bruck import schedule_length  # noqa: E402
+from repro.core.eventsim import collective_time_event  # noqa: E402
+
+MB = 1024.0 ** 2
+
+
+def _schedule(data, ns) -> Schedule:
+    n = data.draw(st.sampled_from(ns), label="n")
+    kind = data.draw(st.sampled_from(["a2a", "rs", "ag"]), label="kind")
+    s = schedule_length(kind, n, 2)
+    bits = data.draw(st.lists(st.integers(0, 1), min_size=s - 1, max_size=s - 1),
+                     label="x")
+    return Schedule(kind=kind, n=n, x=tuple([0] + bits), r=2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_property_full_pause_reproduces_eventsim(data):
+    sched = _schedule(data, [6, 12, 16])
+    m = data.draw(st.sampled_from([0.25 * MB, 4 * MB]), label="m")
+    cm = PAPER_DEFAULT.replace(delta=data.draw(st.sampled_from([1e-6, 1e-3])))
+    res = FabricSim(chunks_per_msg=4, mode="full-pause").run(sched, m, cm)
+    assert res.completion == collective_time_event(sched, m, cm, chunks_per_msg=4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_property_sparse_le_full_pause(data):
+    sched = _schedule(data, [6, 12, 48, 96])
+    cm = PAPER_DEFAULT.replace(delta=data.draw(st.sampled_from([1e-6, 15e-3])))
+    full = FabricSim(chunks_per_msg=2, mode="full-pause").run(sched, MB, cm)
+    sparse = FabricSim(chunks_per_msg=2, mode="sparse").run(sched, MB, cm)
+    assert sparse.completion <= full.completion * (1 + 1e-12)

@@ -1,8 +1,5 @@
 """Fault tolerance & substrate: checkpoint/restart, elastic restore, data
 determinism, optimizer, and the synthetic-LM learnability sanity check."""
-import dataclasses
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -105,7 +102,8 @@ def test_data_learnable_structure():
 def test_adamw_reduces_quadratic():
     w = {"w": jnp.array([3.0, -2.0, 1.0])}
     st = adamw_init(w)
-    loss = lambda p: jnp.sum(p["w"] ** 2)
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
     for _ in range(200):
         g = jax.grad(loss)(w)
         w, st, m = adamw_update(g, st, w, lr=0.05, weight_decay=0.0)

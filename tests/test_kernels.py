@@ -59,10 +59,11 @@ def test_flash_attention_grad_matches_ref(case):
     k = jax.random.normal(ks[1], (b, hkv, sq, d))
     v = jax.random.normal(ks[2], (b, hkv, sq, d))
     g = jax.random.normal(ks[3], (b, hq, sq, d))
-    f_kernel = lambda q, k, v: (flash_attention(q, k, v, causal, window,
-                                                None, blk, blk) * g).sum()
-    f_ref = lambda q, k, v: (fa_ref.attention(q, k, v, causal=causal,
-                                              window=window) * g).sum()
+    def f_kernel(q, k, v):
+        return (flash_attention(q, k, v, causal, window, None, blk, blk) * g).sum()
+
+    def f_ref(q, k, v):
+        return (fa_ref.attention(q, k, v, causal=causal, window=window) * g).sum()
     g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
     g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
     for a, b_ in zip(g1, g2):

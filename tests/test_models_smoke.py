@@ -6,7 +6,6 @@ For every assigned arch:
      reproduce the full-forward logits at position t (cache correctness).
 """
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -14,8 +13,8 @@ import numpy as np
 import pytest
 
 from repro import configs
-from repro.models import (decode_step, forward, init_caches, init_params,
-                          loss_fn, prefill)
+from repro.models import (decode_step, forward, init_params, loss_fn,
+                          prefill)
 
 KEY = jax.random.PRNGKey(7)
 

@@ -5,7 +5,7 @@ import pytest
 
 from repro.core import PAPER_DEFAULT, collective_time, num_steps
 from repro.core import schedules as core_schedules
-from repro.planner import (Candidate, Planner, PlanRequest, PlanResult,
+from repro.planner import (Candidate, PlanRequest, PlanResult, Planner,
                            available_strategies, register_strategy,
                            unregister_strategy)
 
@@ -222,6 +222,91 @@ def test_alternatives_table_has_no_duplicate_schedules():
                                      cost_model=PAPER_DEFAULT,
                                      strategies=("static",)))
     assert res.strategy == "static" and res.schedule.R == 0
+
+
+# --- ocs-overlap fabric (sparse reconfiguration, hidden-delta credit) ---------
+
+
+def test_overlap_request_validation():
+    with pytest.raises(ValueError, match="overlap"):
+        PlanRequest(kind="a2a", n=8, m_bytes=1.0, fabric="ocs-overlap",
+                    overlap=1.5)
+    with pytest.raises(ValueError, match="ocs-overlap"):
+        PlanRequest(kind="a2a", n=8, m_bytes=1.0, overlap=0.5)  # fabric 'ocs'
+    req = PlanRequest(kind="a2a", n=8, m_bytes=1.0, fabric="ocs-overlap",
+                      overlap=0.9)
+    assert req.overlap == 0.9
+
+
+def test_overlap_request_json_round_trip():
+    req = PlanRequest(kind="rs", n=48, m_bytes=4.0 * MB,
+                      cost_model=PAPER_DEFAULT.replace(delta=1e-3),
+                      fabric="ocs-overlap", overlap=0.9)
+    res = Planner().plan(req)
+    back = PlanResult.from_json(res.to_json())
+    assert back.request.fabric == "ocs-overlap"
+    assert back.request.overlap == 0.9
+    assert back == res
+
+
+def test_overlap_family_yields_only_on_overlap_fabric():
+    # on the plain ocs fabric the family is empty -> explicit selection fails
+    with pytest.raises(ValueError, match="no strategy"):
+        Planner().plan(PlanRequest(kind="a2a", n=16, m_bytes=1.0 * MB,
+                                   strategies=("overlap",)))
+    res = Planner().plan(PlanRequest(kind="a2a", n=16, m_bytes=1.0 * MB,
+                                     fabric="ocs-overlap", overlap=0.5,
+                                     strategies=("overlap",)))
+    assert res.strategy.startswith("overlap[")
+
+
+def test_overlap_credit_prefers_more_reconfigurations():
+    """At ms-scale delta the full-pause model stays near-static, but with
+    most of delta hidden, higher-R schedules win — and the hidden-delta
+    breakdown is cheaper than the plain-ocs winner's."""
+    cm = PAPER_DEFAULT.replace(delta=1e-3)
+    plain = Planner().plan(PlanRequest(kind="a2a", n=64, m_bytes=16.0 * MB,
+                                       cost_model=cm))
+    hidden = Planner().plan(PlanRequest(kind="a2a", n=64, m_bytes=16.0 * MB,
+                                        cost_model=cm, fabric="ocs-overlap",
+                                        overlap=0.95))
+    assert hidden.schedule.R > plain.schedule.R
+    assert hidden.predicted_time < plain.predicted_time
+    # reconfig term reflects the credit: R * delta * (1 - overlap)
+    expect = hidden.schedule.R * cm.delta_sparse(64, 0.95)
+    assert hidden.breakdown.reconfig == pytest.approx(expect)
+
+
+def test_overlap_full_credit_reduces_to_zero_reconfig_cost():
+    cm = PAPER_DEFAULT.replace(delta=15e-3)
+    res = Planner().plan(PlanRequest(kind="rs", n=32, m_bytes=8.0 * MB,
+                                     cost_model=cm, fabric="ocs-overlap",
+                                     overlap=1.0))
+    assert res.breakdown.reconfig == 0.0
+    # with delta free, the planner reconfigures aggressively
+    assert res.schedule.R > 0
+
+
+def test_overlap_allreduce_charges_sparse_transition():
+    cm = PAPER_DEFAULT.replace(delta=1e-4)
+    res = Planner().plan(PlanRequest(kind="ar", n=32, m_bytes=8.0 * MB,
+                                     cost_model=cm, fabric="ocs-overlap",
+                                     overlap=0.75))
+    from repro.core import allreduce_time_overlap
+
+    ref = allreduce_time_overlap(res.rs_schedule, res.ag_schedule,
+                                 8.0 * MB, cm, 0.75)
+    assert res.predicted_time == ref.total
+    # regression: 'ocs-overlap' must plan the RS/AG phases (not fall into the
+    # static-fabric branch) and dominate the plain-ocs winner under the same
+    # hidden-delta scoring
+    assert res.rs_schedule.R + res.ag_schedule.R > 0
+    plain = Planner().plan(PlanRequest(kind="ar", n=32, m_bytes=8.0 * MB,
+                                       cost_model=cm))
+    plain_rescored = allreduce_time_overlap(plain.rs_schedule,
+                                            plain.ag_schedule,
+                                            8.0 * MB, cm, 0.75)
+    assert res.predicted_time <= plain_rescored.total * (1 + 1e-12)
 
 
 # --- All-R DP performance ------------------------------------------------------

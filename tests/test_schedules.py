@@ -1,13 +1,11 @@
 """Schedule-synthesis tests: Table 1 exact match, Theorems 3.2/3.3, Lemma 3.1,
 and the mixed-radix / arbitrary-n generalization."""
-import math
-
 import pytest
 
-from repro.core import (CostModel, PAPER_DEFAULT, Schedule, baselines,
-                        collective_time, cstar_a2a, full_cost_optimal,
-                        num_steps, periodic, periodic_a2a, plan,
-                        rs_transmission_optimal, ag_transmission_optimal,
+from repro.core import (CostModel, PAPER_DEFAULT, Schedule,
+                        ag_transmission_optimal, collective_time,
+                        cstar_a2a, full_cost_optimal, num_steps, periodic,
+                        periodic_a2a, plan, rs_transmission_optimal,
                         schedule_length, static_schedule, steps_for)
 
 
@@ -119,7 +117,8 @@ def test_rs_reconfigures_earlier_than_periodic_ag_later():
         a2a = periodic_a2a(n, R).x
         rs = rs_transmission_optimal(n, R).x
         ag = ag_transmission_optimal(n, R).x
-        first = lambda x: x.index(1)
+        def first(x):
+            return x.index(1)
         assert first(rs) <= first(a2a) <= first(ag)
 
 

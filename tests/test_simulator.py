@@ -5,8 +5,8 @@ import numpy as np
 import pytest
 
 from repro.core import (CostModel, PAPER_DEFAULT, Schedule, Topology,
-                        allreduce_time, baselines, collective_time, num_steps,
-                        periodic_a2a, ag_transmission_optimal,
+                        ag_transmission_optimal, allreduce_time,
+                        collective_time, num_steps, periodic_a2a,
                         rs_transmission_optimal, simulate_a2a_data,
                         simulate_rs_data, static_schedule, subring_topology)
 
