@@ -1,6 +1,6 @@
 PYTHONPATH := src
 
-.PHONY: test test-fast bench bench-smoke plan-bench fabric-bench sweep lint
+.PHONY: test test-fast bench bench-smoke plan-bench fabric-bench sim-bench sweep lint
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -28,6 +28,13 @@ plan-bench:
 # BENCH_fabric_overlap.json.
 fabric-bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.fabric_bench --json BENCH_fabric_overlap.json
+
+# Scalar sparse FabricSim vs the vectorized batch engine (core.batchsim):
+# 30+-candidate event-scoring batch at n=96 (gated >= 10x), batched-only
+# n in {768, 1536} scale rows, and LRU plan-cache hit rates; recorded to
+# BENCH_sim_scale.json.
+sim-bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.sim_bench --json BENCH_sim_scale.json
 
 # Full n x r x m sweep, recorded for the perf trajectory.
 sweep:

@@ -13,10 +13,15 @@ The file schema is auto-detected from the row keys:
   - fabric rows (``event_analytic_ratio``, BENCH_fabric_overlap.json): the
     event simulator is deterministic, so the event/analytic ratio and the
     sparse speedup must match the baseline within ``--rel-tol``.
+  - sim rows (``batched_wall_s``, BENCH_sim_scale.json): the batch engine is
+    deterministic, so lane counts, fast-path counts, and the completion
+    checksum must match the baseline (checksum within 1e-9 relative); the
+    scoring-tier wall speedup is timing-noisy and only has to stay above
+    ``--wall-frac`` of the committed value (and above 1x absolutely).
 
-Rows are matched on their identifying keys (n / r / delta), so a smoke run
-covering a subset of the baseline grid still gates every row it produced.
-Exit 1 on any drift.
+Rows are matched on their identifying keys (n / r / delta / tier), so a
+smoke run covering a subset of the baseline grid still gates every row it
+produced.  Exit 1 on any drift.
 """
 from __future__ import annotations
 
@@ -49,6 +54,35 @@ def check_planner(base_rows: list[dict], fresh_rows: list[dict],
             errors.append(f"{tag}: wall_speedup {fresh['wall_speedup']} < "
                           f"{floor:.2f} (baseline {ref['wall_speedup']}, "
                           f"frac {wall_frac})")
+    return errors, matched
+
+
+def check_sim(base_rows: list[dict], fresh_rows: list[dict],
+              wall_frac: float) -> tuple[list[str], int]:
+    errors, matched = [], 0
+    base = _index(base_rows, ("tier", "n"))
+    for key, fresh in _index(fresh_rows, ("tier", "n")).items():
+        if key not in base:
+            continue
+        matched += 1
+        ref = base[key]
+        tag = f"sim tier={key[0]} n={key[1]}"
+        for field in ("lanes", "fast_lanes", "chunks"):
+            if fresh[field] != ref[field]:
+                errors.append(f"{tag}: {field} {fresh[field]} != baseline "
+                              f"{ref[field]} (engine grid is deterministic)")
+        drift = (abs(fresh["completion_checksum"] - ref["completion_checksum"])
+                 / max(abs(ref["completion_checksum"]), 1e-12))
+        if drift > 1e-9:
+            errors.append(f"{tag}: completion_checksum drifted {drift:.2e} "
+                          f"from baseline (> 1e-9)")
+        if ref["batched_speedup"] is not None:
+            floor = max(1.0, wall_frac * ref["batched_speedup"])
+            if fresh["batched_speedup"] < floor:
+                errors.append(f"{tag}: batched_speedup "
+                              f"{fresh['batched_speedup']} < {floor:.2f} "
+                              f"(baseline {ref['batched_speedup']}, "
+                              f"frac {wall_frac})")
     return errors, matched
 
 
@@ -87,13 +121,22 @@ def main(argv=None) -> None:
     if not base or not fresh:
         print("# FAIL: baseline or fresh result has no rows", file=sys.stderr)
         sys.exit(1)
-    if ("wall_speedup" in fresh[0]) != ("wall_speedup" in base[0]):
-        print(f"# FAIL: baseline/fresh schema mismatch ({args.baseline} vs "
-              f"{args.fresh}): one is a planner result, the other a fabric "
-              f"result — check the file arguments", file=sys.stderr)
+    def schema(rows: list[dict]) -> str:
+        if "wall_speedup" in rows[0]:
+            return "planner"
+        if "batched_wall_s" in rows[0]:
+            return "sim"
+        return "fabric"
+
+    if schema(fresh) != schema(base):
+        print(f"# FAIL: baseline/fresh schema mismatch ({args.baseline} is "
+              f"a {schema(base)} result, {args.fresh} a {schema(fresh)} "
+              f"result) — check the file arguments", file=sys.stderr)
         sys.exit(1)
-    if "wall_speedup" in fresh[0]:
+    if schema(fresh) == "planner":
         errors, matched = check_planner(base, fresh, args.wall_frac)
+    elif schema(fresh) == "sim":
+        errors, matched = check_sim(base, fresh, args.wall_frac)
     else:
         errors, matched = check_fabric(base, fresh, args.rel_tol)
     if matched == 0:

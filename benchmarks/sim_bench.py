@@ -1,0 +1,225 @@
+"""Batch fabric engine benchmark: scalar sparse loop vs vectorized playback.
+
+Two measurement tiers plus the plan-serving path:
+
+  - ``scoring`` tier (n = 96): the planner's event-scoring workload — a
+    30+-candidate set (every deduped periodic / rs-early / ag-late /
+    exact-dp schedule for all three collectives at one n) completion-timed
+    once by the scalar per-chunk `FabricSim` loop and once by a single
+    `batchsim.batch_run` call.  Gates (exit 1): batched >= ``--min-speedup``
+    x faster, every lane on the vectorized fast path, and completions equal
+    to the scalar loop within 1e-9 relative.
+  - ``scale`` tier (n in {768, 1536}): batched-only — the scalar engine is
+    not run at all at this scale (it would take minutes per grid point);
+    the row records wall time and a completion checksum so regressions in
+    the engine itself are caught by `benchmarks.check_regression`.
+  - plan-cache serving: repeated `PlanRequest` traffic through one
+    `Planner`, recording hit/miss counts and cold vs cached plan latency.
+
+Run via ``make sim-bench``; results land in BENCH_sim_scale.json.  The CI
+bench job runs ``--smoke`` (scoring tier only) against the committed
+baseline; the nightly workflow runs the full grid including the n >= 768
+tier.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+MB = 1024.0 ** 2
+DELTA = 1e-3
+
+
+def _candidate_lanes(n: int, m: float, max_lanes: int | None = None):
+    """Deduped all-kind candidate schedules at one n (shared S => one batch)."""
+    from repro.core import PAPER_DEFAULT
+    from repro.core import schedules as S
+    from repro.core.batchsim import BatchLane
+
+    seen, lanes = set(), []
+    for kind in ("a2a", "rs", "ag"):
+        for _, sched in S.candidate_schedules(kind, n, m, PAPER_DEFAULT):
+            key = (sched.kind, sched.x)
+            if key in seen:
+                continue
+            seen.add(key)
+            lanes.append(BatchLane(schedule=sched, m_bytes=m))
+    return lanes[:max_lanes] if max_lanes else lanes
+
+
+def bench_scoring(n: int = 96, m: float = 4 * MB, chunks: int = 8) -> dict:
+    from repro.core import PAPER_DEFAULT, FabricSim
+    from repro.core.batchsim import batch_run
+
+    cm = PAPER_DEFAULT.replace(delta=DELTA)
+    lanes = _candidate_lanes(n, m)
+
+    def run_scalar():
+        return [FabricSim(chunks_per_msg=chunks, mode="sparse")
+                .run(lane.schedule, m, cm).completion for lane in lanes]
+
+    # steady-state timing: one untimed pass per engine warms every memoized
+    # layer (step structure, link-offset gcds, compiled tapes) so neither
+    # timed side is charged the other's cold-cache work
+    run_scalar()
+    batch_run(lanes, cm, chunks_per_msg=chunks)
+    t0 = time.perf_counter()
+    scalar = run_scalar()
+    scalar_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = batch_run(lanes, cm, chunks_per_msg=chunks)
+    batched_wall = time.perf_counter() - t0
+    worst_rel = max(
+        abs(float(b) - s) / max(abs(s), 1e-30)
+        for b, s in zip(res.completion, scalar))
+    return {
+        "tier": "scoring", "n": n, "r": 2, "m_bytes": m, "chunks": chunks,
+        "delta": DELTA, "lanes": len(lanes),
+        "scalar_wall_s": round(scalar_wall, 4),
+        "batched_wall_s": round(batched_wall, 4),
+        "batched_speedup": round(scalar_wall / max(batched_wall, 1e-9), 2),
+        "fast_lanes": int(res.fast_path.sum()),
+        "worst_rel_diff": float(f"{worst_rel:.3e}"),
+        "completion_checksum": float(res.completion.sum()),
+    }
+
+
+def bench_scale(n: int, m: float = 4 * MB, chunks: int = 4,
+                max_lanes: int = 30) -> dict:
+    """Batched-only: grids the scalar loop cannot touch in CI time."""
+    from repro.core import PAPER_DEFAULT
+    from repro.core.batchsim import batch_run, clear_tape_caches
+
+    cm = PAPER_DEFAULT.replace(delta=DELTA)
+    lanes = _candidate_lanes(n, m, max_lanes=max_lanes)
+    clear_tape_caches()  # first contact at this scale: include tape compile
+    t0 = time.perf_counter()
+    res = batch_run(lanes, cm, chunks_per_msg=chunks)
+    batched_wall = time.perf_counter() - t0
+    return {
+        "tier": "scale", "n": n, "r": 2, "m_bytes": m, "chunks": chunks,
+        "delta": DELTA, "lanes": len(lanes),
+        "scalar_wall_s": None,     # deliberately never run at this scale
+        "batched_wall_s": round(batched_wall, 4),
+        "batched_speedup": None,
+        "fast_lanes": int(res.fast_path.sum()),
+        "worst_rel_diff": None,
+        "completion_checksum": float(res.completion.sum()),
+    }
+
+
+def bench_plan_cache(n: int = 96, repeats: int = 20) -> dict:
+    """Serving path: repeated PlanRequest traffic through one Planner."""
+    from repro.core import PAPER_DEFAULT
+    from repro.planner import Planner, PlanRequest
+
+    cm = PAPER_DEFAULT.replace(delta=DELTA)
+    reqs = [PlanRequest(kind=kind, n=n, m_bytes=(i + 1) * MB, cost_model=cm,
+                        fabric="ocs-sim")
+            for kind in ("a2a", "rs") for i in range(2)]
+    planner = Planner(cache_size=64, sim_chunks=8)
+    t0 = time.perf_counter()
+    for req in reqs:
+        planner.plan(req)
+    cold_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        planner.plan_batch(reqs)
+    warm_wall = time.perf_counter() - t0
+    info = planner.cache_info()
+    warm_per_plan_us = warm_wall * 1e6 / (repeats * len(reqs))
+    cold_per_plan_us = cold_wall * 1e6 / len(reqs)
+    return {
+        "n": n, "distinct_requests": len(reqs),
+        "total_plans": len(reqs) * (repeats + 1),
+        "hits": info.hits, "misses": info.misses,
+        "hit_rate": round(info.hits / max(1, info.hits + info.misses), 4),
+        "cold_plan_us": round(cold_per_plan_us, 1),
+        "cached_plan_us": round(warm_per_plan_us, 1),
+        "cache_amortization": round(cold_per_plan_us
+                                    / max(warm_per_plan_us, 1e-3), 1),
+    }
+
+
+def check_gates(rows: list[dict], cache: dict, min_speedup: float) -> list[str]:
+    errors = []
+    for row in rows:
+        key = f"tier={row['tier']} n={row['n']}"
+        if row["fast_lanes"] != row["lanes"]:
+            errors.append(f"{key}: only {row['fast_lanes']}/{row['lanes']} "
+                          f"lanes on the vectorized fast path (uniform lanes "
+                          f"must never fall back)")
+        if row["tier"] != "scoring":
+            continue
+        if row["batched_speedup"] < min_speedup:
+            errors.append(f"{key}: batched_speedup {row['batched_speedup']} "
+                          f"< {min_speedup}")
+        if row["worst_rel_diff"] > 1e-9:
+            errors.append(f"{key}: batched vs scalar completion drift "
+                          f"{row['worst_rel_diff']} > 1e-9")
+    if cache["misses"] != cache["distinct_requests"]:
+        errors.append(f"plan cache: {cache['misses']} misses != "
+                      f"{cache['distinct_requests']} distinct requests")
+    expected_hits = cache["total_plans"] - cache["distinct_requests"]
+    if cache["hits"] != expected_hits:
+        errors.append(f"plan cache: {cache['hits']} hits != expected "
+                      f"{expected_hits}")
+    return errors
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--smoke", action="store_true",
+                    help="scoring tier + plan cache only (CI; the committed "
+                         "baseline still covers every row produced)")
+    ap.add_argument("--scale-ns", default="768,1536",
+                    help="comma-separated n values for the batched-only tier")
+    ap.add_argument("--min-speedup", type=float, default=10.0,
+                    help="min batched/scalar wall ratio on the scoring tier")
+    args = ap.parse_args(argv)
+
+    rows = [bench_scoring()]
+    if not args.smoke:
+        for n in (int(v) for v in args.scale_ns.split(",")):
+            rows.append(bench_scale(n))
+    cache = bench_plan_cache()
+
+    print("tier,n,lanes,scalar_wall_s,batched_wall_s,speedup,fast_lanes,"
+          "worst_rel_diff")
+    for row in rows:
+        print(f"{row['tier']},{row['n']},{row['lanes']},"
+              f"{row['scalar_wall_s']},{row['batched_wall_s']},"
+              f"{row['batched_speedup']},{row['fast_lanes']},"
+              f"{row['worst_rel_diff']}")
+    print(f"# plan cache: {cache['hits']} hits / {cache['misses']} misses "
+          f"(rate {cache['hit_rate']}), cold {cache['cold_plan_us']} us -> "
+          f"cached {cache['cached_plan_us']} us "
+          f"({cache['cache_amortization']}x)")
+
+    errors = check_gates(rows, cache, args.min_speedup)
+    if errors:
+        # gate first: never overwrite the committed baseline with bad data
+        for e in errors:
+            print(f"# FAIL: {e}", file=sys.stderr)
+        sys.exit(1)
+    if args.json:
+        out = {
+            "meta": {
+                "what": "scalar sparse FabricSim vs vectorized batch engine "
+                        "(core.batchsim) wall time, plus the LRU plan-cache "
+                        "serving path (BENCH_sim_scale baseline)",
+                "delta": DELTA,
+            },
+            "rows": rows,
+            "plan_cache": cache,
+        }
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"# wrote {len(rows)} rows to {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -35,12 +35,14 @@ def main():
     ap.add_argument("--radix", type=int, default=2,
                     help="Bruck radix r (mixed-radix generalization; 2 = paper)")
     ap.add_argument("--fabric", default="ocs",
-                    choices=["ocs", "static", "ocs-overlap"],
+                    choices=["ocs", "static", "ocs-overlap", "ocs-sim"],
                     help="'ocs-overlap' = sparse reconfiguration with "
-                         "hidden-delta credit (see core/fabricsim.py)")
+                         "hidden-delta credit (see core/fabricsim.py); "
+                         "'ocs-sim' = every candidate event-scored by the "
+                         "vectorized batch fabric engine (core/batchsim.py)")
     ap.add_argument("--overlap", type=float, default=0.0,
                     help="fraction of delta hidden behind communication "
-                         "(requires --fabric ocs-overlap)")
+                         "(requires --fabric ocs-overlap or ocs-sim)")
     ap.add_argument("--max-r", type=int, default=None,
                     help="cap on reconfigurations R")
     ap.add_argument("--top", type=int, default=5,
@@ -53,10 +55,11 @@ def main():
     cm = PAPER_DEFAULT.replace(delta=args.delta_us * 1e-6,
                                alpha_h=args.alpha_h_us * 1e-6)
 
+    hidden_fabrics = ("ocs-overlap", "ocs-sim")
     res = Planner().plan(PlanRequest(
         kind=args.collective, n=n, m_bytes=m, cost_model=cm, r=args.radix,
         fabric=args.fabric, overlap=args.overlap,
-        paper_faithful=(args.fabric != "ocs-overlap"),
+        paper_faithful=(args.fabric not in hidden_fabrics),
         max_R=args.max_r, ports=args.ports))
     t_bridge = res.predicted_time
     if args.collective == "ar":
@@ -64,9 +67,10 @@ def main():
         print(f"  rs x={res.rs_schedule.x}  ag x={res.ag_schedule.x}")
     else:
         print(f"BRIDGE plan: {res.strategy}  x={res.schedule.x}")
-        if args.fabric != "ocs-overlap":
+        if args.fabric not in hidden_fabrics:
             t_bridge = collective_time(res.schedule, m, cm, ports=args.ports).total
-    print(f"  completion time {t_bridge * 1e3:.3f} ms")
+    print(f"  completion time {t_bridge * 1e3:.3f} ms"
+          + ("  (batched event simulation)" if args.fabric == "ocs-sim" else ""))
 
     print(f"\n  ranked alternatives (top {args.top} of {len(res.alternatives)}):")
     for alt in res.alternatives[:args.top]:
@@ -75,24 +79,41 @@ def main():
               f" {alt.predicted_time * 1e3:10.3f} ms")
     print()
 
-    # under ocs-overlap, score reconfiguring baselines with the same
-    # hidden-delta credit so the printed speedups compare one fabric semantics
-    hidden = args.fabric == "ocs-overlap"
+    # under ocs-overlap / ocs-sim, score reconfiguring baselines with the
+    # same fabric semantics so the printed speedups compare like with like
+    hidden = args.fabric in hidden_fabrics
     kind = args.collective
     if kind == "ar":
-        t_static = (baselines.s_bruck("rs", n, m, cm, r=args.radix).total
-                    + baselines.s_bruck("ag", n, m, cm, r=args.radix).total)
+        if args.fabric == "ocs-sim":
+            from repro.core import batch_completion_times, static_schedule
+            ts = batch_completion_times(
+                [static_schedule("rs", n, args.radix),
+                 static_schedule("ag", n, args.radix)], m, cm,
+                overlap=args.overlap, chunks_per_msg=8)
+            t_static = float(ts[0] + ts[1])
+        else:
+            t_static = (baselines.s_bruck("rs", n, m, cm, r=args.radix).total
+                        + baselines.s_bruck("ag", n, m, cm, r=args.radix).total)
         rows = [("S-BRUCK (static)", t_static)]
     else:
-        if hidden:
+        if args.fabric == "ocs-sim":
+            from repro.core import (batch_completion_times,
+                                    every_step_schedule, static_schedule)
+            ts = batch_completion_times(
+                [static_schedule(kind, n, args.radix),
+                 every_step_schedule(kind, n, args.radix)], m, cm,
+                overlap=args.overlap, chunks_per_msg=8)
+            t_sbruck, t_gbruck = float(ts[0]), float(ts[1])
+        elif hidden:
             from repro.core import collective_time_overlap, every_step_schedule
+            t_sbruck = baselines.s_bruck(kind, n, m, cm, r=args.radix).total
             t_gbruck = collective_time_overlap(
                 every_step_schedule(kind, n, args.radix), m, cm,
                 args.overlap).total
         else:
+            t_sbruck = baselines.s_bruck(kind, n, m, cm, r=args.radix).total
             t_gbruck = baselines.g_bruck(kind, n, m, cm, r=args.radix).total
-        rows = [("S-BRUCK (static)",
-                 baselines.s_bruck(kind, n, m, cm, r=args.radix).total),
+        rows = [("S-BRUCK (static)", t_sbruck),
                 ("G-BRUCK (every step)", t_gbruck)]
     if kind in ("rs", "ag", "ar"):
         rows.append(("RING", baselines.ring(kind, n, m, cm).total))

@@ -26,7 +26,7 @@ import dataclasses
 from repro.core import CostModel
 from repro.core.cost_model import TPU_V5E
 from repro.core.schedules import Schedule
-from repro.planner import PlanRequest, Planner, default_strategy_names
+from repro.planner import PlanRequest, default_planner, default_strategy_names
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,8 +54,10 @@ def plan_gradient_sync(
     paper's model where reconfigurations reset hop distances, and the
     returned schedules drive the optical fabric.
 
-    Thin wrapper over ``Planner().plan(PlanRequest(kind='ar', ...))``;
-    signature and behavior are unchanged from the pre-planner version.
+    Thin wrapper over ``default_planner().plan(PlanRequest(kind='ar', ...))``
+    (the shared LRU-cached serving path — a training loop re-planning the
+    same gradient sync every step gets an amortized-O(1) answer); signature
+    and behavior are unchanged from the pre-planner version.
     """
     cm = cm or TPU_V5E
     names: tuple[str, ...] = ()
@@ -66,7 +68,7 @@ def plan_gradient_sync(
     if n <= 1 or not names:
         return CollectivePlan("psum", None, None, 0.0, {})
 
-    res = Planner().plan(PlanRequest(
+    res = default_planner().plan(PlanRequest(
         kind="ar", n=n, m_bytes=float(m_bytes), cost_model=cm,
         fabric=fabric, strategies=names))
 

@@ -4,9 +4,12 @@ Paper: "BRIDGE: Optimizing Collective Communication Schedules in Reconfigurable
 Networks with Reusable Subrings" (Juerss & Schmid, 2026).
 """
 from . import baselines
+from .batchsim import (BatchFabricResult, BatchLane, ScheduleTape,
+                       batch_completion_times, batch_run, clear_tape_caches,
+                       compile_tape)
 from .bruck import (Collective, Step, a2a_steps, ag_steps, is_pow2, num_steps,
                     rs_steps, schedule_length, simulate_a2a_data,
-                    simulate_ag_data, simulate_rs_data, steps_for)
+                    simulate_ag_data, simulate_rs_data, step_counts, steps_for)
 from .cost_model import (CostModel, OCS_TECHNOLOGIES, PAPER_DEFAULT, TPU_V5E,
                          gbps, ocs_ports, ocs_preset)
 from .fabricsim import FabricResult, FabricSim, simulate_fabric, straggler_speeds
@@ -26,7 +29,10 @@ from .subrings import BlockedRing, Topology, ring, subring_topology
 __all__ = [
     "Collective", "Step", "a2a_steps", "ag_steps", "is_pow2", "num_steps",
     "rs_steps", "schedule_length", "simulate_a2a_data", "simulate_ag_data",
-    "simulate_rs_data", "steps_for",
+    "simulate_rs_data", "step_counts", "steps_for",
+    "BatchFabricResult", "BatchLane", "ScheduleTape",
+    "batch_completion_times", "batch_run", "clear_tape_caches",
+    "compile_tape",
     "OCS_TECHNOLOGIES", "PAPER_DEFAULT", "TPU_V5E", "CostModel", "gbps",
     "ocs_ports", "ocs_preset",
     "Plan", "Schedule", "SegmentTables", "ag_transmission_optimal",

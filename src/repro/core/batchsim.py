@@ -1,0 +1,381 @@
+"""NumPy-vectorized batch fabric engine: compiled schedule tapes + playback.
+
+`FabricSim`'s sparse mode is a per-chunk Python ``heapq`` loop: every run
+re-derives the segment maps, hop counts, and expected service counts from the
+`Schedule`, then pushes O(n * chunks * sum(hops)) events through a heap.
+That is fine for one scenario, but too slow to sit on the planning hot path
+where a candidate set of 30+ schedules must be event-scored per request, or
+to reach n >= 768 fabrics at all.
+
+This module splits the work the way a compiler does:
+
+  - `compile_tape(schedule)` lowers a `Schedule` once into a reusable
+    `ScheduleTape`: per-sub-step link offsets, hop counts, integer payload
+    counts (so any m is one multiply away), segment maps, and the
+    changed-circuit mask at every reconfiguration boundary.  Tapes are
+    memoized per schedule (`functools.lru_cache`), so even the scalar sparse
+    loop stops paying the rebuild cost when only scenario knobs change.
+  - `batch_run(lanes, cm)` plays B *lanes* — (schedule, m_bytes, delta,
+    overlap, straggler / skew vector) configurations — forward together,
+    step by step, with array ops over the ``[B, n, chunks]`` grid.
+
+Exactness.  The playback serves each port's traffic in the *canonical*
+order: segments strictly in sequence (the scalar simulator enforces this via
+its per-port segment gate), steps in order within a segment, and hop streams
+in order within a step, with every chunk's service start computed as
+``max(arrival, port_free)`` in the same float-op order as the scalar loop.
+The event-driven heap follows exactly this order unless traffic *overtakes*:
+a later step's chunk reaching a port before an earlier step's chunk has
+arrived (the port could go idle and serve out of order), or a hop-1 chunk
+arriving before the port's own injection.  Both conditions are checked from
+the computed timeline — they are sufficient conditions for the heap execution
+to coincide with the canonical one — and any lane that trips a check is
+transparently re-run through the scalar `FabricSim` oracle
+(``BatchFabricResult.fast_path`` records which lanes took which path).  The
+differential-fuzz suite (tests/test_batchsim.py) pins fast-path results to
+the scalar loop at 1e-9 relative tolerance across a seeded
+n x r x R x delta x straggler grid.
+
+The planner's ``fabric="ocs-sim"`` event-scores whole candidate sets through
+`batch_run` in a single call; `benchmarks/sim_bench.py` records the wall-time
+ratio vs the scalar loop (>= 10x at n = 96 for a 30-candidate batch, and
+n >= 768 grids that the scalar engine cannot touch in CI time).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import numpy as np
+
+from .bruck import step_counts
+from .cost_model import CostModel
+from .schedules import Schedule
+
+
+def validate_rates(name: str, rates, n: int) -> list[float]:
+    """Shared per-node rate-vector validation (length n, strictly positive)."""
+    rates = list(rates)
+    if len(rates) != n:
+        raise ValueError(f"{name} has length {len(rates)} != n={n}")
+    if any(v <= 0 for v in rates):
+        raise ValueError(f"{name} entries must be > 0, got {rates}")
+    return rates
+
+
+# --- Tape compilation ---------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleTape:
+    """Everything `FabricSim.run` used to rebuild per call, compiled once.
+
+    All payload fields are m-independent: sub-step k moves
+    ``m * counts[k] / n`` bytes (the exact expression the step generators
+    use, so scaling is bit-identical).  Plain tuples keep the tape hashable
+    and cheap for the scalar loop; `arrays` caches the NumPy views the batch
+    engine indexes with.
+    """
+
+    kind: str
+    n: int
+    r: int
+    S: int
+    offsets: tuple[int, ...]        # message offset per sub-step
+    counts: tuple[int, ...]         # integer block count per sub-step
+    g_step: tuple[int, ...]         # link offset in force per sub-step
+    hops: tuple[int, ...]           # offsets[k] // g_step[k]
+    boundary: tuple[int, ...]       # schedule.x (1 = reconfigure before k)
+    changed_pay: tuple[bool, ...]   # boundary k physically rewires circuits
+    seg_of: tuple[int, ...]         # sub-step -> segment index
+    seg_g: tuple[int, ...]          # link offset per segment
+    seg_hops: tuple[int, ...]       # total hops per segment (per-port services / C)
+    changed_links: tuple[int, ...]  # Schedule.reconfig_changed_links()
+
+    @functools.cached_property
+    def arrays(self) -> dict[str, np.ndarray]:
+        out = {
+            "offsets": np.array(self.offsets, dtype=np.int64),
+            "counts": np.array(self.counts, dtype=np.float64),
+            "g_step": np.array(self.g_step, dtype=np.int64),
+            "hops": np.array(self.hops, dtype=np.int64),
+            "changed_pay": np.array(self.changed_pay, dtype=bool),
+            "boundary": np.array(self.boundary, dtype=bool),
+        }
+        for arr in out.values():
+            arr.setflags(write=False)
+        return out
+
+
+@functools.lru_cache(maxsize=4096)
+def compile_tape(schedule: Schedule) -> ScheduleTape:
+    """Lower ``schedule`` to its playback tape (memoized per Schedule)."""
+    kind, n, r = schedule.kind, schedule.n, schedule.r
+    structure = step_counts(kind, n, r)
+    offsets = tuple(off for off, _, _, _ in structure)
+    counts = tuple(cnt for _, cnt, _, _ in structure)
+    g_step = tuple(schedule.link_offsets())
+    hops = tuple(off // g for off, g in zip(offsets, g_step))
+    segs = schedule.segments
+    seg_of = [0] * len(offsets)
+    for si, (a, b) in enumerate(segs):
+        for k in range(a, b + 1):
+            seg_of[k] = si
+    seg_g = tuple(g_step[a] for a, _ in segs)
+    seg_hops = tuple(sum(hops[a:b + 1]) for a, b in segs)
+    changed_pay = tuple(
+        bool(xk) and g_step[k] != g_step[k - 1]
+        for k, xk in enumerate(schedule.x))
+    return ScheduleTape(
+        kind=kind, n=n, r=r, S=len(offsets), offsets=offsets, counts=counts,
+        g_step=g_step, hops=hops, boundary=tuple(schedule.x),
+        changed_pay=changed_pay, seg_of=tuple(seg_of), seg_g=seg_g,
+        seg_hops=seg_hops, changed_links=schedule.reconfig_changed_links())
+
+
+def clear_tape_caches() -> None:
+    """Drop memoized tapes (benchmarks use this for cold-path timings)."""
+    compile_tape.cache_clear()
+
+
+# --- Batch configuration ------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchLane:
+    """One (schedule, scenario) configuration in a batch.
+
+    delta          : reconfiguration delay override; None = cm.delta.
+    overlap        : fraction of delta hidden behind communication, [0, 1].
+    link_speed     : per-node relative egress rate (None = nominal).
+    payload_scale  : per-destination payload multiplier (None = uniform).
+    """
+
+    schedule: Schedule
+    m_bytes: float
+    delta: float | None = None
+    overlap: float = 0.0
+    link_speed: tuple[float, ...] | None = None
+    payload_scale: tuple[float, ...] | None = None
+
+    def __post_init__(self):
+        if not 0.0 <= self.overlap <= 1.0:
+            raise ValueError(f"overlap must be in [0, 1], got {self.overlap}")
+        if self.m_bytes < 0:
+            raise ValueError(f"payload must be >= 0, got {self.m_bytes}")
+        if self.delta is not None and self.delta < 0:
+            raise ValueError(f"delta must be >= 0, got {self.delta}")
+        n = self.schedule.n
+        for name in ("link_speed", "payload_scale"):
+            v = getattr(self, name)
+            if v is not None:
+                object.__setattr__(self, name, tuple(validate_rates(name, v, n)))
+        object.__setattr__(self, "m_bytes", float(self.m_bytes))
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchFabricResult:
+    """Outcome of one `batch_run`: `FabricResult` fields with a lane axis.
+
+    fast_path[b] is True when lane b completed on the vectorized tape
+    playback and False when it was re-run through the scalar oracle (the
+    canonical-order check tripped, e.g. under a severe straggler).
+    """
+
+    completion: np.ndarray      # [B]
+    node_done: np.ndarray       # [B, n]
+    step_done: np.ndarray       # [B, S]
+    chunks_moved: np.ndarray    # [B] int
+    reconfigs_paid: np.ndarray  # [B] int
+    delta_stall: np.ndarray     # [B]
+    fast_path: np.ndarray       # [B] bool
+    lanes: tuple[BatchLane, ...]
+
+    def __len__(self) -> int:
+        return len(self.lanes)
+
+    def result(self, i: int):
+        """Lane i as a scalar-compatible `FabricResult` (mode='batched')."""
+        from .fabricsim import FabricResult  # deferred: fabricsim imports us
+
+        tape = compile_tape(self.lanes[i].schedule)
+        return FabricResult(
+            completion=float(self.completion[i]), mode="batched",
+            step_done=tuple(float(t) for t in self.step_done[i]),
+            node_done=tuple(float(t) for t in self.node_done[i]),
+            chunks_moved=int(self.chunks_moved[i]),
+            changed_links=tape.changed_links,
+            reconfigs_paid=int(self.reconfigs_paid[i]),
+            delta_stall=float(self.delta_stall[i]))
+
+
+# --- Batched playback ---------------------------------------------------------
+
+
+def batch_run(lanes: Sequence[BatchLane], cm: CostModel, *,
+              chunks_per_msg: int = 32,
+              allow_fallback: bool = True) -> BatchFabricResult:
+    """Play every lane's tape forward together (sparse-fabric semantics).
+
+    All lanes must share the same world size n and sub-step count S (any mix
+    of collectives / segmentations at one (n, r) qualifies — including the
+    RS and AG phases of an AllReduce).  Set ``allow_fallback=False`` to get a
+    RuntimeError instead of the scalar re-run when a lane's canonical-order
+    check trips (used by tests to prove the fast path was exercised).
+    """
+    lanes = tuple(lanes)
+    if not lanes:
+        raise ValueError("batch_run needs at least one lane")
+    tapes = [compile_tape(lane.schedule) for lane in lanes]
+    n, S = tapes[0].n, tapes[0].S
+    for lane, tape in zip(lanes, tapes):
+        if tape.n != n or tape.S != S:
+            raise ValueError(
+                f"all lanes must share (n, S); got ({tape.n}, {tape.S}) for "
+                f"{lane.schedule.kind} vs ({n}, {S})")
+    B = len(lanes)
+    C = max(1, int(chunks_per_msg))
+    alpha_s, alpha_h, beta = cm.alpha_s, cm.alpha_h, cm.beta
+
+    # --- per-lane knob arrays ----------------------------------------------
+    m = np.array([lane.m_bytes for lane in lanes])
+    delta = np.array([cm.delta if lane.delta is None else lane.delta
+                      for lane in lanes])
+    overlap = np.array([lane.overlap for lane in lanes])
+    delta_eff = delta * (1.0 - overlap)
+    speed = np.ones((B, n))
+    for b, lane in enumerate(lanes):
+        if lane.link_speed is not None:
+            speed[b] = lane.link_speed
+    any_scale = any(lane.payload_scale is not None for lane in lanes)
+    scale = None
+    if any_scale:
+        scale = np.ones((B, n))
+        for b, lane in enumerate(lanes):
+            if lane.payload_scale is not None:
+                scale[b] = lane.payload_scale
+
+    # --- per-lane tape arrays [B, S] ---------------------------------------
+    counts = np.stack([t.arrays["counts"] for t in tapes])
+    g_step = np.stack([t.arrays["g_step"] for t in tapes])
+    hops = np.stack([t.arrays["hops"] for t in tapes])
+    boundary = np.stack([t.arrays["boundary"] for t in tapes])
+    changed = np.stack([t.arrays["changed_pay"] for t in tapes])
+
+    ports = np.arange(n, dtype=np.int64)[None, :]           # [1, n]
+
+    F = np.zeros((B, n))              # port busy-until
+    inj = np.full((B, n), alpha_s)    # injection times of the current step
+    node_done = np.zeros((B, n))
+    step_done = np.zeros((B, S))
+    ok = np.ones(B, dtype=bool)       # canonical-order check per lane
+    seg_max_arr = np.full((B, n), -np.inf)  # latest arrival this segment
+
+    for k in range(S):
+        if k > 0:
+            inj = recv + alpha_s
+            F = F + np.where(changed[:, k], delta_eff, 0.0)[:, None]
+        h = hops[:, k]                                       # [B]
+        g = g_step[:, k]                                     # [B]
+        nb = (m * counts[:, k]) / n                          # [B]
+        gather_idx = (ports - g[:, None]) % n                # [B, n]
+        gather_idx3 = np.broadcast_to(gather_idx[:, :, None], (B, n, C))
+        arr = np.broadcast_to(inj[:, :, None], (B, n, C))    # stream-0 arrivals
+        first_arr, last_arr = inj.copy(), inj.copy()         # min/max over streams
+        recv = np.empty((B, n))
+        comp = np.empty((B, n, C))
+        for j in range(int(h.max())):
+            active = j < h                                   # [B]
+            # per-port service time of this hop stream (scalar op order:
+            # ((nbytes [* dest scale]) / C) * beta / speed)
+            if scale is None:
+                nbw = np.broadcast_to(nb[:, None], (B, n))
+            else:
+                dest = (ports + ((h - j) * g)[:, None]) % n
+                nbw = nb[:, None] * np.take_along_axis(scale, dest, axis=1)
+            tau = (nbw / C) * beta / speed
+            f = F
+            for c in range(C):
+                f = np.maximum(f, arr[:, :, c]) + tau
+                comp[:, :, c] = f
+            F = np.where(active[:, None], f, F)
+            nxt = np.take_along_axis(comp, gather_idx3, axis=1) + alpha_h
+            final = active & (j + 1 >= h)
+            if final.any():
+                deliver = np.take_along_axis(comp[:, :, C - 1],
+                                             gather_idx, axis=1) + alpha_h
+                recv = np.where(final[:, None], deliver, recv)
+            cont = active & (j + 1 < h)
+            if not cont.any():
+                break
+            if j == 0:
+                # a hop-1 chunk overtaking the port's own injection breaks
+                # the canonical within-step stream order
+                ok &= ~(cont & (nxt[:, :, 0] <= inj).any(axis=1))
+            first_arr = np.where(cont[:, None],
+                                 np.minimum(first_arr, nxt[:, :, 0]), first_arr)
+            last_arr = np.where(cont[:, None],
+                                np.maximum(last_arr, nxt[:, :, C - 1]), last_arr)
+            arr = nxt
+        # canonical cross-step order within a segment: step k's first
+        # arrivals must not precede (or tie with) any earlier arrival at the
+        # same port — the scalar loop's segment gate covers boundaries, so
+        # the running max resets there
+        if k > 0:
+            same_seg = ~boundary[:, k]
+            ok &= ~(same_seg & (first_arr <= seg_max_arr).any(axis=1))
+        reset = boundary[:, k][:, None]
+        seg_max_arr = np.where(reset, last_arr,
+                               np.maximum(seg_max_arr, last_arr))
+        step_done[:, k] = recv.max(axis=1)
+    node_done = recv
+
+    completion = node_done.max(axis=1)
+    n_changed = changed.sum(axis=1)
+    reconfigs_paid = (n * n_changed).astype(np.int64)
+    delta_stall = reconfigs_paid * delta_eff
+    chunks_moved = (n * C * hops.sum(axis=1)).astype(np.int64)
+
+    if not ok.all():
+        if not allow_fallback:
+            raise RuntimeError(
+                f"canonical-order check tripped for lanes "
+                f"{np.flatnonzero(~ok).tolist()} and fallback is disabled")
+        from .fabricsim import FabricSim  # deferred: fabricsim imports us
+
+        for b in np.flatnonzero(~ok):
+            lane = lanes[b]
+            sim = FabricSim(
+                chunks_per_msg=C, overlap=float(overlap[b]), mode="sparse",
+                link_speed=(list(lane.link_speed)
+                            if lane.link_speed is not None else None),
+                payload_scale=(list(lane.payload_scale)
+                               if lane.payload_scale is not None else None))
+            res = sim.run(lane.schedule, float(m[b]),
+                          cm.replace(delta=float(delta[b])))
+            completion[b] = res.completion
+            node_done[b] = res.node_done
+            step_done[b] = res.step_done
+            chunks_moved[b] = res.chunks_moved
+            reconfigs_paid[b] = res.reconfigs_paid
+            delta_stall[b] = res.delta_stall
+
+    return BatchFabricResult(
+        completion=completion, node_done=node_done, step_done=step_done,
+        chunks_moved=chunks_moved, reconfigs_paid=reconfigs_paid,
+        delta_stall=delta_stall, fast_path=ok, lanes=lanes)
+
+
+def batch_completion_times(schedules: Sequence[Schedule], m: float,
+                           cm: CostModel, *, overlap: float = 0.0,
+                           chunks_per_msg: int = 32) -> np.ndarray:
+    """Event-level completion time of every schedule in one batched call.
+
+    The planner's ``fabric='ocs-sim'`` scoring primitive: all schedules share
+    (n, S) — e.g. one request's full candidate set — and the same payload /
+    cost model / overlap credit.
+    """
+    lanes = [BatchLane(schedule=s, m_bytes=m, overlap=overlap)
+             for s in schedules]
+    return batch_run(lanes, cm, chunks_per_msg=chunks_per_msg).completion

@@ -37,6 +37,7 @@ as used throughout the paper's evaluation).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Literal
 
 import numpy as np
@@ -141,8 +142,30 @@ def ag_steps(n: int, m: float, r: int = 2) -> list[Step]:
     return [dataclasses.replace(st, index=i) for i, st in enumerate(rev)]
 
 
+@functools.lru_cache(maxsize=None)
+def step_counts(kind: Collective, n: int, r: int = 2) -> tuple[tuple[int, int, int, int], ...]:
+    """m-independent sub-step structure: (offset, block_count, phase, digit).
+
+    The payload of sub-step k is always ``m * block_count / n`` (the digit
+    class carries ``block_count`` of the n per-node blocks), so the full step
+    sequence for any m is one multiplication away.  Memoized: this is what
+    `steps_for` re-derived from scratch on every simulator/planner call, which
+    profiling showed dominating sweep loops.
+    """
+    gen = {"a2a": a2a_steps, "rs": rs_steps, "ag": ag_steps}[kind]
+    # Generate with m = n so nbytes == block_count exactly (integers in float).
+    return tuple((st.offset, int(st.nbytes), st.phase, st.digit)
+                 for st in gen(n, float(n), r))
+
+
 def steps_for(kind: Collective, n: int, m: float, r: int = 2) -> list[Step]:
-    return {"a2a": a2a_steps, "rs": rs_steps, "ag": ag_steps}[kind](n, m, r)
+    """Sub-step sequence of a collective at payload m (cached structure).
+
+    Bit-identical to calling the per-kind generators directly: the payload is
+    computed as ``m * count / n`` in the same expression order.
+    """
+    return [Step(index=i, offset=off, nbytes=m * cnt / n, phase=ph, digit=dg)
+            for i, (off, cnt, ph, dg) in enumerate(step_counts(kind, n, r))]
 
 
 def schedule_length(kind: Collective, n: int, r: int = 2) -> int:

@@ -50,6 +50,11 @@ class CostModel:
         reconfiguration/communication overlap).  Switching is parallel across
         ports, so any change blocks its dependent paths for the residual
         ``delta * (1 - overlap)``; a boundary that changes nothing is free.
+
+        The batch fabric engine (`core.batchsim`) applies the same
+        ``delta * (1 - overlap)`` charge per lane with the lane's own delta
+        override, which is why it computes the term inline rather than
+        through this method.
         """
         if not 0.0 <= overlap <= 1.0:
             raise ValueError(f"overlap must be in [0, 1], got {overlap}")

@@ -110,6 +110,11 @@ def collective_time_event(
     pauses, i.e. `fabricsim.FabricSim` in full-pause mode (bit-stable with
     the pre-FabricSim implementation).  Use `FabricSim(mode="sparse")` for
     the asynchronous per-link fabric with sparse reconfiguration.
+
+    Per-call overhead is one FabricSim construction: the step sequence,
+    per-step link offsets, and changed-boundary structure all come from the
+    schedule's memoized playback tape (`batchsim.compile_tape`), so sweep
+    loops no longer re-derive `steps_for` / segment gcds on every call.
     """
     from .fabricsim import FabricSim  # deferred: fabricsim imports simulate_step
 

@@ -28,18 +28,26 @@ the surviving subring links keep carrying traffic — from a full-fabric one.
 ``mode="full-pause"`` reproduces the legacy synchronized simulator
 bit-for-bit (it runs the exact `collective_time_event` loop), which keeps
 the Figs 5-12 event-level cross-checks stable; `collective_time_event` is
-now a thin wrapper over it.
+now a thin wrapper over it.  ``mode="batched"`` routes through the
+vectorized tape-playback engine (`core.batchsim`) — sparse semantics, array
+ops instead of the per-chunk heap, scalar-oracle fallback when the
+canonical-order check trips.
+
+Both scalar modes read their per-schedule precomputation (segment maps, hop
+counts, expected per-port service counts, payload structure) from the
+memoized `batchsim.compile_tape`, so repeated runs under different scenario
+knobs stop paying the rebuild cost.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 
-from .bruck import steps_for
+from .batchsim import BatchLane, batch_run, compile_tape, validate_rates
 from .cost_model import CostModel
 from .schedules import Schedule
 
-_MODES = ("sparse", "full-pause")
+_MODES = ("sparse", "full-pause", "batched")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,13 +82,7 @@ class FabricResult:
     delta_stall: float
 
 
-def _validate_rates(name: str, rates, n: int) -> list[float]:
-    rates = list(rates)
-    if len(rates) != n:
-        raise ValueError(f"{name} has length {len(rates)} != n={n}")
-    if any(v <= 0 for v in rates):
-        raise ValueError(f"{name} entries must be > 0, got {rates}")
-    return rates
+_validate_rates = validate_rates  # canonical implementation lives in batchsim
 
 
 class FabricSim:
@@ -88,8 +90,11 @@ class FabricSim:
 
     chunks_per_msg : MTU-like pipelining knob (chunks per per-step message).
     overlap        : fraction of delta hidden behind communication, in [0, 1]
-                     (sparse mode only; full-pause always blocks the fabric).
-    mode           : 'sparse' | 'full-pause'.
+                     (sparse/batched modes; full-pause always blocks the
+                     fabric).
+    mode           : 'sparse' (per-chunk event loop) | 'full-pause' (legacy
+                     synchronized loop) | 'batched' (vectorized tape playback
+                     with sparse semantics, see `core.batchsim`).
     link_speed     : per-node relative egress rate (1.0 nominal, < 1 models a
                      degraded transceiver / straggler).
     payload_scale  : per-destination payload multiplier — the message a node
@@ -107,12 +112,12 @@ class FabricSim:
             raise ValueError(f"overlap must be in [0, 1], got {overlap}")
         if mode == "full-pause" and payload_scale is not None:
             raise ValueError(
-                "payload_scale requires mode='sparse' (full-pause is the "
-                "legacy uniform-payload compatibility mode)")
+                "payload_scale requires mode='sparse' or 'batched' "
+                "(full-pause is the legacy uniform-payload compatibility mode)")
         if mode == "full-pause" and overlap != 0.0:
             raise ValueError(
-                "overlap requires mode='sparse': full-pause always blocks "
-                "the whole fabric for the full delta")
+                "overlap requires mode='sparse' or 'batched': full-pause "
+                "always blocks the whole fabric for the full delta")
         self.chunks_per_msg = max(1, int(chunks_per_msg))
         self.overlap = float(overlap)
         self.mode = mode
@@ -124,7 +129,27 @@ class FabricSim:
     def run(self, schedule: Schedule, m: float, cm: CostModel) -> FabricResult:
         if self.mode == "full-pause":
             return self._run_full_pause(schedule, m, cm)
+        if self.mode == "batched":
+            return self._run_batched(schedule, m, cm)
         return self._run_sparse(schedule, m, cm)
+
+    # --- batched (vectorized tape playback) mode ----------------------------
+
+    def _run_batched(self, schedule: Schedule, m: float,
+                     cm: CostModel) -> FabricResult:
+        """Single-lane `batchsim.batch_run` (sparse semantics, array ops)."""
+        n = schedule.n
+        if self.link_speed is not None:
+            _validate_rates("link_speed", self.link_speed, n)
+        if self.payload_scale is not None:
+            _validate_rates("payload_scale", self.payload_scale, n)
+        lane = BatchLane(
+            schedule=schedule, m_bytes=m, overlap=self.overlap,
+            link_speed=(tuple(self.link_speed)
+                        if self.link_speed is not None else None),
+            payload_scale=(tuple(self.payload_scale)
+                           if self.payload_scale is not None else None))
+        return batch_run([lane], cm, chunks_per_msg=self.chunks_per_msg).result(0)
 
     # --- full-pause (legacy-compatible) mode ---------------------------------
 
@@ -134,11 +159,10 @@ class FabricSim:
         pre-FabricSim `collective_time_event` accumulation order."""
         from .eventsim import simulate_step  # deferred: eventsim wraps us back
 
-        n, kind = schedule.n, schedule.kind
+        n = schedule.n
         if self.link_speed is not None:
             _validate_rates("link_speed", self.link_speed, n)
-        steps = steps_for(kind, n, m, schedule.r)
-        link = schedule.link_offsets(steps)
+        tape = compile_tape(schedule)
         # ``total`` keeps the legacy accumulation order (R*delta upfront) so
         # ``completion`` stays bit-identical to the pre-FabricSim simulator;
         # ``done`` charges each delta at its actual boundary so ``step_done``
@@ -148,12 +172,13 @@ class FabricSim:
         done = 0.0
         step_done: list[float] = []
         chunks_moved = 0
-        for st, g in zip(steps, link):
-            if schedule.x[st.index]:
+        for off, cnt, g, xk in zip(tape.offsets, tape.counts, tape.g_step,
+                                   tape.boundary):
+            if xk:
                 done += cm.delta
             total += cm.alpha_s
             done += cm.alpha_s
-            res = simulate_step(n, g, st.offset, st.nbytes, cm,
+            res = simulate_step(n, g, off, m * cnt / n, cm,
                                 self.chunks_per_msg, self.link_speed)
             total += res.completion
             done += res.completion
@@ -162,25 +187,20 @@ class FabricSim:
         return FabricResult(
             completion=total, mode=self.mode, step_done=tuple(step_done),
             node_done=(total,) * n, chunks_moved=chunks_moved,
-            changed_links=schedule.reconfig_changed_links(steps),
+            changed_links=tape.changed_links,
             reconfigs_paid=schedule.R, delta_stall=schedule.R * cm.delta)
 
     # --- sparse asynchronous mode --------------------------------------------
 
     def _run_sparse(self, schedule: Schedule, m: float,
                     cm: CostModel) -> FabricResult:
-        n, kind = schedule.n, schedule.kind
-        steps = steps_for(kind, n, m, schedule.r)
-        S = len(steps)
-        segs = schedule.segments
-        nseg = len(segs)
-        link = schedule.link_offsets(steps)
-        seg_g = [link[a] for a, _ in segs]
-        seg_of = [0] * S
-        for si, (a, b) in enumerate(segs):
-            for k in range(a, b + 1):
-                seg_of[k] = si
-        hops = [steps[k].offset // seg_g[seg_of[k]] for k in range(S)]
+        n = schedule.n
+        tape = compile_tape(schedule)
+        S = tape.S
+        nseg = len(tape.seg_g)
+        seg_g, seg_of, hops = tape.seg_g, tape.seg_of, tape.hops
+        offsets = tape.offsets
+        nbytes_step = [m * cnt / n for cnt in tape.counts]
         speed = ([1.0] * n if self.link_speed is None
                  else _validate_rates("link_speed", self.link_speed, n))
         scale = (None if self.payload_scale is None
@@ -190,18 +210,15 @@ class FabricSim:
         alpha_s, alpha_h, beta = cm.alpha_s, cm.alpha_h, cm.beta
 
         def chunk_bytes(u: int, k: int) -> float:
-            nbytes = steps[k].nbytes
+            nbytes = nbytes_step[k]
             if scale is not None:
-                nbytes *= scale[(u + steps[k].offset) % n]
+                nbytes *= scale[(u + offsets[k]) % n]
             return nbytes / C
 
         # expected chunk services per (port, segment): the swap trigger.
-        expected = [[0] * nseg for _ in range(n)]
-        for k in range(S):
-            g, si = seg_g[seg_of[k]], seg_of[k]
-            for u in range(n):
-                for j in range(hops[k]):
-                    expected[(u + j * g) % n][si] += C
+        # Uniform-offset ring traffic visits every port identically, so the
+        # per-segment count is just C * (total hops in the segment).
+        expected = [[C * sh for sh in tape.seg_hops] for _ in range(n)]
 
         # per-port state
         cfg_seg = [0] * n            # segment whose traffic the port serves
@@ -260,7 +277,7 @@ class FabricSim:
                 heapq.heappush(heap, (t_next, seq, 0, nxt_port, k, u, c, j + 1))
                 seq += 1
             else:
-                deliver((u + steps[k].offset) % n, k, t_next)
+                deliver((u + offsets[k]) % n, k, t_next)
             if served[port][si] == expected[port][si]:
                 advance(port)
 
@@ -295,7 +312,7 @@ class FabricSim:
             completion=max(node_done), mode=self.mode,
             step_done=tuple(step_done), node_done=node_done,
             chunks_moved=chunks_moved,
-            changed_links=schedule.reconfig_changed_links(steps),
+            changed_links=tape.changed_links,
             reconfigs_paid=reconfigs_paid, delta_stall=delta_stall)
 
 

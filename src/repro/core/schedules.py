@@ -100,8 +100,14 @@ class Schedule:
         return tuple(segs)
 
     def link_offsets(self, steps: Sequence[Step] | None = None) -> list[int]:
-        """OCS link offset in force during each sub-step."""
-        steps = steps if steps is not None else _steps_cached(self.kind, self.n, self.r)
+        """OCS link offset in force during each sub-step.
+
+        The offsets depend only on (kind, n, x, r) — never on the payload —
+        so the default path is memoized per schedule (`_link_offsets_cached`);
+        a fresh list is returned either way.
+        """
+        if steps is None:
+            return list(_link_offsets_cached(self))
         out = [0] * len(self.x)
         for a, b in self.segments:
             g = _segment_gcd(steps, a, b)
@@ -121,7 +127,8 @@ class Schedule:
         segments, e.g. at radix r > 2).  FabricSim and the overlap-aware
         analytic model charge delta only where an entry is nonzero.
         """
-        steps = steps if steps is not None else _steps_cached(self.kind, self.n, self.r)
+        if steps is None:
+            return _changed_links_cached(self)
         gs = [_segment_gcd(steps, a, b) for a, b in self.segments]
         return tuple(self.n if gs[i] != gs[i - 1] else 0 for i in range(1, len(gs)))
 
@@ -352,6 +359,31 @@ def _steps_cached(kind: Collective, n: int, r: int) -> tuple[Step, ...]:
     return _STEP_CACHE[key]
 
 
+@functools.lru_cache(maxsize=4096)
+def _link_offsets_cached(schedule: "Schedule") -> tuple[int, ...]:
+    """Per-sub-step link offsets of a schedule, memoized per Schedule.
+
+    Schedules are small frozen dataclasses, so the hash is cheap and the
+    cache lets every evaluator (analytic, event, fabric, batch) reuse the
+    segment-gcd work instead of recomputing it per run.
+    """
+    steps = _steps_cached(schedule.kind, schedule.n, schedule.r)
+    out = [0] * len(schedule.x)
+    for a, b in schedule.segments:
+        g = _segment_gcd(steps, a, b)
+        for j in range(a, b + 1):
+            out[j] = g
+    return tuple(out)
+
+
+@functools.lru_cache(maxsize=4096)
+def _changed_links_cached(schedule: "Schedule") -> tuple[int, ...]:
+    """Changed circuits per reconfiguration boundary, memoized per Schedule."""
+    steps = _steps_cached(schedule.kind, schedule.n, schedule.r)
+    gs = [_segment_gcd(steps, a, b) for a, b in schedule.segments]
+    return tuple(schedule.n if gs[i] != gs[i - 1] else 0 for i in range(1, len(gs)))
+
+
 # --- Paper-faithful schedule families, all R in one DP pass -------------------
 
 
@@ -554,10 +586,12 @@ def plan(
         Thin shim over `repro.planner.Planner`, the single planning entry
         point for all four collectives; use it directly for alternatives
         tables, constraints, fabric/objective selection, and serialization.
+        Routes through `default_planner()` so repeated calls hit the shared
+        LRU plan cache.
     """
-    from repro.planner import Planner, PlanRequest  # local import: no cycle
+    from repro.planner import PlanRequest, default_planner  # local: no cycle
 
-    res = Planner().plan(PlanRequest(
+    res = default_planner().plan(PlanRequest(
         kind=kind, n=n, m_bytes=float(m), cost_model=cm, r=r,
         paper_faithful=paper_faithful))
     assert res.schedule is not None

@@ -9,16 +9,24 @@ AllGather, and the composite AllReduce (``ar`` = RS + AG):
     res.schedule, res.predicted_time, res.breakdown, res.alternatives
     cached = PlanResult.from_json(res.to_json())   # lossless round trip
 
+Event-scored planning and the cached serving path:
+
+    planner = default_planner()                    # process-wide, LRU-cached
+    res = planner.plan(PlanRequest(kind="a2a", n=96, m_bytes=2**24,
+                                   fabric="ocs-sim"))   # batched event scores
+    results = planner.plan_batch(requests)         # dedupes repeated traffic
+    planner.cache_info()                           # hits / misses / size
+
 Strategy families are pluggable via the registry (`register_strategy`);
 importing this package registers the built-ins (periodic, rs-early, ag-late,
-exact-dp, static, every-step, ring).  The legacy `repro.core.plan` and
-`repro.collectives.plan_gradient_sync` entry points are thin shims over this
-package.
+exact-dp, overlap, static, every-step, ring).  The legacy `repro.core.plan`
+and `repro.collectives.plan_gradient_sync` entry points are thin shims over
+this package.
 """
 from . import strategies  # noqa: F401  (registers the built-in families)
 from .api import (Candidate, PlanRequest, PlanResult,  # noqa: F401
                   RankedAlternative)
-from .planner import Planner  # noqa: F401
+from .planner import PlanCacheInfo, Planner, default_planner  # noqa: F401
 from .registry import (StrategyInfo, available_strategies,  # noqa: F401
                        default_strategy_names, get_strategy,
                        register_strategy, select_strategies,
@@ -26,7 +34,7 @@ from .registry import (StrategyInfo, available_strategies,  # noqa: F401
 
 __all__ = [
     "Candidate", "PlanRequest", "PlanResult", "RankedAlternative",
-    "Planner",
+    "PlanCacheInfo", "Planner", "default_planner",
     "StrategyInfo", "available_strategies", "default_strategy_names",
     "get_strategy", "register_strategy", "select_strategies",
     "unregister_strategy",

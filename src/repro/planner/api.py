@@ -24,8 +24,8 @@ from repro.core.simulator import TimeBreakdown
 
 PlanKind = Literal["a2a", "rs", "ag", "ar"]
 PLAN_KINDS = ("a2a", "rs", "ag", "ar")
-Fabric = Literal["static", "ocs", "ocs-overlap"]
-FABRICS = ("static", "ocs", "ocs-overlap")
+Fabric = Literal["static", "ocs", "ocs-overlap", "ocs-sim"]
+FABRICS = ("static", "ocs", "ocs-overlap", "ocs-sim")
 Objective = Literal["time", "latency", "transmission"]
 OBJECTIVES = ("time", "latency", "transmission")
 
@@ -40,13 +40,18 @@ class PlanRequest:
     cost_model    : alpha-beta-delta parameters (Section 2).
     fabric        : 'ocs' (reconfigurable, the paper's setting), 'static'
                     (no OCS: only R=0 schedules are feasible; DESIGN.md S3),
-                    or 'ocs-overlap' (sparse reconfiguration with
+                    'ocs-overlap' (sparse reconfiguration with
                     reconfiguration/communication overlap: each boundary is
                     charged `CostModel.delta_sparse(changed, overlap)`
-                    instead of a flat delta — see `core.fabricsim`).
+                    instead of a flat delta — see `core.fabricsim`), or
+                    'ocs-sim' (event-scored planning: every candidate is
+                    completion-timed by the vectorized batch fabric engine,
+                    `core.batchsim`, in one call — stragglers, per-port
+                    queueing, and pipelining that the analytic score cannot
+                    see; requires objective='time').
     overlap       : fraction of delta hidden behind communication, in [0, 1];
                     only meaningful (and only allowed nonzero) for the
-                    'ocs-overlap' fabric.
+                    'ocs-overlap' and 'ocs-sim' fabrics.
     objective     : 'time' (total completion time, Section 3.6), 'latency'
                     (startup + hop latency + reconfig), or 'transmission'
                     (transmission + reconfig) — selects the score used to
@@ -61,7 +66,9 @@ class PlanRequest:
     delta_budget  : cap on total reconfiguration time R * delta, seconds
                     (combined with max_R; the tighter bound wins).
     ports         : OCS port count; < 2n engages the Section 3.7 blocked-ring
-                    distance floor during evaluation.
+                    distance floor during evaluation (analytic fabrics only;
+                    rejected for 'ocs-sim', whose event engine models a
+                    full-port OCS).
     """
 
     kind: PlanKind
@@ -91,13 +98,22 @@ class PlanRequest:
             raise ValueError(f"fabric must be one of {FABRICS}, got {self.fabric!r}")
         if not 0.0 <= self.overlap <= 1.0:
             raise ValueError(f"overlap must be in [0, 1], got {self.overlap}")
-        if self.overlap > 0.0 and self.fabric != "ocs-overlap":
+        if self.overlap > 0.0 and self.fabric not in ("ocs-overlap", "ocs-sim"):
             raise ValueError(
-                f"overlap={self.overlap} requires fabric='ocs-overlap', "
-                f"got fabric={self.fabric!r}")
+                f"overlap={self.overlap} requires fabric='ocs-overlap' or "
+                f"'ocs-sim', got fabric={self.fabric!r}")
         if self.objective not in OBJECTIVES:
             raise ValueError(
                 f"objective must be one of {OBJECTIVES}, got {self.objective!r}")
+        if self.fabric == "ocs-sim" and self.objective != "time":
+            raise ValueError(
+                f"fabric='ocs-sim' event-scores total completion time only; "
+                f"objective must be 'time', got {self.objective!r}")
+        if self.fabric == "ocs-sim" and self.ports is not None:
+            raise ValueError(
+                "fabric='ocs-sim' simulates a full-port OCS (the batch "
+                "engine has no Section 3.7 blocked-ring model); drop ports "
+                "or use the analytic 'ocs'/'ocs-overlap' fabrics")
         if self.max_R is not None and self.max_R < 0:
             raise ValueError(f"max_R must be >= 0, got {self.max_R}")
         if self.delta_budget is not None and self.delta_budget < 0:

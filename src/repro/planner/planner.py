@@ -5,6 +5,31 @@ request's cost model and fabric, ranks them by the request's objective, and
 returns a `PlanResult` with the winner, its full `TimeBreakdown`, and the
 ranked alternatives table.
 
+Fabrics and scoring:
+
+  - ``ocs`` / ``static`` / ``ocs-overlap`` score analytically
+    (`core.simulator`), exactly as before.
+  - ``ocs-sim`` event-scores *every* candidate with the vectorized batch
+    fabric engine (`core.batchsim.batch_completion_times`) in a single
+    batched call — per-port queueing, chunk pipelining, and sparse
+    reconfiguration stalls that the closed-form model cannot see.  The
+    winner is the candidate the simulator ranks fastest, so it is never a
+    schedule the simulator would rank worse than the analytic winner (which
+    is always in the candidate set).  ``predicted_time`` and the
+    alternatives' scores are simulated completions; ``breakdown`` stays the
+    analytic sparse-delta decomposition for reporting.  Non-Bruck
+    implementation candidates (the ring baseline) keep their analytic score
+    when explicitly selected.
+
+Serving path: every `Planner` carries an LRU plan cache keyed by the
+canonical JSON of the request (`cache_size` entries, hit/miss counters via
+`cache_info`), so repeated traffic gets an amortized-O(1) answer, and
+`plan_batch` plans a whole request list through the cache in one call.  Use
+`default_planner()` for a process-wide shared instance (the
+`core.schedules.plan` and `collectives.plan_gradient_sync` shims route
+through it).  Mutating the strategy registry invalidates cached plans —
+call `cache_clear()` after registering/unregistering strategies.
+
 The composite AllReduce (`kind='ar'`) follows the Rabenseifner
 decomposition the paper evaluates: the RS and AG phases are planned
 independently (each over the schedule-producing strategies), combined by
@@ -15,9 +40,13 @@ name it in `PlanRequest.strategies`, as `plan_gradient_sync` does).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import json
+from typing import NamedTuple, Sequence
 
 from repro.core import baselines
+from repro.core.batchsim import batch_completion_times
 from repro.core.schedules import Schedule, static_schedule
 from repro.core.simulator import (TimeBreakdown, allreduce_time,
                                   allreduce_time_overlap, collective_time,
@@ -35,15 +64,80 @@ def _objective_score(bd: TimeBreakdown, objective: str) -> float:
     return bd.transmission + bd.reconfig  # "transmission"
 
 
+class PlanCacheInfo(NamedTuple):
+    """Hit/miss counters of one Planner's LRU plan cache."""
+
+    hits: int
+    misses: int
+    size: int
+    capacity: int
+
+
 class Planner:
     """Plans any of a2a / rs / ag / ar via the strategy registry.
 
-    Stateless: safe to construct per call.  Candidate generation reuses the
-    memoized all-R DP tables in `core.schedules`, so repeated planning at
-    the same (n, r) is cheap.
+    cache_size : LRU plan-cache capacity (0 disables caching; results are
+                 immutable `PlanResult`s, safe to share between callers).
+    sim_chunks : chunks per message used by the ``ocs-sim`` event scoring
+                 (the batch engine's MTU-like pipelining knob).
+
+    Candidate generation reuses the memoized all-R DP tables in
+    `core.schedules` and the compiled schedule tapes in `core.batchsim`, so
+    repeated planning at the same (n, r) is cheap even on cache misses.
     """
 
+    def __init__(self, *, cache_size: int = 128, sim_chunks: int = 8):
+        if cache_size < 0:
+            raise ValueError(f"cache_size must be >= 0, got {cache_size}")
+        self.cache_size = int(cache_size)
+        self.sim_chunks = max(1, int(sim_chunks))
+        self._cache: collections.OrderedDict[str, PlanResult] = \
+            collections.OrderedDict()
+        self._hits = 0
+        self._misses = 0
+
+    # --- cached serving path -------------------------------------------------
+
+    @staticmethod
+    def cache_key(req: PlanRequest) -> str:
+        """Canonical JSON identity of a request (the plan-cache key)."""
+        return json.dumps(req.to_dict(), sort_keys=True)
+
+    def cache_info(self) -> PlanCacheInfo:
+        return PlanCacheInfo(hits=self._hits, misses=self._misses,
+                             size=len(self._cache), capacity=self.cache_size)
+
+    def cache_clear(self) -> None:
+        self._cache.clear()
+        self._hits = 0
+        self._misses = 0
+
     def plan(self, req: PlanRequest) -> PlanResult:
+        if self.cache_size == 0:
+            return self._plan_uncached(req)
+        key = self.cache_key(req)
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._hits += 1
+            self._cache.move_to_end(key)
+            return hit
+        self._misses += 1
+        res = self._plan_uncached(req)
+        self._cache[key] = res
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+        return res
+
+    def plan_batch(self, requests: Sequence[PlanRequest]) -> tuple[PlanResult, ...]:
+        """Plan every request, deduplicating repeats through the plan cache.
+
+        Returns results aligned with ``requests``; identical requests are
+        planned once (the serving path's amortized-O(1) answer for repeated
+        traffic).
+        """
+        return tuple(self.plan(req) for req in requests)
+
+    def _plan_uncached(self, req: PlanRequest) -> PlanResult:
         if req.kind == "ar":
             return self._plan_allreduce(req)
         return self._plan_collective(req)
@@ -66,16 +160,28 @@ class Planner:
         if cand.impl == "ring":
             return baselines.ring(kind, req.n, req.m_bytes, req.cost_model)
         assert cand.schedule is not None
-        if req.fabric == "ocs-overlap":
+        if req.fabric in ("ocs-overlap", "ocs-sim"):
+            # for ocs-sim this is the reported analytic decomposition; the
+            # score itself comes from the batched event simulation
             return collective_time_overlap(cand.schedule, req.m_bytes,
                                            req.cost_model, req.overlap,
                                            ports=req.ports)
         return collective_time(cand.schedule, req.m_bytes, req.cost_model,
                                ports=req.ports)
 
+    def _sim_scores(self, req: PlanRequest,
+                    cands: list[Candidate]) -> dict[int, float]:
+        """Batched event scores for every schedule candidate (ocs-sim)."""
+        idx = [i for i, c in enumerate(cands) if c.schedule is not None]
+        if not idx:
+            return {}
+        completions = batch_completion_times(
+            [cands[i].schedule for i in idx], req.m_bytes, req.cost_model,
+            overlap=req.overlap, chunks_per_msg=self.sim_chunks)
+        return {i: float(t) for i, t in zip(idx, completions)}
+
     def _plan_collective(self, req: PlanRequest) -> PlanResult:
-        best: tuple[float, Candidate, TimeBreakdown] | None = None
-        ranked: list[RankedAlternative] = []
+        cands: list[Candidate] = []
         seen_x: set[tuple[int, ...]] = set()
         for cand in self._candidates(req, req.kind):
             # families overlap at the endpoints (static == periodic(R=0),
@@ -85,24 +191,36 @@ class Planner:
                 if cand.schedule.x in seen_x:
                     continue
                 seen_x.add(cand.schedule.x)
-            bd = self._evaluate(req, req.kind, cand)
-            score = _objective_score(bd, req.objective)
-            sched = cand.schedule
-            ranked.append(RankedAlternative(
-                strategy=cand.name, impl=cand.impl, predicted_time=bd.total,
-                score=score, R=sched.R if sched is not None else None,
-                x=sched.x if sched is not None else None))
-            if best is None or score < best[0]:
-                best = (score, cand, bd)
-        if best is None:
+            cands.append(cand)
+        if not cands:
             raise ValueError(
                 f"no strategy produced a candidate for {req.kind} "
                 f"(strategies={req.strategies}, constraints may be infeasible)")
-        _, cand, bd = best
+        sim_scores = (self._sim_scores(req, cands)
+                      if req.fabric == "ocs-sim" else {})
+
+        best: tuple[float, Candidate, TimeBreakdown, float] | None = None
+        ranked: list[RankedAlternative] = []
+        for i, cand in enumerate(cands):
+            bd = self._evaluate(req, req.kind, cand)
+            if i in sim_scores:
+                score = predicted = sim_scores[i]
+            else:
+                score = _objective_score(bd, req.objective)
+                predicted = bd.total
+            sched = cand.schedule
+            ranked.append(RankedAlternative(
+                strategy=cand.name, impl=cand.impl, predicted_time=predicted,
+                score=score, R=sched.R if sched is not None else None,
+                x=sched.x if sched is not None else None))
+            if best is None or score < best[0]:
+                best = (score, cand, bd, predicted)
+        assert best is not None
+        _, cand, bd, predicted = best
         ranked.sort(key=lambda a: a.score)
         return PlanResult(
             request=req, strategy=cand.name, impl=cand.impl,
-            predicted_time=bd.total, breakdown=bd, schedule=cand.schedule,
+            predicted_time=predicted, breakdown=bd, schedule=cand.schedule,
             alternatives=tuple(ranked))
 
     # --- composite AllReduce -------------------------------------------------
@@ -110,12 +228,29 @@ class Planner:
     def _allreduce_bd(self, req: PlanRequest, rs_sched: Schedule,
                       ag_sched: Schedule) -> TimeBreakdown:
         """Combined RS+AG breakdown under the request's fabric semantics."""
-        if req.fabric == "ocs-overlap":
+        if req.fabric in ("ocs-overlap", "ocs-sim"):
             return allreduce_time_overlap(rs_sched, ag_sched, req.m_bytes,
                                           req.cost_model, req.overlap,
                                           ports=req.ports)
         return allreduce_time(rs_sched, ag_sched, req.m_bytes,
                               req.cost_model, ports=req.ports)
+
+    def _allreduce_score(self, req: PlanRequest, rs_res: PlanResult,
+                         ag_res: PlanResult,
+                         bd: TimeBreakdown) -> float:
+        """Objective score of one RS+AG split.
+
+        Under ``ocs-sim`` the phases' predicted times are already simulated
+        completions; the RS->AG topology transition is charged as a sparse
+        swap exactly as `allreduce_time_overlap` does.
+        """
+        if req.fabric != "ocs-sim":
+            return _objective_score(bd, req.objective)
+        rs_final = rs_res.schedule.link_offsets()[-1]
+        ag_first = ag_res.schedule.link_offsets()[0]
+        changed = req.n if rs_final != ag_first else 0
+        transition = req.cost_model.delta_sparse(changed, req.overlap)
+        return rs_res.predicted_time + ag_res.predicted_time + transition
 
     def _plan_rs_ag_phases(self, req: PlanRequest,
                            sched_names: tuple[str, ...] | None
@@ -142,8 +277,8 @@ class Planner:
         for k in range(total_cap + 1):
             rs_res = sub("rs", k)
             ag_res = sub("ag", total_cap - k)
-            t = self._allreduce_bd(req, rs_res.schedule, ag_res.schedule)
-            score = _objective_score(t, req.objective)
+            bd = self._allreduce_bd(req, rs_res.schedule, ag_res.schedule)
+            score = self._allreduce_score(req, rs_res, ag_res, bd)
             if best is None or score < best[0]:
                 best = (score, rs_res, ag_res)
         assert best is not None
@@ -156,9 +291,10 @@ class Planner:
         want_bruck = sched_names is None or len(sched_names) > 0
         want_ring = names is not None and "ring" in names
 
-        evaluated: list[tuple[str, str, TimeBreakdown,
+        evaluated: list[tuple[str, str, float, float, TimeBreakdown,
                               Schedule | None, Schedule | None]] = []
         if want_bruck:
+            rs_res = ag_res = None
             if req.fabric != "static":
                 rs_res, ag_res = self._plan_rs_ag_phases(req, sched_names)
                 rs_sched, ag_sched = rs_res.schedule, ag_res.schedule
@@ -171,23 +307,41 @@ class Planner:
                 name = "bruck[static]"
             assert rs_sched is not None and ag_sched is not None
             bd = self._allreduce_bd(req, rs_sched, ag_sched)
-            evaluated.append((name, "bruck", bd, rs_sched, ag_sched))
+            if req.fabric == "ocs-sim":
+                score = predicted = self._allreduce_score(req, rs_res, ag_res, bd)
+            else:
+                score = _objective_score(bd, req.objective)
+                predicted = bd.total
+            evaluated.append((name, "bruck", score, predicted, bd,
+                              rs_sched, ag_sched))
         if want_ring:
             bd = baselines.ring("ar", req.n, req.m_bytes, req.cost_model)
-            evaluated.append(("ring", "ring", bd, None, None))
+            evaluated.append(("ring", "ring",
+                              _objective_score(bd, req.objective), bd.total,
+                              bd, None, None))
         if not evaluated:
             raise ValueError(
                 f"no strategy produced an AllReduce candidate "
                 f"(strategies={req.strategies})")
 
-        scored = [(_objective_score(e[2], req.objective), e) for e in evaluated]
-        scored.sort(key=lambda p: p[0])
-        _, (name, impl, bd, rs_sched, ag_sched) = scored[0]
+        evaluated.sort(key=lambda e: e[2])
+        name, impl, _, predicted, bd, rs_sched, ag_sched = evaluated[0]
         ranked = tuple(
-            RankedAlternative(strategy=nm, impl=im, predicted_time=b.total,
+            RankedAlternative(strategy=nm, impl=im, predicted_time=pt,
                               score=sc, R=(rs.R + ag.R) if rs and ag else None)
-            for sc, (nm, im, b, rs, ag) in scored)
+            for nm, im, sc, pt, b, rs, ag in evaluated)
         return PlanResult(
-            request=req, strategy=name, impl=impl, predicted_time=bd.total,
+            request=req, strategy=name, impl=impl, predicted_time=predicted,
             breakdown=bd, rs_schedule=rs_sched, ag_schedule=ag_sched,
             alternatives=ranked)
+
+
+_DEFAULT_PLANNER: Planner | None = None
+
+
+def default_planner() -> Planner:
+    """Process-wide shared Planner (the cached plan-serving path)."""
+    global _DEFAULT_PLANNER
+    if _DEFAULT_PLANNER is None:
+        _DEFAULT_PLANNER = Planner()
+    return _DEFAULT_PLANNER

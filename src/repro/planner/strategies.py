@@ -56,19 +56,20 @@ def exact_dp_family(req: PlanRequest, kind: str):
 
 @register_strategy("overlap", paper_faithful=False)
 def overlap_family(req: PlanRequest, kind: str):
-    """Sparse-reconfiguration overlap family (fabric='ocs-overlap' only):
+    """Sparse-reconfiguration overlap family (ocs-overlap / ocs-sim fabrics):
     re-scores the periodic and exact-dp candidate schedules under the
-    hidden-delta credit `CostModel.delta_sparse(changed, overlap)`.
+    hidden-delta credit `CostModel.delta_sparse(changed, overlap)` — or,
+    for 'ocs-sim', under the batched event simulation.
 
     Per fixed R the optimal segment partition is delta-independent, so the
     candidates coincide with the periodic / exact-dp tables; what changes is
     the scoring — with most of delta hidden, higher-R schedules win at
     (delta, m) points where the full-pause model would stay static.  The
-    planner evaluates *every* candidate with `collective_time_overlap` when
-    the fabric is 'ocs-overlap', so this family's role is to guarantee the
-    schedule tables are in the candidate set even under an explicit
-    ``strategies=("overlap",)`` subset."""
-    if req.fabric != "ocs-overlap":
+    planner evaluates *every* candidate with `collective_time_overlap`
+    (or the batch engine) on these fabrics, so this family's role is to
+    guarantee the schedule tables are in the candidate set even under an
+    explicit ``strategies=("overlap",)`` subset."""
+    if req.fabric not in ("ocs-overlap", "ocs-sim"):
         return
     for R, sched in enumerate(core_schedules.periodic_all(kind, req.n, req.r)):
         yield Candidate(f"overlap[periodic](R={R})", sched)

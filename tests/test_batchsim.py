@@ -1,0 +1,272 @@
+"""Batch fabric engine: compiled tapes + vectorized playback vs the scalar
+sparse `FabricSim` oracle.
+
+Pins the tentpole invariants:
+  - differential fuzz over a seeded n x r x R x delta x straggler grid:
+    batched results match the scalar sparse loop within 1e-9 relative
+    tolerance (fast-path lanes are bit-exact; guarded lanes fall back to
+    the oracle itself);
+  - uniform lanes (the planning hot path) always take the vectorized fast
+    path — `allow_fallback=False` proves it;
+  - tapes are compiled once per Schedule and reused;
+  - heterogeneous (schedule, m, delta, overlap, skew) lanes batch together;
+  - lane/batch validation rejects mismatched shapes and bad knobs.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (FabricSim, PAPER_DEFAULT, Schedule, periodic_a2a,
+                        straggler_speeds)
+from repro.core.batchsim import (BatchLane, batch_run, clear_tape_caches,
+                                 compile_tape)
+from repro.core.bruck import schedule_length, steps_for
+
+MB = 1024.0 ** 2
+REL_TOL = 1e-9
+
+
+def random_schedule(rng: random.Random, kind: str, n: int, r: int = 2) -> Schedule:
+    s = schedule_length(kind, n, r)
+    x = tuple([0] + [rng.randint(0, 1) for _ in range(s - 1)])
+    return Schedule(kind=kind, n=n, x=x, r=r)
+
+
+def scalar_reference(lane: BatchLane, cm, chunks: int):
+    sim = FabricSim(
+        chunks_per_msg=chunks, overlap=lane.overlap, mode="sparse",
+        link_speed=list(lane.link_speed) if lane.link_speed else None,
+        payload_scale=list(lane.payload_scale) if lane.payload_scale else None)
+    eff_cm = cm if lane.delta is None else cm.replace(delta=lane.delta)
+    return sim.run(lane.schedule, lane.m_bytes, eff_cm)
+
+
+def assert_lane_matches(res, b: int, ref) -> None:
+    assert res.completion[b] == pytest.approx(ref.completion, rel=REL_TOL)
+    np.testing.assert_allclose(res.node_done[b], ref.node_done, rtol=REL_TOL)
+    np.testing.assert_allclose(res.step_done[b], ref.step_done, rtol=REL_TOL)
+    assert res.chunks_moved[b] == ref.chunks_moved
+    assert res.reconfigs_paid[b] == ref.reconfigs_paid
+    assert res.delta_stall[b] == pytest.approx(ref.delta_stall, rel=1e-12, abs=0.0) \
+        or res.delta_stall[b] == ref.delta_stall
+
+
+# --- differential fuzz vs the scalar oracle -----------------------------------
+
+
+@pytest.mark.parametrize("n", [6, 12, 48, 96])
+def test_differential_grid_matches_scalar(n):
+    """Seeded n x r x R x delta x straggler grid: the batched engine agrees
+    with the scalar sparse loop within 1e-9 relative everywhere."""
+    rng = random.Random(1000 + n)
+    fast = fallback = 0
+    for r in (2, 3):
+        for kind in ("a2a", "rs", "ag"):
+            for straggler in (None, {n // 2: 0.3}):
+                sched = random_schedule(rng, kind, n, r)
+                m = rng.choice([0.25, 2.0]) * MB
+                delta = rng.choice([1e-6, 1e-3, 15e-3])
+                chunks = rng.choice([1, 2, 4])
+                speed = (tuple(straggler_speeds(n, straggler))
+                         if straggler else None)
+                cm = PAPER_DEFAULT.replace(delta=delta)
+                lane = BatchLane(schedule=sched, m_bytes=m, link_speed=speed)
+                res = batch_run([lane], cm, chunks_per_msg=chunks)
+                ref = scalar_reference(lane, cm, chunks)
+                assert_lane_matches(res, 0, ref)
+                if res.fast_path[0]:
+                    fast += 1
+                else:
+                    fallback += 1
+    # uniform lanes must ride the fast path; straggler lanes may fall back
+    assert fast >= 6  # at least all uniform (r, kind) combinations
+
+
+def test_uniform_lanes_never_fall_back():
+    """Nominal (no straggler / skew) lanes are exactly the planning hot path:
+    the canonical-order check must hold, so fallback never triggers."""
+    rng = random.Random(7)
+    lanes = []
+    for kind in ("a2a", "rs", "ag"):
+        for _ in range(4):
+            lanes.append(BatchLane(
+                schedule=random_schedule(rng, kind, 48),
+                m_bytes=rng.choice([0.25, 4.0]) * MB,
+                delta=rng.choice([1e-6, 1e-3]),
+                overlap=rng.choice([0.0, 0.75])))
+    res = batch_run(lanes, PAPER_DEFAULT, chunks_per_msg=4,
+                    allow_fallback=False)  # raises if any guard trips
+    assert res.fast_path.all()
+    for b, lane in enumerate(lanes):
+        assert_lane_matches(res, b, scalar_reference(lane, PAPER_DEFAULT, 4))
+
+
+def test_heterogeneous_batch_matches_per_lane_scalar():
+    """One batched call over mixed schedules / payloads / deltas / overlap /
+    skew lanes reproduces every per-lane scalar run."""
+    rng = random.Random(21)
+    n = 16
+    skew = [1.0] * n
+    skew[3] = 4.0
+    lanes = [
+        BatchLane(schedule=periodic_a2a(n, 2), m_bytes=2 * MB),
+        BatchLane(schedule=periodic_a2a(n, 0), m_bytes=0.5 * MB, delta=1e-3),
+        BatchLane(schedule=random_schedule(rng, "rs", n), m_bytes=MB,
+                  overlap=0.9, delta=15e-3),
+        BatchLane(schedule=random_schedule(rng, "ag", n), m_bytes=4 * MB,
+                  payload_scale=tuple(skew)),
+        BatchLane(schedule=periodic_a2a(n, 3), m_bytes=2 * MB,
+                  link_speed=tuple(straggler_speeds(n, {5: 0.25}))),
+    ]
+    res = batch_run(lanes, PAPER_DEFAULT, chunks_per_msg=2)
+    for b, lane in enumerate(lanes):
+        assert_lane_matches(res, b, scalar_reference(lane, PAPER_DEFAULT, 2))
+
+
+def test_zero_payload_and_single_chunk_edge_cases():
+    sched = periodic_a2a(8, 1)
+    for m, chunks in ((0.0, 1), (MB, 1), (0.0, 8)):
+        lane = BatchLane(schedule=sched, m_bytes=m)
+        res = batch_run([lane], PAPER_DEFAULT, chunks_per_msg=chunks)
+        ref = scalar_reference(lane, PAPER_DEFAULT, chunks)
+        assert_lane_matches(res, 0, ref)
+
+
+# --- FabricSim mode="batched" -------------------------------------------------
+
+
+def test_fabricsim_batched_mode_matches_sparse():
+    sched = periodic_a2a(32, 3)
+    m, cm = 4 * MB, PAPER_DEFAULT.replace(delta=1e-3)
+    sparse = FabricSim(chunks_per_msg=8, overlap=0.5, mode="sparse").run(sched, m, cm)
+    batched = FabricSim(chunks_per_msg=8, overlap=0.5, mode="batched").run(sched, m, cm)
+    assert batched.mode == "batched"
+    assert batched.completion == pytest.approx(sparse.completion, rel=REL_TOL)
+    assert batched.node_done == pytest.approx(sparse.node_done, rel=REL_TOL)
+    assert batched.step_done == pytest.approx(sparse.step_done, rel=REL_TOL)
+    assert batched.chunks_moved == sparse.chunks_moved
+    assert batched.reconfigs_paid == sparse.reconfigs_paid
+    assert batched.changed_links == sparse.changed_links
+
+
+def test_fabricsim_batched_mode_accepts_scenario_knobs():
+    n = 16
+    sched = periodic_a2a(n, 2)
+    skew = [1.0] * n
+    skew[0] = 2.0
+    for kw in ({"link_speed": straggler_speeds(n, {4: 0.5})},
+               {"payload_scale": skew}):
+        sparse = FabricSim(chunks_per_msg=4, mode="sparse", **kw).run(
+            sched, MB, PAPER_DEFAULT)
+        batched = FabricSim(chunks_per_msg=4, mode="batched", **kw).run(
+            sched, MB, PAPER_DEFAULT)
+        assert batched.completion == pytest.approx(sparse.completion, rel=REL_TOL)
+
+
+# --- tape compilation ---------------------------------------------------------
+
+
+def test_tape_is_compiled_once_per_schedule():
+    sched = periodic_a2a(24, 2)
+    t1 = compile_tape(sched)
+    t2 = compile_tape(Schedule(kind="a2a", n=24, x=sched.x, r=2))
+    assert t1 is t2  # lru_cache on the (hashable) Schedule
+    clear_tape_caches()
+    assert compile_tape(sched) is not t1
+
+
+def test_tape_structure_matches_schedule():
+    sched = Schedule(kind="a2a", n=16, x=(0, 1, 0, 1, 0, 0), r=4)
+    tape = compile_tape(sched)
+    steps = steps_for("a2a", 16, 1.0, 4)
+    assert tape.S == len(steps)
+    assert tape.offsets == tuple(st.offset for st in steps)
+    assert list(tape.g_step) == sched.link_offsets()
+    assert tape.hops == tuple(st.offset // g for st, g in
+                              zip(steps, sched.link_offsets()))
+    assert tape.changed_links == sched.reconfig_changed_links()
+    # duplicate-gcd boundary (first) is free, second pays
+    assert tape.changed_pay == (False, False, False, True, False, False)
+    # m-scaling is exact: nbytes == m * counts / n bit-for-bit
+    m = 3.7 * MB
+    for st, cnt in zip(steps_for("a2a", 16, m, 4), tape.counts):
+        assert st.nbytes == m * cnt / 16
+
+
+def test_tape_arrays_are_readonly():
+    arrays = compile_tape(periodic_a2a(8, 1)).arrays
+    with pytest.raises(ValueError):
+        arrays["hops"][0] = 99
+
+
+# --- guard + fallback ---------------------------------------------------------
+
+
+def test_severe_straggler_falls_back_and_still_matches():
+    n = 48
+    sched = periodic_a2a(n, 2)
+    lane = BatchLane(schedule=sched, m_bytes=2 * MB,
+                     link_speed=tuple(straggler_speeds(n, {n // 2: 0.25})))
+    res = batch_run([lane], PAPER_DEFAULT, chunks_per_msg=8)
+    assert not res.fast_path[0]  # event order genuinely diverges
+    ref = scalar_reference(lane, PAPER_DEFAULT, 8)
+    assert res.completion[0] == ref.completion  # oracle re-run: bit-equal
+    with pytest.raises(RuntimeError, match="canonical-order"):
+        batch_run([lane], PAPER_DEFAULT, chunks_per_msg=8,
+                  allow_fallback=False)
+
+
+def test_fallback_only_affects_guarded_lanes():
+    n = 48
+    lanes = [
+        BatchLane(schedule=periodic_a2a(n, 2), m_bytes=2 * MB),
+        BatchLane(schedule=periodic_a2a(n, 2), m_bytes=2 * MB,
+                  link_speed=tuple(straggler_speeds(n, {0: 0.25}))),
+    ]
+    res = batch_run(lanes, PAPER_DEFAULT, chunks_per_msg=4)
+    assert res.fast_path[0] and not res.fast_path[1]
+    for b, lane in enumerate(lanes):
+        assert_lane_matches(res, b, scalar_reference(lane, PAPER_DEFAULT, 4))
+
+
+# --- validation ---------------------------------------------------------------
+
+
+def test_batch_run_validates_lane_shapes():
+    with pytest.raises(ValueError, match="at least one lane"):
+        batch_run([], PAPER_DEFAULT)
+    mixed_n = [BatchLane(schedule=periodic_a2a(16, 1), m_bytes=MB),
+               BatchLane(schedule=periodic_a2a(32, 1), m_bytes=MB)]
+    with pytest.raises(ValueError, match=r"\(n, S\)"):
+        batch_run(mixed_n, PAPER_DEFAULT)
+    mixed_s = [BatchLane(schedule=periodic_a2a(16, 1), m_bytes=MB),
+               BatchLane(schedule=periodic_a2a(16, 1, r=4), m_bytes=MB)]
+    with pytest.raises(ValueError, match=r"\(n, S\)"):
+        batch_run(mixed_s, PAPER_DEFAULT)
+
+
+def test_lane_validation():
+    sched = periodic_a2a(16, 1)
+    with pytest.raises(ValueError, match="overlap"):
+        BatchLane(schedule=sched, m_bytes=MB, overlap=1.5)
+    with pytest.raises(ValueError, match="payload"):
+        BatchLane(schedule=sched, m_bytes=-1.0)
+    with pytest.raises(ValueError, match="delta"):
+        BatchLane(schedule=sched, m_bytes=MB, delta=-1e-6)
+    with pytest.raises(ValueError, match="link_speed"):
+        BatchLane(schedule=sched, m_bytes=MB, link_speed=(1.0,) * 8)
+    with pytest.raises(ValueError, match="payload_scale"):
+        BatchLane(schedule=sched, m_bytes=MB, payload_scale=(0.0,) * 16)
+
+
+def test_result_accessor_is_fabricresult_compatible():
+    lanes = [BatchLane(schedule=periodic_a2a(12, 1), m_bytes=MB),
+             BatchLane(schedule=periodic_a2a(12, 2), m_bytes=2 * MB)]
+    res = batch_run(lanes, PAPER_DEFAULT, chunks_per_msg=2)
+    assert len(res) == 2
+    one = res.result(1)
+    assert one.mode == "batched"
+    assert one.completion == res.completion[1]
+    assert one.changed_links == lanes[1].schedule.reconfig_changed_links()
+    assert isinstance(one.node_done, tuple) and len(one.node_done) == 12

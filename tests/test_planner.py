@@ -309,6 +309,168 @@ def test_overlap_allreduce_charges_sparse_transition():
     assert res.predicted_time <= plain_rescored.total * (1 + 1e-12)
 
 
+# --- ocs-sim fabric (batched event-scored planning) ----------------------------
+
+
+def test_ocs_sim_request_validation():
+    with pytest.raises(ValueError, match="time"):
+        PlanRequest(kind="a2a", n=8, m_bytes=1.0, fabric="ocs-sim",
+                    objective="latency")
+    # the event engine models a full-port OCS; a ports constraint would be
+    # silently ignored, so it is rejected instead
+    with pytest.raises(ValueError, match="ports"):
+        PlanRequest(kind="a2a", n=8, m_bytes=1.0, fabric="ocs-sim", ports=3)
+    req = PlanRequest(kind="a2a", n=8, m_bytes=1.0, fabric="ocs-sim",
+                      overlap=0.75)
+    assert req.overlap == 0.75
+
+
+def test_ocs_sim_scores_every_candidate_with_the_simulator():
+    """Every schedule alternative's score is its batched event completion,
+    and the winner minimizes it."""
+    from repro.core.batchsim import batch_completion_times
+
+    cm = PAPER_DEFAULT.replace(delta=1e-3)
+    planner = Planner(sim_chunks=8)
+    res = planner.plan(PlanRequest(kind="a2a", n=48, m_bytes=4.0 * MB,
+                                   cost_model=cm, fabric="ocs-sim"))
+    scheds = [core_schedules.Schedule(kind="a2a", n=48, x=a.x)
+              for a in res.alternatives]
+    sim = batch_completion_times(scheds, 4.0 * MB, cm, chunks_per_msg=8)
+    for a, t in zip(res.alternatives, sim):
+        assert a.score == pytest.approx(float(t), rel=1e-12)
+        assert a.predicted_time == a.score
+    assert res.predicted_time == res.alternatives[0].score
+    assert min(a.score for a in res.alternatives) == res.predicted_time
+
+
+@pytest.mark.parametrize("kind", ["a2a", "rs", "ag"])
+def test_ocs_sim_never_worse_than_analytic_winner(kind):
+    """Acceptance: the ocs-sim winner is never a schedule the batched
+    simulator ranks worse than the analytic (ocs-overlap) winner of the
+    same request."""
+    from repro.core.batchsim import batch_completion_times
+
+    cm = PAPER_DEFAULT.replace(delta=1e-3)
+    planner = Planner(sim_chunks=8)
+    for overlap in (0.0, 0.75):
+        sim_res = planner.plan(PlanRequest(
+            kind=kind, n=96, m_bytes=4.0 * MB, cost_model=cm,
+            fabric="ocs-sim", overlap=overlap))
+        analytic = planner.plan(PlanRequest(
+            kind=kind, n=96, m_bytes=4.0 * MB, cost_model=cm,
+            fabric="ocs-overlap", overlap=overlap))
+        both = batch_completion_times(
+            [sim_res.schedule, analytic.schedule], 4.0 * MB, cm,
+            overlap=overlap, chunks_per_msg=planner.sim_chunks)
+        assert both[0] <= both[1] * (1 + 1e-12)
+
+
+def test_ocs_sim_allreduce_plans_phases_with_event_scores():
+    cm = PAPER_DEFAULT.replace(delta=1e-3)
+    planner = Planner(sim_chunks=4)
+    res = planner.plan(PlanRequest(kind="ar", n=32, m_bytes=8.0 * MB,
+                                   cost_model=cm, fabric="ocs-sim",
+                                   overlap=0.75))
+    assert res.rs_schedule is not None and res.ag_schedule is not None
+    # predicted time = simulated RS + simulated AG + sparse transition
+    from repro.core.batchsim import batch_completion_times
+
+    phases = batch_completion_times([res.rs_schedule, res.ag_schedule],
+                                    8.0 * MB, cm, overlap=0.75,
+                                    chunks_per_msg=4)
+    rs_final = res.rs_schedule.link_offsets()[-1]
+    ag_first = res.ag_schedule.link_offsets()[0]
+    transition = cm.delta_sparse(32 if rs_final != ag_first else 0, 0.75)
+    assert res.predicted_time == pytest.approx(
+        float(phases[0] + phases[1]) + transition, rel=1e-12)
+
+
+def test_ocs_sim_round_trip():
+    req = PlanRequest(kind="rs", n=48, m_bytes=4.0 * MB,
+                      cost_model=PAPER_DEFAULT, fabric="ocs-sim")
+    res = Planner().plan(req)
+    back = PlanResult.from_json(res.to_json())
+    assert back.request.fabric == "ocs-sim"
+    assert back == res
+
+
+# --- plan cache + plan_batch (the serving path) --------------------------------
+
+
+def test_plan_cache_hits_on_repeated_requests():
+    planner = Planner(cache_size=8)
+    req = PlanRequest(kind="a2a", n=48, m_bytes=4.0 * MB,
+                      cost_model=PAPER_DEFAULT)
+    r1 = planner.plan(req)
+    r2 = planner.plan(PlanRequest(kind="a2a", n=48, m_bytes=4.0 * MB,
+                                  cost_model=PAPER_DEFAULT))
+    assert r1 is r2  # equal requests share one immutable result
+    info = planner.cache_info()
+    assert (info.hits, info.misses, info.size) == (1, 1, 1)
+    # a different request misses
+    planner.plan(PlanRequest(kind="rs", n=48, m_bytes=4.0 * MB,
+                             cost_model=PAPER_DEFAULT))
+    assert planner.cache_info().misses == 2
+    planner.cache_clear()
+    assert planner.cache_info() == (0, 0, 0, 8)
+
+
+def test_plan_cache_lru_eviction():
+    planner = Planner(cache_size=1)
+    req_a = PlanRequest(kind="a2a", n=16, m_bytes=1.0 * MB)
+    req_b = PlanRequest(kind="rs", n=16, m_bytes=1.0 * MB)
+    ra = planner.plan(req_a)
+    planner.plan(req_b)           # evicts req_a
+    assert planner.cache_info().size == 1
+    assert planner.plan(req_b) is not None
+    assert planner.cache_info().hits == 1
+    ra2 = planner.plan(req_a)     # re-planned, not cached
+    assert planner.cache_info().misses == 3
+    assert ra2 == ra              # deterministic: equal even when recomputed
+
+
+def test_plan_cache_disabled():
+    planner = Planner(cache_size=0)
+    req = PlanRequest(kind="a2a", n=16, m_bytes=1.0 * MB)
+    r1, r2 = planner.plan(req), planner.plan(req)
+    assert r1 == r2 and r1 is not r2
+    assert planner.cache_info() == (0, 0, 0, 0)
+    with pytest.raises(ValueError, match="cache_size"):
+        Planner(cache_size=-1)
+
+
+def test_plan_batch_dedupes_repeated_traffic():
+    planner = Planner(cache_size=16)
+    reqs = [PlanRequest(kind="a2a", n=32, m_bytes=2.0 * MB),
+            PlanRequest(kind="rs", n=32, m_bytes=2.0 * MB),
+            PlanRequest(kind="a2a", n=32, m_bytes=2.0 * MB),
+            PlanRequest(kind="a2a", n=32, m_bytes=2.0 * MB)]
+    results = planner.plan_batch(reqs)
+    assert len(results) == 4
+    assert results[0] is results[2] is results[3]
+    assert results[0].schedule.kind == "a2a"
+    assert results[1].schedule.kind == "rs"
+    info = planner.cache_info()
+    assert (info.hits, info.misses) == (2, 2)
+
+
+def test_default_planner_is_shared_and_cached():
+    from repro.planner import default_planner
+
+    planner = default_planner()
+    assert planner is default_planner()
+    before = planner.cache_info().hits
+    req = PlanRequest(kind="ag", n=24, m_bytes=1.0 * MB)
+    planner.plan(req)
+    planner.plan(req)
+    assert planner.cache_info().hits >= before + 1
+    # the legacy shim routes through the same cache
+    core_schedules.plan("ag", 24, 1.0 * MB, PAPER_DEFAULT)
+    core_schedules.plan("ag", 24, 1.0 * MB, PAPER_DEFAULT)
+    assert planner.cache_info().hits >= before + 2
+
+
 # --- All-R DP performance ------------------------------------------------------
 
 
