@@ -1,6 +1,11 @@
 PYTHONPATH := src
 
-.PHONY: test test-fast bench bench-smoke plan-bench fabric-bench sim-bench sweep lint
+# Pinned coverage-gate floor for repro/{core,planner,workloads}; measured at
+# ~95% on the tier-1 suite, pinned with head-room (see benchmarks/coverage_gate).
+COV_MIN ?= 84
+
+.PHONY: test test-fast bench bench-smoke plan-bench fabric-bench sim-bench \
+	trace-bench sweep coverage lint
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -36,9 +41,23 @@ fabric-bench:
 sim-bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.sim_bench --json BENCH_sim_scale.json
 
+# Cross-collective trace planning: carryover vs cold-fabric vs static over
+# workload traces (MoE a2a / gradient AR / decode AG / mixed) x n x delta,
+# gated carryover <= cold everywhere + a minimum amortization win at
+# ms-scale delta; recorded to BENCH_trace.json.
+trace-bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.trace_bench --json BENCH_trace.json
+
 # Full n x r x m sweep, recorded for the perf trajectory.
 sweep:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --sweep --json BENCH_bridge_radix.json
+
+# Line coverage over the planning stack (pytest-cov), gated at COV_MIN% for
+# repro/{core,planner,workloads} by benchmarks/coverage_gate.
+coverage:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -q -m "not slow" \
+		--cov=repro --cov-report=xml --cov-report=term
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.coverage_gate coverage.xml --min $(COV_MIN)
 
 lint:
 	ruff check --select E,F,W,I src tests benchmarks examples

@@ -1,0 +1,100 @@
+"""Markdown gate summary for benchmark runs ($GITHUB_STEP_SUMMARY).
+
+Usage:
+
+    python -m benchmarks.bench_summary NAME=BASELINE:FRESH [...] [--subset-ok]
+
+For every NAME the committed baseline and the freshly measured file are
+compared with the same checks `benchmarks.check_regression` gates on, and
+one table row is emitted: bench name, detected schema, rows checked, the
+schema's headline ratio, and gate pass/fail.  CI appends the output to the
+job summary so a regression is readable without downloading artifacts; the
+hard failure still comes from the `check_regression` steps (this renderer
+always exits 0 so the summary is written even when a gate failed).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.check_regression import (SCHEMAS, check_fabric, check_planner,
+                                         check_row_coverage, check_sim,
+                                         check_trace, detect_schema)
+
+
+def headline(schema: str, rows: list[dict]) -> str:
+    """One human-scale number per schema (the benchmark's headline claim)."""
+    if schema == "planner":
+        return f"{max(r['wall_speedup'] for r in rows):.1f}x all-R DP"
+    if schema == "sim":
+        scoring = [r["batched_speedup"] for r in rows
+                   if r.get("batched_speedup") is not None]
+        return (f"{max(scoring):.1f}x batched" if scoring else "scale tier")
+    if schema == "trace":
+        return (f"{max(r['carryover_vs_cold'] for r in rows):.1f}x "
+                f"carryover win")
+    return f"{max(r['sparse_speedup'] for r in rows):.2f}x sparse"
+
+
+def summarize_pair(name: str, baseline: str, fresh: str,
+                   subset_ok: bool) -> tuple[str, list[str]]:
+    """One markdown table row plus the failure details (empty = pass).
+
+    Never raises: a missing, truncated, or schema-broken file becomes a
+    FAIL/MISSING row — the summary must render precisely when a benchmark
+    broke (the hard gate is the separate `check_regression` step).
+    """
+    if not os.path.exists(fresh):
+        return f"| {name} | - | - | - | MISSING (bench did not run) |", [
+            f"{name}: fresh file {fresh} not found"]
+    try:
+        with open(baseline) as f:
+            base_rows = json.load(f)["rows"]
+        with open(fresh) as f:
+            fresh_rows = json.load(f)["rows"]
+        schema = detect_schema(base_rows, baseline)
+        errors = check_row_coverage(base_rows, fresh_rows, SCHEMAS[schema][1],
+                                    subset_ok)
+        check = {"planner": lambda: check_planner(base_rows, fresh_rows, 0.25),
+                 "sim": lambda: check_sim(base_rows, fresh_rows, 0.25),
+                 "trace": lambda: check_trace(base_rows, fresh_rows, 1e-6),
+                 "fabric": lambda: check_fabric(base_rows, fresh_rows, 1e-6)}
+        more, matched = check[schema]()
+        errors += more
+        head = headline(schema, fresh_rows)
+    except (SystemExit, Exception) as exc:  # malformed file / schema change
+        return f"| {name} | ? | - | - | FAIL (unreadable) |", [
+            f"{name}: could not compare {baseline} vs {fresh}: {exc}"]
+    verdict = "PASS" if not errors else f"FAIL ({len(errors)})"
+    row = (f"| {name} | {schema} | {matched} | {head} | {verdict} |")
+    return row, [f"{name}: {e}" for e in errors]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("pairs", nargs="+", metavar="NAME=BASELINE:FRESH")
+    ap.add_argument("--subset-ok", action="store_true",
+                    help="fresh files may cover a subset of the baseline grid")
+    args = ap.parse_args(argv)
+    lines = ["## Benchmark gates", "",
+             "| bench | schema | rows | headline | gate |",
+             "|---|---|---|---|---|"]
+    details: list[str] = []
+    for pair in args.pairs:
+        name, _, files = pair.partition("=")
+        baseline, _, fresh = files.partition(":")
+        if not name or not baseline or not fresh:
+            raise SystemExit(f"bad pair {pair!r}: want NAME=BASELINE:FRESH")
+        row, errs = summarize_pair(name, baseline, fresh, args.subset_ok)
+        lines.append(row)
+        details += errs
+    if details:
+        lines += ["", "<details><summary>failures</summary>", ""]
+        lines += [f"- {d}" for d in details]
+        lines += ["", "</details>"]
+    print("\n".join(lines))
+
+
+if __name__ == "__main__":
+    main()

@@ -18,16 +18,32 @@ The file schema is auto-detected from the row keys:
     checksum must match the baseline (checksum within 1e-9 relative); the
     scoring-tier wall speedup is timing-noisy and only has to stay above
     ``--wall-frac`` of the committed value (and above 1x absolutely).
+  - trace rows (``carryover_s``, BENCH_trace.json): trace planning is
+    deterministic, so the carryover/cold/static ratios must match the
+    baseline within ``--rel-tol`` and the boundary-reuse counts exactly.
 
-Rows are matched on their identifying keys (n / r / delta / tier), so a
-smoke run covering a subset of the baseline grid still gates every row it
-produced.  Exit 1 on any drift.
+Rows are matched on their identifying keys (n / r / delta / tier / trace).
+Row coverage is strict: a fresh row whose key the baseline does not know is
+an error (the baseline is stale and that row would never be gated), and a
+baseline row the fresh run did not produce is an error unless
+``--subset-ok`` is passed (smoke runs measure a subset of the committed
+grid, but a *full* run silently dropping rows is a regression).  A file
+whose rows match no known schema is an error, never a silent pass.  Exit 1
+on any drift.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+
+#: schema name -> (detection key present in every row, identifying row keys)
+SCHEMAS = {
+    "planner": ("wall_speedup", ("n", "r")),
+    "sim": ("batched_wall_s", ("tier", "n")),
+    "trace": ("carryover_s", ("trace", "n", "delta")),
+    "fabric": ("event_analytic_ratio", ("n", "r", "delta")),
+}
 
 
 def _index(rows: list[dict], keys: tuple[str, ...]) -> dict:
@@ -105,6 +121,64 @@ def check_fabric(base_rows: list[dict], fresh_rows: list[dict],
     return errors, matched
 
 
+def check_trace(base_rows: list[dict], fresh_rows: list[dict],
+                rel_tol: float) -> tuple[list[str], int]:
+    errors, matched = [], 0
+    base = _index(base_rows, SCHEMAS["trace"][1])
+    for key, fresh in _index(fresh_rows, SCHEMAS["trace"][1]).items():
+        if key not in base:
+            continue
+        matched += 1
+        ref = base[key]
+        tag = f"trace={key[0]} n={key[1]} delta={key[2]}"
+        for field in ("phases", "free_boundaries", "boundaries",
+                      "carry_paid_reconfigs"):
+            if fresh[field] != ref[field]:
+                errors.append(f"{tag}: {field} {fresh[field]} != baseline "
+                              f"{ref[field]} (trace planning is deterministic)")
+        for field in ("carryover_vs_cold", "carryover_vs_static",
+                      "carryover_s"):
+            drift = abs(fresh[field] - ref[field]) / max(abs(ref[field]), 1e-12)
+            if drift > rel_tol:
+                errors.append(f"{tag}: {field} {fresh[field]} drifted "
+                              f"{drift:.2e} from baseline {ref[field]} "
+                              f"(> {rel_tol})")
+    return errors, matched
+
+
+def detect_schema(rows: list[dict], label: str) -> str:
+    """Schema of a result file, failing loudly when no known schema matches.
+
+    Silently defaulting to some schema would make a typo'd or re-keyed
+    benchmark file pass the gate without checking anything.
+    """
+    for name, (key, _) in SCHEMAS.items():
+        if key in rows[0]:
+            return name
+    raise SystemExit(
+        f"# FAIL: {label}: rows match no known schema (expected one of "
+        f"{ {k: v[0] for k, v in SCHEMAS.items()} } in the first row; got "
+        f"keys {sorted(rows[0])})")
+
+
+def check_row_coverage(base_rows: list[dict], fresh_rows: list[dict],
+                       keys: tuple[str, ...], subset_ok: bool) -> list[str]:
+    """Fresh rows must be gate-able and (unless subset_ok) cover the baseline."""
+    base = set(_index(base_rows, keys))
+    fresh = set(_index(fresh_rows, keys))
+    errors = []
+    for key in sorted(fresh - base, key=str):
+        errors.append(f"fresh row {dict(zip(keys, key))} is not in the "
+                      f"baseline grid (stale baseline: the row would never "
+                      f"be gated — regenerate the committed BENCH file)")
+    if not subset_ok:
+        for key in sorted(base - fresh, key=str):
+            errors.append(f"baseline row {dict(zip(keys, key))} is missing "
+                          f"from the fresh results (pass --subset-ok only "
+                          f"for smoke runs that measure a subset)")
+    return errors
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline", help="committed baseline JSON")
@@ -112,7 +186,10 @@ def main(argv=None) -> None:
     ap.add_argument("--wall-frac", type=float, default=0.25,
                     help="min fraction of the baseline wall_speedup (planner)")
     ap.add_argument("--rel-tol", type=float, default=1e-6,
-                    help="relative tolerance for deterministic fabric ratios")
+                    help="relative tolerance for deterministic ratios")
+    ap.add_argument("--subset-ok", action="store_true",
+                    help="allow the fresh run to cover only a subset of the "
+                         "baseline grid (smoke tiers)")
     args = ap.parse_args(argv)
     with open(args.baseline) as f:
         base = json.load(f)["rows"]
@@ -121,27 +198,26 @@ def main(argv=None) -> None:
     if not base or not fresh:
         print("# FAIL: baseline or fresh result has no rows", file=sys.stderr)
         sys.exit(1)
-    def schema(rows: list[dict]) -> str:
-        if "wall_speedup" in rows[0]:
-            return "planner"
-        if "batched_wall_s" in rows[0]:
-            return "sim"
-        return "fabric"
-
-    if schema(fresh) != schema(base):
+    base_schema = detect_schema(base, args.baseline)
+    fresh_schema = detect_schema(fresh, args.fresh)
+    if fresh_schema != base_schema:
         print(f"# FAIL: baseline/fresh schema mismatch ({args.baseline} is "
-              f"a {schema(base)} result, {args.fresh} a {schema(fresh)} "
+              f"a {base_schema} result, {args.fresh} a {fresh_schema} "
               f"result) — check the file arguments", file=sys.stderr)
         sys.exit(1)
-    if schema(fresh) == "planner":
-        errors, matched = check_planner(base, fresh, args.wall_frac)
-    elif schema(fresh) == "sim":
-        errors, matched = check_sim(base, fresh, args.wall_frac)
+    errors = check_row_coverage(base, fresh, SCHEMAS[fresh_schema][1],
+                                args.subset_ok)
+    if fresh_schema == "planner":
+        more, matched = check_planner(base, fresh, args.wall_frac)
+    elif fresh_schema == "sim":
+        more, matched = check_sim(base, fresh, args.wall_frac)
+    elif fresh_schema == "trace":
+        more, matched = check_trace(base, fresh, args.rel_tol)
     else:
-        errors, matched = check_fabric(base, fresh, args.rel_tol)
+        more, matched = check_fabric(base, fresh, args.rel_tol)
+    errors += more
     if matched == 0:
-        print("# FAIL: no fresh row matches the baseline grid", file=sys.stderr)
-        sys.exit(1)
+        errors.append("no fresh row matches the baseline grid")
     if errors:
         for e in errors:
             print(f"# FAIL: {e}", file=sys.stderr)

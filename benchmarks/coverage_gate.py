@@ -1,0 +1,89 @@
+"""Coverage gate over the planning stack: core + planner + workloads.
+
+Usage:
+
+    python -m pytest -m "not slow" --cov=repro --cov-report=xml
+    python -m benchmarks.coverage_gate coverage.xml --min 84
+
+Parses a Cobertura ``coverage.xml`` (pytest-cov / coverage.py) and computes
+line coverage restricted to the gated subpackages (`repro/core`,
+`repro/planner`, `repro/workloads` by default — the pure-Python planning
+stack that CI exercises deterministically; kernels/models/launch need
+accelerator time and are measured but not gated).  Exits 1 when the
+combined rate is below ``--min`` or a gated package has no measured lines
+(e.g. a --cov target typo, which would otherwise gate nothing).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import xml.etree.ElementTree as ET
+
+DEFAULT_PACKAGES = ("core", "planner", "workloads")
+
+
+def _subpackage(filename: str) -> str | None:
+    """Gated-subpackage name of a coverage.xml class filename, if any.
+
+    Filenames are relative to the measured source root, so they look like
+    ``repro/core/bruck.py`` (``--cov=repro``) or ``core/bruck.py``
+    (``--cov=repro.core``); both resolve to ``core``.
+    """
+    parts = filename.replace("\\", "/").split("/")
+    if "repro" in parts:
+        parts = parts[parts.index("repro") + 1:]
+    return parts[0] if len(parts) > 1 else None
+
+
+def package_rates(xml_path: str,
+                  packages=DEFAULT_PACKAGES) -> dict[str, tuple[int, int]]:
+    """(covered, total) statement lines per gated subpackage."""
+    root = ET.parse(xml_path).getroot()
+    rates = {pkg: (0, 0) for pkg in packages}
+    for cls in root.iter("class"):
+        pkg = _subpackage(cls.get("filename", ""))
+        if pkg not in rates:
+            continue
+        covered, total = rates[pkg]
+        for line in cls.iter("line"):
+            total += 1
+            if int(line.get("hits", "0")) > 0:
+                covered += 1
+        rates[pkg] = (covered, total)
+    return rates
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("xml", help="Cobertura coverage.xml from pytest-cov")
+    ap.add_argument("--min", type=float, required=True,
+                    help="minimum combined line-coverage percent over the "
+                         "gated packages")
+    ap.add_argument("--packages", nargs="+", default=list(DEFAULT_PACKAGES),
+                    help="repro subpackages to gate")
+    args = ap.parse_args(argv)
+    rates = package_rates(args.xml, tuple(args.packages))
+    covered = total = 0
+    failures = []
+    for pkg, (c, t) in sorted(rates.items()):
+        pct = 100.0 * c / t if t else 0.0
+        print(f"repro/{pkg}: {c}/{t} lines ({pct:.1f}%)")
+        if t == 0:
+            failures.append(f"repro/{pkg} has no measured lines — wrong "
+                            f"--cov target or package rename?")
+        covered += c
+        total += t
+    combined = 100.0 * covered / total if total else 0.0
+    print(f"combined: {covered}/{total} lines ({combined:.1f}%), "
+          f"gate >= {args.min}%")
+    if combined < args.min:
+        failures.append(f"combined coverage {combined:.1f}% < {args.min}%")
+    if failures:
+        for f in failures:
+            print(f"# FAIL: {f}", file=sys.stderr)
+        sys.exit(1)
+    print("# OK: coverage gate passed")
+
+
+if __name__ == "__main__":
+    main()

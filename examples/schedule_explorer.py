@@ -13,6 +13,15 @@ and the generalized scenario space beyond the paper (any n, radix r):
 prints the BRIDGE plan (schedule + R), the planner's ranked alternatives
 table, every baseline, and the speedups.  Planning goes through the unified
 `repro.planner` API; pass --save-plan to write the lossless PlanResult JSON.
+
+Whole-workload traces (back-to-back collectives with fabric-state carryover,
+see repro/workloads/):
+
+  PYTHONPATH=src python examples/schedule_explorer.py \
+      --trace mixed --n 48 --delta-us 1000
+
+plans the trace jointly (carryover) and prints the per-collective schedules,
+boundary reuse, and the amortization win over cold-fabric re-planning.
 """
 import argparse
 
@@ -20,6 +29,45 @@ from repro.core import PAPER_DEFAULT, baselines, collective_time
 from repro.planner import PlanRequest, Planner
 
 MB = 1024.0 ** 2
+
+
+def explore_trace(args, cm):
+    from repro.workloads import (decode_ag_trace, mixed_trace, moe_a2a_trace,
+                                 plan_trace, train_step_trace)
+
+    trace = {
+        "moe": lambda: moe_a2a_trace(args.n, layers=3),
+        "train": lambda: train_step_trace(args.n, steps=2, buckets=2),
+        "decode": lambda: decode_ag_trace(args.n, decode_steps=6, jitter=0.25),
+        "mixed": lambda: mixed_trace(args.n),
+    }[args.trace]()
+    plans = {mode: plan_trace(trace, cm, mode=mode)
+             for mode in ("static", "cold", "carryover")}
+    carry = plans["carryover"]
+    print(f"trace {trace.name!r}: {len(trace)} events -> "
+          f"{len(carry.phases)} phases at n={args.n}, "
+          f"delta={args.delta_us} us\n")
+    print("  carryover plan (joint DP, boundary delta only on changed circuits):")
+    for i, p in enumerate(carry.phases):
+        boundary = ""
+        if i:
+            c = carry.boundary_changed[i - 1]
+            boundary = ("  boundary: free (fabric reused)" if c == 0
+                        else f"  boundary: {c} circuits swap "
+                             f"({carry.boundary_cost[i - 1] * 1e3:.3f} ms)")
+        print(f"    [{i:2d}] {p.tag:<24s} {p.strategy:<18s} "
+              f"{p.time * 1e3:9.3f} ms{boundary}")
+    print(f"\n  free boundaries: {carry.free_boundaries}/"
+          f"{len(carry.boundary_cost)}")
+    t_carry = carry.total_time
+    for mode in ("carryover", "cold", "static"):
+        t = plans[mode].total_time
+        print(f"  {mode:<10s} {t * 1e3:10.3f} ms   carryover win "
+              f"{t / t_carry:6.2f}x")
+    if args.save_plan:
+        with open(args.save_plan, "w") as f:
+            f.write(carry.to_json(indent=1))
+        print(f"\nwrote trace plan to {args.save_plan}")
 
 
 def main():
@@ -49,11 +97,18 @@ def main():
                     help="alternatives table rows to print")
     ap.add_argument("--save-plan", default=None, metavar="PATH",
                     help="write the PlanResult JSON (lossless, cacheable)")
+    ap.add_argument("--trace", default=None,
+                    choices=["moe", "train", "decode", "mixed"],
+                    help="plan a whole workload trace (carryover vs cold vs "
+                         "static) instead of a single collective")
     args = ap.parse_args()
 
     n, m = args.n, args.m_mb * MB
     cm = PAPER_DEFAULT.replace(delta=args.delta_us * 1e-6,
                                alpha_h=args.alpha_h_us * 1e-6)
+    if args.trace:
+        explore_trace(args, cm)
+        return
 
     hidden_fabrics = ("ocs-overlap", "ocs-sim")
     res = Planner().plan(PlanRequest(

@@ -4,19 +4,22 @@ Paper: "BRIDGE: Optimizing Collective Communication Schedules in Reconfigurable
 Networks with Reusable Subrings" (Juerss & Schmid, 2026).
 """
 from . import baselines
-from .batchsim import (BatchFabricResult, BatchLane, ScheduleTape,
-                       batch_completion_times, batch_run, clear_tape_caches,
+from .batchsim import (BatchFabricResult, BatchLane, BatchTraceResult,
+                       ScheduleTape, TraceLane, batch_completion_times,
+                       batch_run, batch_run_trace, clear_tape_caches,
                        compile_tape)
 from .bruck import (Collective, Step, a2a_steps, ag_steps, is_pow2, num_steps,
                     rs_steps, schedule_length, simulate_a2a_data,
                     simulate_ag_data, simulate_rs_data, step_counts, steps_for)
 from .cost_model import (CostModel, OCS_TECHNOLOGIES, PAPER_DEFAULT, TPU_V5E,
                          gbps, ocs_ports, ocs_preset)
-from .fabricsim import FabricResult, FabricSim, simulate_fabric, straggler_speeds
+from .fabricsim import (FabricResult, FabricSim, TraceFabricResult,
+                        simulate_fabric, simulate_trace, straggler_speeds,
+                        trace_boundary_changed)
 from .schedules import (Plan, Schedule, SegmentTables, ag_transmission_optimal,
                         ag_transmission_optimal_all, candidate_schedules,
-                        clear_schedule_caches, cstar_a2a, dp_stats,
-                        every_step_schedule, full_cost_optimal,
+                        changed_links, clear_schedule_caches, cstar_a2a,
+                        dp_stats, every_step_schedule, full_cost_optimal,
                         full_cost_optimal_all, periodic, periodic_a2a,
                         periodic_a2a_all, periodic_all, plan, reset_dp_stats,
                         rs_transmission_optimal, rs_transmission_optimal_all,
@@ -30,19 +33,20 @@ __all__ = [
     "Collective", "Step", "a2a_steps", "ag_steps", "is_pow2", "num_steps",
     "rs_steps", "schedule_length", "simulate_a2a_data", "simulate_ag_data",
     "simulate_rs_data", "step_counts", "steps_for",
-    "BatchFabricResult", "BatchLane", "ScheduleTape",
-    "batch_completion_times", "batch_run", "clear_tape_caches",
-    "compile_tape",
+    "BatchFabricResult", "BatchLane", "BatchTraceResult", "ScheduleTape",
+    "TraceLane", "batch_completion_times", "batch_run", "batch_run_trace",
+    "clear_tape_caches", "compile_tape",
     "OCS_TECHNOLOGIES", "PAPER_DEFAULT", "TPU_V5E", "CostModel", "gbps",
     "ocs_ports", "ocs_preset",
     "Plan", "Schedule", "SegmentTables", "ag_transmission_optimal",
-    "ag_transmission_optimal_all", "candidate_schedules",
+    "ag_transmission_optimal_all", "candidate_schedules", "changed_links",
     "clear_schedule_caches", "cstar_a2a", "dp_stats", "every_step_schedule",
     "full_cost_optimal", "full_cost_optimal_all", "periodic", "periodic_a2a",
     "periodic_a2a_all", "periodic_all", "plan", "reset_dp_stats",
     "rs_transmission_optimal", "rs_transmission_optimal_all",
     "static_schedule",
-    "FabricResult", "FabricSim", "simulate_fabric", "straggler_speeds",
+    "FabricResult", "FabricSim", "TraceFabricResult", "simulate_fabric",
+    "simulate_trace", "trace_boundary_changed", "straggler_speeds",
     "StepCost", "TimeBreakdown", "allreduce_time", "allreduce_time_overlap",
     "collective_time", "collective_time_overlap",
     "BlockedRing", "Topology", "ring", "subring_topology", "baselines",

@@ -64,6 +64,23 @@ def validate_rates(name: str, rates, n: int) -> list[float]:
     return rates
 
 
+def validate_phases(phases) -> tuple[tuple[Schedule, float], ...]:
+    """Shared trace-phase validation: non-empty (schedule, m >= 0) pairs on
+    one fabric (used by `TraceLane` and `FabricSim.run_trace`)."""
+    phases = tuple((sched, float(m)) for sched, m in phases)
+    if not phases:
+        raise ValueError("a trace needs at least one (schedule, m) phase")
+    n = phases[0][0].n
+    for i, (sched, m) in enumerate(phases):
+        if sched.n != n:
+            raise ValueError(
+                f"all trace phases must share one fabric: phase {i} has "
+                f"n={sched.n} != {n}")
+        if m < 0:
+            raise ValueError(f"phase {i} payload must be >= 0, got {m}")
+    return phases
+
+
 # --- Tape compilation ---------------------------------------------------------
 
 
@@ -175,6 +192,38 @@ class BatchLane:
 
 
 @dataclasses.dataclass(frozen=True)
+class TraceLane:
+    """One (trace, scenario) configuration in a `batch_run_trace` batch.
+
+    phases : (schedule, m_bytes) per collective, played back-to-back on one
+             fabric with port-state carryover (see `FabricSim.run_trace`).
+    Other knobs are per-lane exactly as in `BatchLane`.
+    """
+
+    phases: tuple[tuple[Schedule, float], ...]
+    delta: float | None = None
+    overlap: float = 0.0
+    link_speed: tuple[float, ...] | None = None
+    payload_scale: tuple[float, ...] | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "phases", validate_phases(self.phases))
+        n = self.phases[0][0].n
+        if not 0.0 <= self.overlap <= 1.0:
+            raise ValueError(f"overlap must be in [0, 1], got {self.overlap}")
+        if self.delta is not None and self.delta < 0:
+            raise ValueError(f"delta must be >= 0, got {self.delta}")
+        for name in ("link_speed", "payload_scale"):
+            v = getattr(self, name)
+            if v is not None:
+                object.__setattr__(self, name, tuple(validate_rates(name, v, n)))
+
+    @property
+    def n(self) -> int:
+        return self.phases[0][0].n
+
+
+@dataclasses.dataclass(frozen=True)
 class BatchFabricResult:
     """Outcome of one `batch_run`: `FabricResult` fields with a lane axis.
 
@@ -213,33 +262,9 @@ class BatchFabricResult:
 # --- Batched playback ---------------------------------------------------------
 
 
-def batch_run(lanes: Sequence[BatchLane], cm: CostModel, *,
-              chunks_per_msg: int = 32,
-              allow_fallback: bool = True) -> BatchFabricResult:
-    """Play every lane's tape forward together (sparse-fabric semantics).
-
-    All lanes must share the same world size n and sub-step count S (any mix
-    of collectives / segmentations at one (n, r) qualifies — including the
-    RS and AG phases of an AllReduce).  Set ``allow_fallback=False`` to get a
-    RuntimeError instead of the scalar re-run when a lane's canonical-order
-    check trips (used by tests to prove the fast path was exercised).
-    """
-    lanes = tuple(lanes)
-    if not lanes:
-        raise ValueError("batch_run needs at least one lane")
-    tapes = [compile_tape(lane.schedule) for lane in lanes]
-    n, S = tapes[0].n, tapes[0].S
-    for lane, tape in zip(lanes, tapes):
-        if tape.n != n or tape.S != S:
-            raise ValueError(
-                f"all lanes must share (n, S); got ({tape.n}, {tape.S}) for "
-                f"{lane.schedule.kind} vs ({n}, {S})")
+def _knob_arrays(lanes, cm: CostModel, n: int):
+    """Per-lane delta/overlap/speed/scale arrays shared by both entry points."""
     B = len(lanes)
-    C = max(1, int(chunks_per_msg))
-    alpha_s, alpha_h, beta = cm.alpha_s, cm.alpha_h, cm.beta
-
-    # --- per-lane knob arrays ----------------------------------------------
-    m = np.array([lane.m_bytes for lane in lanes])
     delta = np.array([cm.delta if lane.delta is None else lane.delta
                       for lane in lanes])
     overlap = np.array([lane.overlap for lane in lanes])
@@ -248,26 +273,33 @@ def batch_run(lanes: Sequence[BatchLane], cm: CostModel, *,
     for b, lane in enumerate(lanes):
         if lane.link_speed is not None:
             speed[b] = lane.link_speed
-    any_scale = any(lane.payload_scale is not None for lane in lanes)
     scale = None
-    if any_scale:
+    if any(lane.payload_scale is not None for lane in lanes):
         scale = np.ones((B, n))
         for b, lane in enumerate(lanes):
             if lane.payload_scale is not None:
                 scale[b] = lane.payload_scale
+    return delta, overlap, delta_eff, speed, scale
 
-    # --- per-lane tape arrays [B, S] ---------------------------------------
-    counts = np.stack([t.arrays["counts"] for t in tapes])
-    g_step = np.stack([t.arrays["g_step"] for t in tapes])
-    hops = np.stack([t.arrays["hops"] for t in tapes])
-    boundary = np.stack([t.arrays["boundary"] for t in tapes])
-    changed = np.stack([t.arrays["changed_pay"] for t in tapes])
 
+def _play(*, n: int, C: int, cm: CostModel, nb_step, g_step, hops, boundary,
+          changed, delta_eff, speed, scale):
+    """Canonical-order tape playback over [B, S] step arrays.
+
+    ``nb_step[b, k]`` is lane b's per-node payload of sub-step k (before any
+    destination scaling); ``boundary`` marks steps that open a new segment
+    (the scalar loop's per-port segment gate resets there) and ``changed``
+    marks steps whose opening boundary physically rewires circuits (those
+    charge ``delta_eff``).  Returns (node_done, step_done, ok) where ``ok``
+    flags the lanes whose heap execution provably coincides with this
+    canonical order (see module docstring).
+    """
+    B, S = nb_step.shape
+    alpha_s, alpha_h, beta = cm.alpha_s, cm.alpha_h, cm.beta
     ports = np.arange(n, dtype=np.int64)[None, :]           # [1, n]
 
     F = np.zeros((B, n))              # port busy-until
     inj = np.full((B, n), alpha_s)    # injection times of the current step
-    node_done = np.zeros((B, n))
     step_done = np.zeros((B, S))
     ok = np.ones(B, dtype=bool)       # canonical-order check per lane
     seg_max_arr = np.full((B, n), -np.inf)  # latest arrival this segment
@@ -278,7 +310,7 @@ def batch_run(lanes: Sequence[BatchLane], cm: CostModel, *,
             F = F + np.where(changed[:, k], delta_eff, 0.0)[:, None]
         h = hops[:, k]                                       # [B]
         g = g_step[:, k]                                     # [B]
-        nb = (m * counts[:, k]) / n                          # [B]
+        nb = nb_step[:, k]                                   # [B]
         gather_idx = (ports - g[:, None]) % n                # [B, n]
         gather_idx3 = np.broadcast_to(gather_idx[:, :, None], (B, n, C))
         arr = np.broadcast_to(inj[:, :, None], (B, n, C))    # stream-0 arrivals
@@ -329,7 +361,47 @@ def batch_run(lanes: Sequence[BatchLane], cm: CostModel, *,
         seg_max_arr = np.where(reset, last_arr,
                                np.maximum(seg_max_arr, last_arr))
         step_done[:, k] = recv.max(axis=1)
-    node_done = recv
+    return recv, step_done, ok
+
+
+def batch_run(lanes: Sequence[BatchLane], cm: CostModel, *,
+              chunks_per_msg: int = 32,
+              allow_fallback: bool = True) -> BatchFabricResult:
+    """Play every lane's tape forward together (sparse-fabric semantics).
+
+    All lanes must share the same world size n and sub-step count S (any mix
+    of collectives / segmentations at one (n, r) qualifies — including the
+    RS and AG phases of an AllReduce).  Set ``allow_fallback=False`` to get a
+    RuntimeError instead of the scalar re-run when a lane's canonical-order
+    check trips (used by tests to prove the fast path was exercised).
+    """
+    lanes = tuple(lanes)
+    if not lanes:
+        raise ValueError("batch_run needs at least one lane")
+    tapes = [compile_tape(lane.schedule) for lane in lanes]
+    n, S = tapes[0].n, tapes[0].S
+    for lane, tape in zip(lanes, tapes):
+        if tape.n != n or tape.S != S:
+            raise ValueError(
+                f"all lanes must share (n, S); got ({tape.n}, {tape.S}) for "
+                f"{lane.schedule.kind} vs ({n}, {S})")
+    C = max(1, int(chunks_per_msg))
+
+    m = np.array([lane.m_bytes for lane in lanes])
+    delta, overlap, delta_eff, speed, scale = _knob_arrays(lanes, cm, n)
+
+    # --- per-lane tape arrays [B, S] ---------------------------------------
+    counts = np.stack([t.arrays["counts"] for t in tapes])
+    g_step = np.stack([t.arrays["g_step"] for t in tapes])
+    hops = np.stack([t.arrays["hops"] for t in tapes])
+    boundary = np.stack([t.arrays["boundary"] for t in tapes])
+    changed = np.stack([t.arrays["changed_pay"] for t in tapes])
+    nb_step = (m[:, None] * counts) / n   # same float-op order as the scalar loop
+
+    node_done, step_done, ok = _play(
+        n=n, C=C, cm=cm, nb_step=nb_step, g_step=g_step, hops=hops,
+        boundary=boundary, changed=changed, delta_eff=delta_eff,
+        speed=speed, scale=scale)
 
     completion = node_done.max(axis=1)
     n_changed = changed.sum(axis=1)
@@ -365,6 +437,133 @@ def batch_run(lanes: Sequence[BatchLane], cm: CostModel, *,
         completion=completion, node_done=node_done, step_done=step_done,
         chunks_moved=chunks_moved, reconfigs_paid=reconfigs_paid,
         delta_stall=delta_stall, fast_path=ok, lanes=lanes)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchTraceResult:
+    """Outcome of one `batch_run_trace`: `TraceFabricResult` fields + lane axis."""
+
+    completion: np.ndarray      # [B]
+    node_done: np.ndarray       # [B, n]
+    step_done: np.ndarray       # [B, S_total]
+    phase_done: np.ndarray      # [B, P]
+    chunks_moved: np.ndarray    # [B] int
+    reconfigs_paid: np.ndarray  # [B] int
+    delta_stall: np.ndarray     # [B]
+    fast_path: np.ndarray       # [B] bool
+    lanes: tuple[TraceLane, ...]
+
+    def __len__(self) -> int:
+        return len(self.lanes)
+
+    def result(self, i: int):
+        """Lane i as a scalar-compatible `TraceFabricResult` (mode='batched')."""
+        # deferred: fabricsim imports us
+        from .fabricsim import TraceFabricResult, trace_boundary_changed
+
+        return TraceFabricResult(
+            completion=float(self.completion[i]), mode="batched",
+            phase_done=tuple(float(t) for t in self.phase_done[i]),
+            step_done=tuple(float(t) for t in self.step_done[i]),
+            node_done=tuple(float(t) for t in self.node_done[i]),
+            chunks_moved=int(self.chunks_moved[i]),
+            boundary_changed=trace_boundary_changed(
+                [sched for sched, _ in self.lanes[i].phases]),
+            reconfigs_paid=int(self.reconfigs_paid[i]),
+            delta_stall=float(self.delta_stall[i]))
+
+
+def batch_run_trace(lanes: Sequence[TraceLane], cm: CostModel, *,
+                    chunks_per_msg: int = 32,
+                    allow_fallback: bool = True) -> BatchTraceResult:
+    """Play every lane's trace forward together with fabric-state carryover.
+
+    Each lane's phases are concatenated into one tape: a collective boundary
+    is exactly a segment boundary (the next phase's injections chain off each
+    node's own final receive of the previous phase, ports keep draining), and
+    it charges the lane's effective delta only when the initial link offset
+    of phase p+1 differs from the final one of phase p.  All lanes must share
+    the same world size n and per-phase sub-step counts.  Lanes whose
+    canonical-order check trips are re-run through the scalar
+    `FabricSim.run_trace` oracle unless ``allow_fallback=False``.
+    """
+    lanes = tuple(lanes)
+    if not lanes:
+        raise ValueError("batch_run_trace needs at least one lane")
+    tapes = [[compile_tape(sched) for sched, _ in lane.phases] for lane in lanes]
+    n = tapes[0][0].n
+    shape = tuple(t.S for t in tapes[0])
+    for lane, ts in zip(lanes, tapes):
+        if ts[0].n != n or tuple(t.S for t in ts) != shape:
+            raise ValueError(
+                f"all trace lanes must share (n, per-phase S); got "
+                f"({ts[0].n}, {tuple(t.S for t in ts)}) vs ({n}, {shape})")
+    B, P, S = len(lanes), len(shape), sum(shape)
+    C = max(1, int(chunks_per_msg))
+    phase_start = np.cumsum((0,) + shape[:-1])
+    phase_last = np.cumsum(shape) - 1
+
+    delta, overlap, delta_eff, speed, scale = _knob_arrays(lanes, cm, n)
+
+    # --- concatenated per-lane tape arrays [B, S] --------------------------
+    g_step = np.stack([np.concatenate([t.arrays["g_step"] for t in ts])
+                       for ts in tapes])
+    hops = np.stack([np.concatenate([t.arrays["hops"] for t in ts])
+                     for ts in tapes])
+    boundary = np.stack([np.concatenate([t.arrays["boundary"] for t in ts])
+                         for ts in tapes])
+    changed = np.stack([np.concatenate([t.arrays["changed_pay"] for t in ts])
+                        for ts in tapes])
+    nb_step = np.stack([
+        np.concatenate([(m * t.arrays["counts"]) / n
+                        for (_, m), t in zip(lane.phases, ts)])
+        for lane, ts in zip(lanes, tapes)])
+    # a phase start opens a new segment (gate reset) and rewires only the
+    # circuits that differ from the previous phase's final configuration
+    for k in phase_start[1:]:
+        boundary[:, k] = True
+        changed[:, k] = g_step[:, k] != g_step[:, k - 1]
+
+    node_done, step_done, ok = _play(
+        n=n, C=C, cm=cm, nb_step=nb_step, g_step=g_step, hops=hops,
+        boundary=boundary, changed=changed, delta_eff=delta_eff,
+        speed=speed, scale=scale)
+
+    completion = node_done.max(axis=1)
+    phase_done = step_done[:, phase_last]
+    reconfigs_paid = (n * changed.sum(axis=1)).astype(np.int64)
+    delta_stall = reconfigs_paid * delta_eff
+    chunks_moved = (n * C * hops.sum(axis=1)).astype(np.int64)
+
+    if not ok.all():
+        if not allow_fallback:
+            raise RuntimeError(
+                f"canonical-order check tripped for trace lanes "
+                f"{np.flatnonzero(~ok).tolist()} and fallback is disabled")
+        from .fabricsim import FabricSim  # deferred: fabricsim imports us
+
+        for b in np.flatnonzero(~ok):
+            lane = lanes[b]
+            sim = FabricSim(
+                chunks_per_msg=C, overlap=float(overlap[b]), mode="sparse",
+                link_speed=(list(lane.link_speed)
+                            if lane.link_speed is not None else None),
+                payload_scale=(list(lane.payload_scale)
+                               if lane.payload_scale is not None else None))
+            res = sim.run_trace(lane.phases, cm.replace(delta=float(delta[b])))
+            completion[b] = res.completion
+            node_done[b] = res.node_done
+            step_done[b] = res.step_done
+            phase_done[b] = res.phase_done
+            chunks_moved[b] = res.chunks_moved
+            reconfigs_paid[b] = res.reconfigs_paid
+            delta_stall[b] = res.delta_stall
+
+    return BatchTraceResult(
+        completion=completion, node_done=node_done, step_done=step_done,
+        phase_done=phase_done, chunks_moved=chunks_moved,
+        reconfigs_paid=reconfigs_paid, delta_stall=delta_stall,
+        fast_path=ok, lanes=lanes)
 
 
 def batch_completion_times(schedules: Sequence[Schedule], m: float,

@@ -37,15 +37,26 @@ Both scalar modes read their per-schedule precomputation (segment maps, hop
 counts, expected per-port service counts, payload structure) from the
 memoized `batchsim.compile_tape`, so repeated runs under different scenario
 knobs stop paying the rebuild cost.
+
+`run_trace` plays *back-to-back collectives* on one fabric with state
+carryover: the phases' segment lists are concatenated, so a collective
+boundary behaves exactly like an intra-schedule segment boundary (ports
+mid-drain keep draining, each node injects the next collective off its own
+final receive, and only the circuits that differ between the previous
+phase's final link offsets and the next phase's initial ones are rewired).
+Full-pause `run_trace` is bit-for-bit the legacy sum of independent runs —
+the cold-fabric baseline of benchmarks/trace_bench.py.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+from typing import Sequence
 
-from .batchsim import BatchLane, batch_run, compile_tape, validate_rates
+from .batchsim import (BatchLane, TraceLane, batch_run, batch_run_trace,
+                       compile_tape, validate_phases, validate_rates)
 from .cost_model import CostModel
-from .schedules import Schedule
+from .schedules import Schedule, changed_links
 
 _MODES = ("sparse", "full-pause", "batched")
 
@@ -82,7 +93,70 @@ class FabricResult:
     delta_stall: float
 
 
-_validate_rates = validate_rates  # canonical implementation lives in batchsim
+@dataclasses.dataclass(frozen=True)
+class TraceFabricResult:
+    """Outcome of one `FabricSim.run_trace` over back-to-back collectives.
+
+    completion       : time the last collective's last receive completed.
+    phase_done       : per collective, the time its final sub-step's last
+                       receive completed (cumulative; the last entry equals
+                       ``completion`` in sparse mode, and the full-pause
+                       entries are running sums of the independent runs).
+    step_done        : per concatenated sub-step across all phases, the time
+                       its last receive completed (full-pause entries are the
+                       per-phase `FabricResult.step_done` values offset by
+                       the completion of the preceding phases).
+    node_done        : per node, its final receive time in the last phase.
+    boundary_changed : per collective boundary, circuits that differ between
+                       the previous phase's final link offsets and the next
+                       phase's initial ones (`schedules.changed_links`).
+                       In full-pause mode these are reported but never
+                       charged: that mode reproduces the legacy
+                       sum-of-independent-collectives number bit-for-bit.
+    reconfigs_paid   : (port, boundary) swaps that paid a blocking delta,
+                       across all phases *and* phase boundaries.
+    delta_stall      : total port-blocking reconfiguration time, seconds.
+    """
+
+    completion: float
+    mode: str
+    phase_done: tuple[float, ...]
+    step_done: tuple[float, ...]
+    node_done: tuple[float, ...]
+    chunks_moved: int
+    boundary_changed: tuple[int, ...]
+    reconfigs_paid: int
+    delta_stall: float
+
+
+@dataclasses.dataclass(frozen=True)
+class _EngineOut:
+    """Raw sparse-engine outputs shared by `run` and `run_trace`."""
+
+    completion: float
+    step_done: tuple[float, ...]
+    node_done: tuple[float, ...]
+    chunks_moved: int
+    reconfigs_paid: int
+    delta_stall: float
+
+
+def trace_boundary_changed(schedules: Sequence[Schedule]) -> tuple[int, ...]:
+    """Circuits differing at each collective boundary of a schedule sequence.
+
+    Entry i compares the final per-sub-step link offset of ``schedules[i]``
+    with the initial one of ``schedules[i + 1]``: the carryover boundary pays
+    delta only on these circuits (0 when collective i ends on exactly the
+    offsets collective i + 1 starts with).
+    """
+    return tuple(
+        changed_links(prev.n, prev.link_offsets()[-1], nxt.link_offsets()[0])
+        for prev, nxt in zip(schedules, schedules[1:]))
+
+
+# canonical implementations live in batchsim (imported by both engines)
+_validate_rates = validate_rates
+_validate_phases = validate_phases
 
 
 class FabricSim:
@@ -132,6 +206,69 @@ class FabricSim:
         if self.mode == "batched":
             return self._run_batched(schedule, m, cm)
         return self._run_sparse(schedule, m, cm)
+
+    def run_trace(self, phases: Sequence[tuple[Schedule, float]],
+                  cm: CostModel) -> TraceFabricResult:
+        """Play back-to-back collectives on one fabric without resetting ports.
+
+        ``phases`` is a sequence of (schedule, m_bytes) pairs sharing one
+        world size n.  In sparse/batched mode the phases are concatenated
+        into one playback: a port mid-drain at a collective boundary keeps
+        draining exactly like at an intra-schedule segment boundary, each
+        node injects phase p+1 as soon as its *own* phase-p final receive
+        completed, and the boundary pays delta only on the circuits that
+        actually change between the previous phase's final link offsets and
+        the next phase's initial ones.  ``mode='full-pause'`` reproduces the
+        legacy sum-of-independent-collectives number bit-for-bit (each phase
+        restarts from a pre-established topology and no boundary is charged),
+        which is the cold-fabric execution baseline of benchmarks/trace_bench.
+        """
+        phases = _validate_phases(phases)
+        if self.mode == "full-pause":
+            return self._trace_full_pause(phases, cm)
+        if self.mode == "batched":
+            lane = TraceLane(
+                phases=phases, overlap=self.overlap,
+                link_speed=(tuple(self.link_speed)
+                            if self.link_speed is not None else None),
+                payload_scale=(tuple(self.payload_scale)
+                               if self.payload_scale is not None else None))
+            return batch_run_trace(
+                [lane], cm, chunks_per_msg=self.chunks_per_msg).result(0)
+        out = self._sparse_engine(phases, cm)
+        last, k = [], 0
+        for sched, _ in phases:
+            k += compile_tape(sched).S
+            last.append(k - 1)
+        return TraceFabricResult(
+            completion=out.completion, mode=self.mode,
+            phase_done=tuple(out.step_done[i] for i in last),
+            step_done=out.step_done,
+            node_done=out.node_done, chunks_moved=out.chunks_moved,
+            boundary_changed=trace_boundary_changed([s for s, _ in phases]),
+            reconfigs_paid=out.reconfigs_paid, delta_stall=out.delta_stall)
+
+    def _trace_full_pause(self, phases, cm: CostModel) -> TraceFabricResult:
+        """Sum of independent full-pause runs, bit-for-bit (the baseline)."""
+        total, phase_done = 0.0, []
+        step_done: list[float] = []
+        chunks = reconfigs = 0
+        stall = 0.0
+        for sched, m in phases:
+            res = self._run_full_pause(sched, m, cm)
+            step_done.extend(total + t for t in res.step_done)
+            total += res.completion  # same float order as sum(independents)
+            phase_done.append(total)
+            chunks += res.chunks_moved
+            reconfigs += res.reconfigs_paid
+            stall += res.delta_stall
+        n = phases[0][0].n
+        return TraceFabricResult(
+            completion=total, mode=self.mode, phase_done=tuple(phase_done),
+            step_done=tuple(step_done),
+            node_done=(total,) * n, chunks_moved=chunks,
+            boundary_changed=trace_boundary_changed([s for s, _ in phases]),
+            reconfigs_paid=reconfigs, delta_stall=stall)
 
     # --- batched (vectorized tape playback) mode ----------------------------
 
@@ -194,13 +331,39 @@ class FabricSim:
 
     def _run_sparse(self, schedule: Schedule, m: float,
                     cm: CostModel) -> FabricResult:
-        n = schedule.n
-        tape = compile_tape(schedule)
-        S = tape.S
-        nseg = len(tape.seg_g)
-        seg_g, seg_of, hops = tape.seg_g, tape.seg_of, tape.hops
-        offsets = tape.offsets
-        nbytes_step = [m * cnt / n for cnt in tape.counts]
+        out = self._sparse_engine(((schedule, m),), cm)
+        return FabricResult(
+            completion=out.completion, mode=self.mode,
+            step_done=out.step_done, node_done=out.node_done,
+            chunks_moved=out.chunks_moved,
+            changed_links=compile_tape(schedule).changed_links,
+            reconfigs_paid=out.reconfigs_paid, delta_stall=out.delta_stall)
+
+    def _sparse_engine(self, phases: Sequence[tuple[Schedule, float]],
+                       cm: CostModel) -> _EngineOut:
+        """Asynchronous per-link event loop over one or more concatenated
+        phases.  A single phase is exactly the pre-trace `run` semantics; for
+        a trace the phases' segment lists are concatenated, so a collective
+        boundary behaves like any other segment boundary (ports drain, then
+        swap only if the next used segment needs a different circuit)."""
+        n = phases[0][0].n
+        tapes = [compile_tape(sched) for sched, _ in phases]
+        offsets: list[int] = []
+        hops: list[int] = []
+        nbytes_step: list[float] = []
+        seg_of: list[int] = []
+        seg_g: list[int] = []
+        seg_hops: list[int] = []
+        for (_, m), tape in zip(phases, tapes):
+            base = len(seg_g)
+            offsets.extend(tape.offsets)
+            hops.extend(tape.hops)
+            nbytes_step.extend(m * cnt / n for cnt in tape.counts)
+            seg_of.extend(base + si for si in tape.seg_of)
+            seg_g.extend(tape.seg_g)
+            seg_hops.extend(tape.seg_hops)
+        S = len(offsets)
+        nseg = len(seg_g)
         speed = ([1.0] * n if self.link_speed is None
                  else _validate_rates("link_speed", self.link_speed, n))
         scale = (None if self.payload_scale is None
@@ -218,7 +381,7 @@ class FabricSim:
         # expected chunk services per (port, segment): the swap trigger.
         # Uniform-offset ring traffic visits every port identically, so the
         # per-segment count is just C * (total hops in the segment).
-        expected = [[C * sh for sh in tape.seg_hops] for _ in range(n)]
+        expected = [[C * sh for sh in seg_hops] for _ in range(n)]
 
         # per-port state
         cfg_seg = [0] * n            # segment whose traffic the port serves
@@ -308,11 +471,9 @@ class FabricSim:
             serve(port, t)
 
         node_done = tuple(recv_done[v][S - 1] for v in range(n))
-        return FabricResult(
-            completion=max(node_done), mode=self.mode,
-            step_done=tuple(step_done), node_done=node_done,
-            chunks_moved=chunks_moved,
-            changed_links=tape.changed_links,
+        return _EngineOut(
+            completion=max(node_done), step_done=tuple(step_done),
+            node_done=node_done, chunks_moved=chunks_moved,
             reconfigs_paid=reconfigs_paid, delta_stall=delta_stall)
 
 
@@ -320,6 +481,12 @@ def simulate_fabric(schedule: Schedule, m: float, cm: CostModel,
                     **knobs) -> FabricResult:
     """Convenience wrapper: ``FabricSim(**knobs).run(schedule, m, cm)``."""
     return FabricSim(**knobs).run(schedule, m, cm)
+
+
+def simulate_trace(phases: Sequence[tuple[Schedule, float]], cm: CostModel,
+                   **knobs) -> TraceFabricResult:
+    """Convenience wrapper: ``FabricSim(**knobs).run_trace(phases, cm)``."""
+    return FabricSim(**knobs).run_trace(phases, cm)
 
 
 def straggler_speeds(n: int, slow: dict[int, float]) -> list[float]:

@@ -60,6 +60,40 @@ def _segment_gcd(steps: Sequence[Step], a: int, b: int) -> int:
     return g
 
 
+def changed_links(n: int, prev: int | Sequence[int],
+                  nxt: int | Sequence[int]) -> int:
+    """Egress circuits that physically differ between two link configurations.
+
+    ``prev`` and ``nxt`` each describe the configured circuit of every node's
+    optical egress port, either as one uniform subring link offset (an int:
+    node u targets (u + g) mod n) or as a per-node offset sequence of length
+    n.  Returns how many of the n egress circuits target a different node
+    under ``nxt`` than under ``prev`` — the circuits an OCS must rewire to
+    move between the configurations; everything else keeps carrying traffic.
+
+    This is the free-function generalization of
+    `Schedule.reconfig_changed_links` (which diffs consecutive segments of a
+    single schedule): it applies to *any* boundary between two link states,
+    in particular the boundary between back-to-back collectives in a workload
+    trace, where the fabric's final offsets from collective i are the initial
+    configuration of collective i+1 (`repro.workloads.trace_planner`).
+    """
+    if n < 1:
+        raise ValueError(f"need n >= 1, got {n}")
+
+    def norm(name: str, v) -> tuple[int, ...]:
+        if isinstance(v, int):
+            return (v % n,) * n
+        v = tuple(int(g) % n for g in v)
+        if len(v) != n:
+            raise ValueError(f"{name} has {len(v)} per-node offsets != n={n}")
+        return v
+
+    if isinstance(prev, int) and isinstance(nxt, int):
+        return 0 if prev % n == nxt % n else n
+    return sum(1 for a, b in zip(norm("prev", prev), norm("nxt", nxt)) if a != b)
+
+
 @dataclasses.dataclass(frozen=True)
 class Schedule:
     """Reconfiguration schedule for one collective execution.
@@ -130,7 +164,8 @@ class Schedule:
         if steps is None:
             return _changed_links_cached(self)
         gs = [_segment_gcd(steps, a, b) for a, b in self.segments]
-        return tuple(self.n if gs[i] != gs[i - 1] else 0 for i in range(1, len(gs)))
+        return tuple(changed_links(self.n, gs[i - 1], gs[i])
+                     for i in range(1, len(gs)))
 
     @staticmethod
     def from_segments(kind: Collective, n: int, lengths: Sequence[int],
@@ -381,7 +416,8 @@ def _changed_links_cached(schedule: "Schedule") -> tuple[int, ...]:
     """Changed circuits per reconfiguration boundary, memoized per Schedule."""
     steps = _steps_cached(schedule.kind, schedule.n, schedule.r)
     gs = [_segment_gcd(steps, a, b) for a, b in schedule.segments]
-    return tuple(schedule.n if gs[i] != gs[i - 1] else 0 for i in range(1, len(gs)))
+    return tuple(changed_links(schedule.n, gs[i - 1], gs[i])
+                 for i in range(1, len(gs)))
 
 
 # --- Paper-faithful schedule families, all R in one DP pass -------------------

@@ -1,0 +1,36 @@
+"""Workload traces: back-to-back collectives on one reconfigurable fabric.
+
+Real training and serving workloads do not issue one collective on a cold
+fabric — MoE All-to-All, gradient AllReduce, and decode AllGather arrive
+back-to-back, and the circuits left behind by one collective are the
+starting topology of the next.  This package raises BRIDGE's step-level
+reuse argument one level:
+
+  - `traces`        — typed `CollectiveEvent` / `Trace` records plus
+                      deterministic generators that synthesize realistic
+                      streams from the model-zoo configs (MoE a2a per layer,
+                      per-step gradient AR, decode AG bursts), with JSON
+                      round-tripping;
+  - `trace_planner` — `plan_trace` extends the exact-R DP across collective
+                      boundaries: the fabric's final link offsets of
+                      collective i become the initial configuration of
+                      collective i+1, boundaries pay delta only on circuits
+                      that actually change (`core.schedules.changed_links`),
+                      and per-collective R is chosen jointly under a
+                      trace-wide delta budget.
+
+Fabric execution of a planned trace lives in `core.fabricsim.FabricSim
+.run_trace` / `core.batchsim.batch_run_trace`; benchmarks/trace_bench.py
+records carryover vs cold-fabric vs static on mixed traces.
+"""
+from .trace_planner import (PhasePlan, TRACE_PLAN_MODES, TracePlan,
+                            plan_trace)
+from .traces import (CollectiveEvent, Trace, approx_param_bytes,
+                     concat_traces, decode_ag_trace, mixed_trace,
+                     moe_a2a_trace, train_step_trace)
+
+__all__ = [
+    "CollectiveEvent", "Trace", "approx_param_bytes", "concat_traces",
+    "decode_ag_trace", "mixed_trace", "moe_a2a_trace", "train_step_trace",
+    "PhasePlan", "TRACE_PLAN_MODES", "TracePlan", "plan_trace",
+]

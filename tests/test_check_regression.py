@@ -1,0 +1,170 @@
+"""Regression-gate tooling: check_regression schemas, coverage gate, summary.
+
+Pins the satellite bugfix: an unrecognized baseline schema or a fresh file
+whose row grid diverges from the baseline must fail loudly — silently
+passing would turn the whole benchmark gate into a no-op.
+"""
+import json
+
+import pytest
+
+from benchmarks.bench_summary import headline, summarize_pair
+from benchmarks.check_regression import main as check_main
+from benchmarks.coverage_gate import main as coverage_main
+
+
+def _write(path, rows):
+    path.write_text(json.dumps({"rows": rows}))
+    return str(path)
+
+
+TRACE_ROW = {
+    "trace": "mixed", "n": 16, "delta": 1e-3, "phases": 12,
+    "free_boundaries": 11, "boundaries": 11, "carry_paid_reconfigs": 0,
+    "carryover_s": 3.3e-3, "cold_fabric_s": 1.4e-2, "static_s": 3.3e-3,
+    "carryover_vs_cold": 4.3, "carryover_vs_static": 1.0,
+}
+
+
+def test_unknown_schema_fails_loudly(tmp_path):
+    base = _write(tmp_path / "b.json", [{"mystery_metric": 1.0, "n": 8}])
+    fresh = _write(tmp_path / "f.json", [{"mystery_metric": 1.0, "n": 8}])
+    with pytest.raises(SystemExit) as exc:
+        check_main([base, fresh])
+    assert exc.value.code not in (0, None)
+
+
+def test_schema_mismatch_fails(tmp_path):
+    base = _write(tmp_path / "b.json", [TRACE_ROW])
+    fresh = _write(tmp_path / "f.json",
+                   [{"wall_speedup": 5.0, "n": 96, "r": 2,
+                     "relaxations_all_r": 1, "relaxations_per_r": 8,
+                     "dp_calls_all_r": 1, "dp_calls_per_r": 8}])
+    with pytest.raises(SystemExit) as exc:
+        check_main([base, fresh])
+    assert exc.value.code == 1
+
+
+def test_fresh_missing_baseline_rows_fails_unless_subset_ok(tmp_path, capsys):
+    other = dict(TRACE_ROW, delta=15e-3)
+    base = _write(tmp_path / "b.json", [TRACE_ROW, other])
+    fresh = _write(tmp_path / "f.json", [dict(TRACE_ROW)])
+    with pytest.raises(SystemExit) as exc:
+        check_main([base, fresh])
+    assert exc.value.code == 1
+    assert "missing from the fresh results" in capsys.readouterr().err
+    check_main(["--subset-ok", base, fresh])  # smoke subset: no exit
+    assert "# OK" in capsys.readouterr().out
+
+
+def test_fresh_rows_unknown_to_baseline_fail_even_with_subset_ok(tmp_path, capsys):
+    base = _write(tmp_path / "b.json", [TRACE_ROW])
+    fresh = _write(tmp_path / "f.json",
+                   [dict(TRACE_ROW), dict(TRACE_ROW, n=48)])
+    with pytest.raises(SystemExit) as exc:
+        check_main(["--subset-ok", base, fresh])
+    assert exc.value.code == 1
+    assert "stale baseline" in capsys.readouterr().err
+
+
+def test_disjoint_grids_report_coverage_details(tmp_path, capsys):
+    """matched == 0 must not swallow the per-row coverage diagnostics."""
+    base = _write(tmp_path / "b.json", [TRACE_ROW])
+    fresh = _write(tmp_path / "f.json", [dict(TRACE_ROW, trace="renamed")])
+    with pytest.raises(SystemExit):
+        check_main([base, fresh])
+    err = capsys.readouterr().err
+    assert "no fresh row matches the baseline grid" in err
+    assert "stale baseline" in err
+    assert "missing from the fresh results" in err
+
+
+def test_trace_schema_gates_drift(tmp_path, capsys):
+    base = _write(tmp_path / "b.json", [TRACE_ROW])
+    ok = _write(tmp_path / "ok.json", [dict(TRACE_ROW)])
+    check_main([base, ok])
+    assert "# OK: 1 rows" in capsys.readouterr().out
+    drift = _write(tmp_path / "d.json",
+                   [dict(TRACE_ROW, carryover_vs_cold=3.9, free_boundaries=9)])
+    with pytest.raises(SystemExit) as exc:
+        check_main([base, drift])
+    assert exc.value.code == 1
+    err = capsys.readouterr().err
+    assert "free_boundaries" in err and "carryover_vs_cold" in err
+
+
+def test_bench_summary_rows(tmp_path):
+    base = _write(tmp_path / "b.json", [TRACE_ROW])
+    fresh = _write(tmp_path / "f.json", [dict(TRACE_ROW)])
+    row, errors = summarize_pair("trace", base, fresh, subset_ok=False)
+    assert "| trace |" in row and "PASS" in row and not errors
+    bad = _write(tmp_path / "bad.json",
+                 [dict(TRACE_ROW, carryover_vs_cold=1.0)])
+    row, errors = summarize_pair("trace", base, bad, subset_ok=False)
+    assert "FAIL" in row and errors
+    row, errors = summarize_pair("gone", base, str(tmp_path / "none.json"),
+                                 subset_ok=False)
+    assert "MISSING" in row and errors
+    assert headline("trace", [TRACE_ROW]).endswith("carryover win")
+    # malformed fresh files render a FAIL row instead of raising (the
+    # summary must appear precisely when a benchmark broke)
+    broken = tmp_path / "broken.json"
+    broken.write_text("{not json")
+    row, errors = summarize_pair("broken", base, str(broken), subset_ok=False)
+    assert "FAIL (unreadable)" in row and errors
+    unknown = _write(tmp_path / "u.json", [{"mystery": 1}])
+    row, errors = summarize_pair("unknown", unknown, fresh, subset_ok=False)
+    assert "FAIL (unreadable)" in row and errors
+
+
+COVERAGE_XML = """<?xml version="1.0" ?>
+<coverage>
+ <packages>
+  <package name="repro.core">
+   <classes>
+    <class filename="repro/core/bruck.py">
+     <lines><line number="1" hits="1"/><line number="2" hits="1"/>
+            <line number="3" hits="0"/></lines>
+    </class>
+   </classes>
+  </package>
+  <package name="repro.planner">
+   <classes>
+    <class filename="repro/planner/api.py">
+     <lines><line number="1" hits="1"/></lines>
+    </class>
+   </classes>
+  </package>
+  <package name="repro.workloads">
+   <classes>
+    <class filename="repro/workloads/traces.py">
+     <lines><line number="1" hits="1"/><line number="2" hits="0"/></lines>
+    </class>
+   </classes>
+  </package>
+  <package name="repro.models">
+   <classes>
+    <class filename="repro/models/model.py">
+     <lines><line number="1" hits="0"/></lines>
+    </class>
+   </classes>
+  </package>
+ </packages>
+</coverage>
+"""
+
+
+def test_coverage_gate_scopes_and_threshold(tmp_path, capsys):
+    xml = tmp_path / "coverage.xml"
+    xml.write_text(COVERAGE_XML)
+    # 4/6 covered lines in the gated packages (models/ is excluded) = 66.7%
+    coverage_main([str(xml), "--min", "60"])
+    out = capsys.readouterr().out
+    assert "combined: 4/6" in out
+    with pytest.raises(SystemExit) as exc:
+        coverage_main([str(xml), "--min", "70"])
+    assert exc.value.code == 1
+    # a gated package with no measured lines is an error even above --min
+    with pytest.raises(SystemExit):
+        coverage_main([str(xml), "--min", "10",
+                       "--packages", "core", "nonexistent"])

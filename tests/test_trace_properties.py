@@ -1,0 +1,106 @@
+"""Hypothesis property tests for cross-collective fabric carryover (skipped
+if hypothesis is absent; CI installs it, and the seeded-grid versions in
+tests/test_traces.py always run).
+
+Properties:
+  - for ANY two consecutive schedules, the carryover boundary pays exactly
+    the changed-circuit diff (`changed_links` of the fabric's final vs the
+    next collective's initial link offsets) — and 0 swaps when collective i
+    ends on exactly the offsets collective i+1 starts with;
+  - `run_trace` full-pause equals the sum of independent `FabricSim` runs
+    bit-for-bit on random traces;
+  - the batched trace engine agrees with the scalar sparse carryover loop
+    within 1e-9 relative on random traces and scenario knobs.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.core import (FabricSim, PAPER_DEFAULT, Schedule, TraceLane,  # noqa: E402
+                        batch_run_trace, changed_links,
+                        trace_boundary_changed)
+from repro.core.bruck import schedule_length  # noqa: E402
+
+MB = 1024.0 ** 2
+
+
+def _schedule(data, ns, label="sched") -> Schedule:
+    n = data.draw(st.sampled_from(ns), label=f"{label}.n")
+    kind = data.draw(st.sampled_from(["a2a", "rs", "ag"]), label=f"{label}.kind")
+    s = schedule_length(kind, n, 2)
+    bits = data.draw(st.lists(st.integers(0, 1), min_size=s - 1, max_size=s - 1),
+                     label=f"{label}.x")
+    return Schedule(kind=kind, n=n, x=tuple([0] + bits), r=2)
+
+
+def _phases(data, ns, max_phases=3):
+    n = data.draw(st.sampled_from(ns), label="n")
+    count = data.draw(st.integers(2, max_phases), label="phases")
+    out = []
+    for i in range(count):
+        kind = data.draw(st.sampled_from(["a2a", "rs", "ag"]),
+                         label=f"kind{i}")
+        s = schedule_length(kind, n, 2)
+        bits = data.draw(st.lists(st.integers(0, 1), min_size=s - 1,
+                                  max_size=s - 1), label=f"x{i}")
+        m = data.draw(st.sampled_from([0.25 * MB, 2 * MB]), label=f"m{i}")
+        out.append((Schedule(kind=kind, n=n, x=tuple([0] + bits), r=2), m))
+    return tuple(out)
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_property_boundary_delta_equals_changed_circuit_diff(data):
+    """For any two consecutive schedules, the sparse trace pays exactly the
+    changed-circuit diff at the boundary, and nothing when collective i ends
+    on exactly the offsets collective i+1 starts with."""
+    phases = _phases(data, [6, 12, 16], max_phases=2)
+    (s1, m1), (s2, m2) = phases
+    expect = changed_links(s1.n, s1.link_offsets()[-1], s2.link_offsets()[0])
+    assert trace_boundary_changed([s1, s2]) == (expect,)
+    if s1.link_offsets()[-1] == s2.link_offsets()[0]:
+        assert expect == 0
+
+    cm = PAPER_DEFAULT.replace(delta=data.draw(st.sampled_from([1e-6, 1e-3])))
+    sim = FabricSim(chunks_per_msg=2, mode="sparse")
+    res = sim.run_trace(phases, cm)
+    paid_alone = sum(sim.run(s, m, cm).reconfigs_paid for s, m in phases)
+    assert res.reconfigs_paid - paid_alone == expect
+    assert res.delta_stall == pytest.approx(
+        res.reconfigs_paid * cm.delta_sparse(1, 0.0))
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_property_full_pause_trace_is_sum_of_independents(data):
+    phases = _phases(data, [6, 12, 16])
+    cm = PAPER_DEFAULT.replace(delta=data.draw(st.sampled_from([1e-6, 1e-3])))
+    sim = FabricSim(chunks_per_msg=2, mode="full-pause")
+    res = sim.run_trace(phases, cm)
+    assert res.completion == sum(sim.run(s, m, cm).completion
+                                 for s, m in phases)
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_property_batched_trace_matches_scalar(data):
+    phases = _phases(data, [6, 12, 16])
+    n = phases[0][0].n
+    overlap = data.draw(st.sampled_from([0.0, 0.75]), label="overlap")
+    cm = PAPER_DEFAULT.replace(delta=data.draw(st.sampled_from([1e-6, 1e-3])))
+    speed = None
+    if data.draw(st.booleans(), label="straggler"):
+        node = data.draw(st.integers(0, n - 1), label="node")
+        rate = data.draw(st.sampled_from([0.25, 0.8]), label="rate")
+        speed = tuple(rate if v == node else 1.0 for v in range(n))
+    ref = FabricSim(chunks_per_msg=2, overlap=overlap, mode="sparse",
+                    link_speed=list(speed) if speed else None
+                    ).run_trace(phases, cm)
+    res = batch_run_trace(
+        [TraceLane(phases=phases, overlap=overlap, link_speed=speed)],
+        cm, chunks_per_msg=2)
+    assert res.completion[0] == pytest.approx(ref.completion, rel=1e-9)
+    assert res.chunks_moved[0] == ref.chunks_moved

@@ -1,0 +1,352 @@
+"""Workload traces: generators, cross-collective planning, fabric carryover.
+
+Pins the tentpole invariants of the trace layer:
+
+  - `changed_links` (the free-function generalization of
+    `Schedule.reconfig_changed_links`) on uniform and per-node offsets;
+  - trace/plan JSON round trips and deterministic generators;
+  - carryover <= cold-fabric <= (never worse than) the trace planner's
+    structural guarantees across the delta grid, joint budget allocation;
+  - `FabricSim.run_trace` full-pause == sum of independent runs bit-for-bit
+    (seeded-grid version; the hypothesis variant lives in
+    tests/test_trace_properties.py);
+  - sparse carryover boundary accounting == the changed-circuit diff, and
+    the batched trace engine == the scalar one at 1e-9.
+"""
+import random
+
+import pytest
+
+from repro.core import (FabricSim, PAPER_DEFAULT, Schedule, TraceLane,
+                        batch_run_trace, changed_links, periodic,
+                        static_schedule, trace_boundary_changed)
+from repro.core.bruck import schedule_length
+from repro.workloads import (CollectiveEvent, Trace, TracePlan, concat_traces,
+                             decode_ag_trace, mixed_trace, moe_a2a_trace,
+                             plan_trace, train_step_trace)
+
+MB = 1024.0 ** 2
+
+
+def random_schedule(rng: random.Random, n: int, kind: str, r: int = 2) -> Schedule:
+    s = schedule_length(kind, n, r)
+    return Schedule(kind=kind, n=n, r=r,
+                    x=tuple([0] + [rng.randint(0, 1) for _ in range(s - 1)]))
+
+
+# --- changed_links ------------------------------------------------------------
+
+
+def test_changed_links_uniform_offsets():
+    assert changed_links(8, 1, 1) == 0
+    assert changed_links(8, 1, 2) == 8
+    assert changed_links(8, 2, 4) == 8
+    # offsets are compared mod n (the egress target is (u + g) mod n)
+    assert changed_links(8, 1, 9) == 0
+
+
+def test_changed_links_per_node_offsets():
+    assert changed_links(4, [1, 1, 2, 2], [1, 1, 2, 2]) == 0
+    assert changed_links(4, [1, 1, 2, 2], [1, 2, 2, 2]) == 1
+    assert changed_links(4, 1, [1, 1, 1, 3]) == 1
+    with pytest.raises(ValueError):
+        changed_links(4, [1, 1], [1, 1, 1, 1])
+    with pytest.raises(ValueError):
+        changed_links(0, 1, 1)
+
+
+def test_changed_links_matches_schedule_method():
+    rng = random.Random(7)
+    for n in (6, 12, 16, 48):
+        for kind in ("a2a", "rs", "ag"):
+            sched = random_schedule(rng, n, kind)
+            offs = sched.link_offsets()
+            segs = sched.segments
+            expect = tuple(changed_links(n, offs[a_prev], offs[a])
+                           for (a_prev, _), (a, _) in zip(segs, segs[1:]))
+            assert sched.reconfig_changed_links() == expect
+
+
+def test_trace_boundary_changed_free_iff_offsets_match():
+    n = 16
+    a2a = periodic("a2a", n, 0)     # single segment, g = 1
+    rs = static_schedule("rs", n)   # g = 1 throughout
+    assert trace_boundary_changed([a2a, rs]) == (0,)
+    high = periodic("a2a", n, 3)    # last segment g != 1
+    assert high.link_offsets()[-1] != rs.link_offsets()[0]
+    assert trace_boundary_changed([high, rs]) == (n,)
+
+
+# --- trace records and generators --------------------------------------------
+
+
+def test_event_and_trace_validation():
+    with pytest.raises(ValueError):
+        CollectiveEvent(kind="bcast", m_bytes=1.0)
+    with pytest.raises(ValueError):
+        CollectiveEvent(kind="a2a", m_bytes=-1.0)
+    ev = CollectiveEvent(kind="a2a", m_bytes=MB)
+    with pytest.raises(ValueError):
+        Trace(name="t", n=1, events=(ev,))
+    with pytest.raises(ValueError):
+        Trace(name="t", n=8, events=())
+    with pytest.raises(ValueError):
+        Trace(name="t", n=8, events=(ev,), r=1)
+
+
+def test_trace_json_round_trip():
+    tr = mixed_trace(16, seed=5)
+    back = Trace.from_json(tr.to_json())
+    assert back == tr
+    assert back.to_dict() == tr.to_dict()
+
+
+def test_generators_deterministic_in_seed():
+    a = moe_a2a_trace(16, seed=3, jitter=0.25)
+    b = moe_a2a_trace(16, seed=3, jitter=0.25)
+    c = moe_a2a_trace(16, seed=4, jitter=0.25)
+    assert a == b
+    assert a != c
+    d1 = decode_ag_trace(16, seed=1, jitter=0.5)
+    d2 = decode_ag_trace(16, seed=1, jitter=0.5)
+    assert d1 == d2
+
+
+def test_generator_payloads_from_configs():
+    moe = moe_a2a_trace(8, layers=2, tokens_per_device=1024, jitter=0.0)
+    # 2 events (dispatch + combine) per layer at tokens x d_model x 2 bytes
+    assert len(moe) == 4
+    assert all(ev.kind == "a2a" for ev in moe.events)
+    assert moe.events[0].m_bytes == 1024 * 4096 * 2  # qwen3 d_model = 4096
+    train = train_step_trace(8, steps=2, buckets=3)
+    assert len(train) == 6
+    assert all(ev.kind == "ar" for ev in train.events)
+    assert len({ev.m_bytes for ev in train.events}) == 1  # equal buckets
+    with pytest.raises(ValueError):
+        moe_a2a_trace(8, arch="stablelm-3b")  # dense arch has no MoE layers
+
+
+def test_phases_flatten_composite_ar():
+    tr = train_step_trace(8, steps=1, buckets=1)
+    phases = tr.phases()
+    assert [kind for kind, _, _ in phases] == ["rs", "ag"]
+    assert phases[0][1] == phases[1][1] == tr.events[0].m_bytes
+    mixed = concat_traces("both", [tr, decode_ag_trace(8, decode_steps=2)])
+    assert len(mixed.phases()) == 2 + 2
+
+
+# --- trace planning -----------------------------------------------------------
+
+
+@pytest.mark.parametrize("delta", [10e-6, 1e-3, 15e-3])
+def test_carryover_never_worse_than_cold_or_static(delta):
+    cm = PAPER_DEFAULT.replace(delta=delta)
+    for trace in (mixed_trace(16, seed=0), decode_ag_trace(12, decode_steps=4),
+                  train_step_trace(16, steps=1, buckets=2)):
+        static = plan_trace(trace, cm, mode="static")
+        cold = plan_trace(trace, cm, mode="cold")
+        carry = plan_trace(trace, cm, mode="carryover")
+        assert carry.total_time <= cold.total_time * (1 + 1e-12)
+        assert carry.total_time <= static.total_time * (1 + 1e-12)
+        assert len(carry.phases) == len(trace.phases())
+
+
+def test_boundary_cost_zero_iff_offsets_align():
+    cm = PAPER_DEFAULT.replace(delta=1e-3)
+    carry = plan_trace(mixed_trace(16, seed=0), cm, mode="carryover")
+    for plan_prev, plan_next, changed, cost in zip(
+            carry.phases, carry.phases[1:], carry.boundary_changed,
+            carry.boundary_cost):
+        expect = changed_links(carry.trace.n,
+                               plan_prev.schedule.link_offsets()[-1],
+                               plan_next.schedule.link_offsets()[0])
+        assert changed == expect
+        assert (cost == 0.0) == (changed == 0)
+        if changed:
+            assert cost == cm.delta_sparse(changed, 0.0)
+
+
+def test_cold_mode_charges_full_boundary_everywhere():
+    cm = PAPER_DEFAULT.replace(delta=1e-3)
+    trace = decode_ag_trace(16, decode_steps=3)
+    cold = plan_trace(trace, cm, mode="cold")
+    assert cold.boundary_changed == (16, 16)
+    assert cold.boundary_cost == (cm.delta, cm.delta)
+    assert cold.total_time == pytest.approx(
+        sum(p.time for p in cold.phases) + 2 * cm.delta)
+
+
+def test_trace_delta_budget_is_joint_not_per_phase():
+    # at micro-delta the unconstrained optimum spends reconfigurations
+    cm = PAPER_DEFAULT.replace(delta=10e-6)
+    trace = mixed_trace(16, seed=0)
+    free = plan_trace(trace, cm, mode="carryover")
+    assert free.paid_reconfigs > 0
+    # a budget for exactly the spent amount changes nothing
+    budget = free.paid_reconfigs * cm.delta
+    same = plan_trace(trace, cm, mode="carryover", delta_budget=budget)
+    assert same.total_time == free.total_time
+    # halving the budget still yields a feasible (possibly uneven) allocation
+    half = plan_trace(trace, cm, mode="carryover", delta_budget=budget / 2)
+    assert half.paid_reconfigs * cm.delta <= budget / 2 + 1e-15
+    assert half.total_time >= free.total_time
+    # zero budget forces zero intra-collective reconfigurations
+    none = plan_trace(trace, cm, mode="carryover", delta_budget=0.0)
+    assert none.paid_reconfigs == 0
+    # and the joint spend may concentrate on few phases: with budget for one
+    # reconfiguration, at most one phase pays (per-phase rationing would
+    # forbid any)
+    one = plan_trace(trace, cm, mode="carryover", delta_budget=cm.delta)
+    assert one.paid_reconfigs <= 1
+
+
+def test_trace_plan_json_round_trip():
+    cm = PAPER_DEFAULT.replace(delta=1e-3)
+    tp = plan_trace(mixed_trace(16, seed=2), cm, mode="carryover",
+                    delta_budget=5e-3)
+    back = TracePlan.from_json(tp.to_json())
+    assert back == tp
+    assert back.schedules() == tp.schedules()
+
+
+def test_plan_trace_validation():
+    trace = decode_ag_trace(8, decode_steps=2)
+    with pytest.raises(ValueError):
+        plan_trace(trace, mode="warm")
+    with pytest.raises(ValueError):
+        plan_trace(trace, fabric="ocs-sim")
+    with pytest.raises(ValueError):
+        plan_trace(trace, overlap=0.5)  # needs fabric="ocs-overlap"
+    with pytest.raises(ValueError):
+        plan_trace(trace, delta_budget=-1.0)
+
+
+def test_plan_trace_overlap_fabric():
+    cm = PAPER_DEFAULT.replace(delta=1e-3)
+    trace = mixed_trace(16, seed=0)
+    plain = plan_trace(trace, cm, mode="cold")
+    hidden = plan_trace(trace, cm, mode="cold", fabric="ocs-overlap",
+                        overlap=0.75)
+    # the overlap credit shrinks every full boundary charge
+    assert hidden.boundary_time == pytest.approx(plain.boundary_time * 0.25)
+    carry = plan_trace(trace, cm, mode="carryover", fabric="ocs-overlap",
+                       overlap=0.75)
+    assert carry.total_time <= hidden.total_time * (1 + 1e-12)
+
+
+# --- fabric execution of traces ----------------------------------------------
+
+
+def test_run_trace_full_pause_equals_sum_of_independent_runs():
+    """Seeded grid: the full-pause trace is bit-for-bit the legacy
+    sum-of-independent-collectives number."""
+    rng = random.Random(11)
+    cm = PAPER_DEFAULT.replace(delta=1e-3)
+    for n in (6, 12, 48):
+        for _ in range(3):
+            phases = [
+                (random_schedule(rng, n, rng.choice(["a2a", "rs", "ag"])),
+                 rng.choice([0.25 * MB, MB, 4 * MB]))
+                for _ in range(rng.randint(2, 4))
+            ]
+            sim = FabricSim(chunks_per_msg=2, mode="full-pause")
+            res = sim.run_trace(phases, cm)
+            indep = [sim.run(sched, m, cm) for sched, m in phases]
+            assert res.completion == sum(r.completion for r in indep)
+            assert res.phase_done[-1] == res.completion
+            assert res.chunks_moved == sum(r.chunks_moved for r in indep)
+            assert res.reconfigs_paid == sum(r.reconfigs_paid for r in indep)
+            assert res.delta_stall == sum(r.delta_stall for r in indep)
+
+
+def test_run_trace_sparse_boundary_pays_exactly_the_changed_diff():
+    n = 16
+    cm = PAPER_DEFAULT.replace(delta=1e-3)
+    sim = FabricSim(chunks_per_msg=2, mode="sparse")
+    aligned = [(periodic("a2a", n, 0), MB), (static_schedule("rs", n), MB)]
+    misaligned = [(periodic("a2a", n, 3), MB), (static_schedule("rs", n), MB)]
+    for phases, boundary in ((aligned, 0), (misaligned, n)):
+        res = sim.run_trace(phases, cm)
+        parts = [sim.run(sched, m, cm) for sched, m in phases]
+        extra = res.reconfigs_paid - sum(p.reconfigs_paid for p in parts)
+        assert res.boundary_changed == (boundary,)
+        assert extra == boundary
+        assert res.delta_stall == pytest.approx(
+            res.reconfigs_paid * cm.delta_sparse(1, 0.0))
+
+
+def test_run_trace_single_phase_matches_run():
+    cm = PAPER_DEFAULT.replace(delta=1e-3)
+    sched = periodic("a2a", 12, 2)
+    sim = FabricSim(chunks_per_msg=4, mode="sparse")
+    one = sim.run_trace([(sched, MB)], cm)
+    ref = sim.run(sched, MB, cm)
+    assert one.completion == ref.completion
+    assert one.reconfigs_paid == ref.reconfigs_paid
+    assert one.node_done == ref.node_done
+
+
+def test_run_trace_validation():
+    cm = PAPER_DEFAULT
+    sim = FabricSim(mode="sparse")
+    with pytest.raises(ValueError):
+        sim.run_trace([], cm)
+    with pytest.raises(ValueError):
+        sim.run_trace([(periodic("a2a", 8, 1), MB),
+                       (periodic("rs", 16, 1), MB)], cm)
+    with pytest.raises(ValueError):
+        sim.run_trace([(periodic("a2a", 8, 1), -MB)], cm)
+    with pytest.raises(ValueError):
+        TraceLane(phases=())
+
+
+def test_batched_trace_matches_scalar_sparse():
+    rng = random.Random(23)
+    for n in (6, 12, 48):
+        for trial in range(3):
+            phases = tuple(
+                (random_schedule(rng, n, rng.choice(["a2a", "rs", "ag"])),
+                 rng.choice([0.25 * MB, 2 * MB]))
+                for _ in range(rng.randint(2, 4)))
+            delta = rng.choice([1e-6, 1e-3])
+            overlap = rng.choice([0.0, 0.75])
+            speed = None
+            if rng.random() < 0.5:
+                speed = tuple(0.25 if v == rng.randrange(n) else 1.0
+                              for v in range(n))
+            cm = PAPER_DEFAULT.replace(delta=delta)
+            ref = FabricSim(chunks_per_msg=2, mode="sparse", overlap=overlap,
+                            link_speed=list(speed) if speed else None
+                            ).run_trace(phases, cm)
+            res = batch_run_trace(
+                [TraceLane(phases=phases, overlap=overlap, link_speed=speed)],
+                cm, chunks_per_msg=2)
+            assert res.completion[0] == pytest.approx(ref.completion, rel=1e-9)
+            assert res.chunks_moved[0] == ref.chunks_moved
+            got = res.result(0)
+            assert got.boundary_changed == ref.boundary_changed
+            for a, b in zip(got.phase_done, ref.phase_done):
+                assert a == pytest.approx(b, rel=1e-9)
+            for a, b in zip(got.step_done, ref.step_done):
+                assert a == pytest.approx(b, rel=1e-9)
+
+
+def test_fabricsim_batched_mode_run_trace():
+    cm = PAPER_DEFAULT.replace(delta=1e-3)
+    phases = [(periodic("a2a", 12, 2), MB), (periodic("rs", 12, 1), 2 * MB)]
+    ref = FabricSim(chunks_per_msg=4, mode="sparse").run_trace(phases, cm)
+    got = FabricSim(chunks_per_msg=4, mode="batched").run_trace(phases, cm)
+    assert got.mode == "batched"
+    assert got.completion == pytest.approx(ref.completion, rel=1e-9)
+
+
+def test_planned_trace_executes_on_fabric():
+    """End-to-end: plan a trace with carryover, play it on the fabric; the
+    sparse execution respects the planner's boundary accounting."""
+    cm = PAPER_DEFAULT.replace(delta=1e-3)
+    trace = mixed_trace(16, seed=1)
+    carry = plan_trace(trace, cm, mode="carryover")
+    res = FabricSim(chunks_per_msg=2, mode="sparse").run_trace(
+        carry.fabric_phases(), cm)
+    assert res.boundary_changed == carry.boundary_changed
+    assert res.completion > 0
