@@ -5,7 +5,7 @@ PYTHONPATH := src
 COV_MIN ?= 84
 
 .PHONY: test test-fast bench bench-smoke plan-bench fabric-bench sim-bench \
-	trace-bench sweep coverage lint
+	trace-bench online-bench sweep coverage lint
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -47,6 +47,14 @@ sim-bench:
 # ms-scale delta; recorded to BENCH_trace.json.
 trace-bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.trace_bench --json BENCH_trace.json
+
+# Online receding-horizon planning vs the offline DP vs cold per-event over
+# traces x n x delta x window W (regret gates: never better than offline,
+# within --max-regret for W >= 2, beats cold at ms-scale delta), plus the
+# plan-serving request storm (cache-hit plans/sec floor); recorded to
+# BENCH_online.json.
+online-bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.online_bench --json BENCH_online.json
 
 # Full n x r x m sweep, recorded for the perf trajectory.
 sweep:

@@ -18,9 +18,10 @@ import argparse
 import json
 import os
 
-from benchmarks.check_regression import (SCHEMAS, check_fabric, check_planner,
-                                         check_row_coverage, check_sim,
-                                         check_trace, detect_schema)
+from benchmarks.check_regression import (SCHEMAS, check_fabric, check_online,
+                                         check_planner, check_row_coverage,
+                                         check_sim, check_trace,
+                                         detect_schema)
 
 
 def headline(schema: str, rows: list[dict]) -> str:
@@ -34,6 +35,15 @@ def headline(schema: str, rows: list[dict]) -> str:
     if schema == "trace":
         return (f"{max(r['carryover_vs_cold'] for r in rows):.1f}x "
                 f"carryover win")
+    if schema == "online":
+        storm = [r["hot_plans_per_sec"] for r in rows
+                 if r["trace"] == "storm"]
+        worst = max((r["online_vs_offline"] for r in rows
+                     if r["trace"] != "storm" and r["window"] >= 2),
+                    default=None)
+        head = f"W>=2 regret {worst}x" if worst is not None else "storm only"
+        return (f"{head}, {max(storm) / 1e3:.0f}k plans/s"
+                if storm else head)
     return f"{max(r['sparse_speedup'] for r in rows):.2f}x sparse"
 
 
@@ -59,7 +69,9 @@ def summarize_pair(name: str, baseline: str, fresh: str,
         check = {"planner": lambda: check_planner(base_rows, fresh_rows, 0.25),
                  "sim": lambda: check_sim(base_rows, fresh_rows, 0.25),
                  "trace": lambda: check_trace(base_rows, fresh_rows, 1e-6),
-                 "fabric": lambda: check_fabric(base_rows, fresh_rows, 1e-6)}
+                 "fabric": lambda: check_fabric(base_rows, fresh_rows, 1e-6),
+                 "online": lambda: check_online(base_rows, fresh_rows,
+                                                1e-6, 0.25)}
         more, matched = check[schema]()
         errors += more
         head = headline(schema, fresh_rows)

@@ -21,6 +21,12 @@ The file schema is auto-detected from the row keys:
   - trace rows (``carryover_s``, BENCH_trace.json): trace planning is
     deterministic, so the carryover/cold/static ratios must match the
     baseline within ``--rel-tol`` and the boundary-reuse counts exactly.
+  - online rows (``window``, BENCH_online.json): online planning and the
+    request storm are deterministic, so the modeled times, replan/reuse
+    counts, hit accounting, and the storm's plan-sequence signature must
+    match the baseline (times within ``--rel-tol``); the serving plans/sec
+    is timing-noisy and only has to stay above ``--wall-frac`` of the
+    committed hot-path throughput.
 
 Rows are matched on their identifying keys (n / r / delta / tier / trace).
 Row coverage is strict: a fresh row whose key the baseline does not know is
@@ -43,6 +49,7 @@ SCHEMAS = {
     "sim": ("batched_wall_s", ("tier", "n")),
     "trace": ("carryover_s", ("trace", "n", "delta")),
     "fabric": ("event_analytic_ratio", ("n", "r", "delta")),
+    "online": ("window", ("trace", "n", "delta", "window")),
 }
 
 
@@ -146,6 +153,49 @@ def check_trace(base_rows: list[dict], fresh_rows: list[dict],
     return errors, matched
 
 
+def check_online(base_rows: list[dict], fresh_rows: list[dict],
+                 rel_tol: float, wall_frac: float) -> tuple[list[str], int]:
+    errors, matched = [], 0
+    base = _index(base_rows, SCHEMAS["online"][1])
+    for key, fresh in _index(fresh_rows, SCHEMAS["online"][1]).items():
+        if key not in base:
+            continue
+        matched += 1
+        ref = base[key]
+        if key[0] == "storm":
+            tag = f"storm n={key[1]}"
+            for field in ("pool", "requests", "cold_hits", "cold_misses",
+                          "hot_hits", "hot_misses", "unique_windows",
+                          "signature"):
+                if fresh[field] != ref[field]:
+                    errors.append(f"{tag}: {field} {fresh[field]} != "
+                                  f"baseline {ref[field]} (the seeded storm "
+                                  f"is deterministic)")
+            floor = wall_frac * ref["hot_plans_per_sec"]
+            if fresh["hot_plans_per_sec"] < floor:
+                errors.append(f"{tag}: hot_plans_per_sec "
+                              f"{fresh['hot_plans_per_sec']} < {floor:.0f} "
+                              f"(baseline {ref['hot_plans_per_sec']}, "
+                              f"frac {wall_frac})")
+            continue
+        tag = (f"online trace={key[0]} n={key[1]} delta={key[2]} "
+               f"W={key[3]}")
+        for field in ("events", "phases", "replans", "plan_reuses",
+                      "free_boundaries", "paid_reconfigs"):
+            if fresh[field] != ref[field]:
+                errors.append(f"{tag}: {field} {fresh[field]} != baseline "
+                              f"{ref[field]} (online planning is "
+                              f"deterministic)")
+        for field in ("online_s", "offline_s", "cold_event_s",
+                      "online_vs_offline", "cold_vs_online"):
+            drift = abs(fresh[field] - ref[field]) / max(abs(ref[field]), 1e-12)
+            if drift > rel_tol:
+                errors.append(f"{tag}: {field} {fresh[field]} drifted "
+                              f"{drift:.2e} from baseline {ref[field]} "
+                              f"(> {rel_tol})")
+    return errors, matched
+
+
 def detect_schema(rows: list[dict], label: str) -> str:
     """Schema of a result file, failing loudly when no known schema matches.
 
@@ -213,6 +263,9 @@ def main(argv=None) -> None:
         more, matched = check_sim(base, fresh, args.wall_frac)
     elif fresh_schema == "trace":
         more, matched = check_trace(base, fresh, args.rel_tol)
+    elif fresh_schema == "online":
+        more, matched = check_online(base, fresh, args.rel_tol,
+                                     args.wall_frac)
     else:
         more, matched = check_fabric(base, fresh, args.rel_tol)
     errors += more

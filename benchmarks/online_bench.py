@@ -1,0 +1,213 @@
+"""Online receding-horizon planning benchmark: regret vs W, serving throughput.
+
+Sweeps workload traces over the n x delta x window grid and, at each point,
+plans the stream three ways:
+
+  - ``offline``  : the full joint DP (`plan_trace` mode='carryover') — sees
+                   the whole stream, the regret reference;
+  - ``online-W`` : `run_online` — a receding-horizon window of W events,
+                   the window DP warm-started at the committed fabric state,
+                   commit-one-advance (W = stream length recovers offline
+                   exactly);
+  - ``cold``     : per-event planning with full-fabric boundary swaps
+                   (`plan_trace` mode='cold') — what serving without
+                   carryover state costs.
+
+Each n also gets one serving-throughput row (``trace='storm'``): a seeded
+request storm (`repro.workloads.request_storm`) fired twice at a
+`PlanService` — once cold (cache misses fall through to the window DP) and
+once hot (repeated windows served from the LRU) — recording plans/sec for
+both tiers, hit accounting, and the deterministic plan-sequence signature.
+
+Gates (exit 1 on violation; re-checked in CI against the committed baseline
+by `benchmarks.check_regression`):
+
+  - online-W never beats the offline DP (offline sees a superset of every
+    window's information);
+  - online-W stays within ``--max-regret`` of offline on every W >= 2 grid
+    row — the receding horizon is a bounded-regret approximation, not a
+    gamble; the greedy W=1 ablation (no lookahead: it commits the locally
+    cheapest schedule and can strand the fabric in a state the next event
+    pays for) gets the looser ``--max-regret-greedy`` bound (measured worst
+    case 1.18x at n=48, delta=1ms);
+  - at ms-scale delta, online-W strictly beats cold per-event planning for
+    W >= 2 (carrying fabric state across boundaries is what the online
+    planner exists for);
+  - the hot (cache-hit) serving path sustains at least
+    ``--min-plans-per-sec`` and a >= 0.9 hit rate.
+
+Run via ``make online-bench``; results land in BENCH_online.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from benchmarks.trace_bench import DELTAS, TRACES, make_trace
+
+WINDOWS = (1, 2, 4, 8)
+#: serving-storm shape — identical in smoke and full runs so the hit
+#: accounting and plan-sequence signature stay baseline-comparable
+STORM_WINDOW = 3
+STORM_REQUESTS = 256
+
+
+def bench_grid(trace_names=TRACES, ns=(16, 48), deltas=DELTAS,
+               windows=WINDOWS) -> list[dict]:
+    from repro.core import PAPER_DEFAULT
+    from repro.workloads import plan_trace, run_online
+
+    rows = []
+    for name in trace_names:
+        for n in ns:
+            trace = make_trace(name, n)
+            for delta in deltas:
+                cm = PAPER_DEFAULT.replace(delta=delta)
+                offline = plan_trace(trace, cm, mode="carryover")
+                cold = plan_trace(trace, cm, mode="cold")
+                for window in windows:
+                    online, stats = run_online(trace, cm, window=window)
+                    rows.append({
+                        "trace": name, "n": n, "delta": delta,
+                        "window": window, "events": len(trace),
+                        "phases": len(online.phases),
+                        "online_s": online.total_time,
+                        "offline_s": offline.total_time,
+                        "cold_event_s": cold.total_time,
+                        "online_vs_offline": round(
+                            online.total_time / offline.total_time, 6),
+                        "cold_vs_online": round(
+                            cold.total_time / online.total_time, 6),
+                        "replans": stats.replans,
+                        "plan_reuses": stats.plan_reuses,
+                        "free_boundaries": online.free_boundaries,
+                        "paid_reconfigs": online.paid_reconfigs,
+                    })
+    return rows
+
+
+def bench_storm(ns=(16, 48)) -> list[dict]:
+    from repro.core import PAPER_DEFAULT
+    from repro.workloads import PlanService, build_request_pool, request_storm
+
+    rows = []
+    for n in ns:
+        pool = build_request_pool(n, window=STORM_WINDOW, seed=0)
+        service = PlanService()
+        cold = request_storm(service, pool, requests=STORM_REQUESTS, seed=1)
+        hot = request_storm(service, pool, requests=STORM_REQUESTS, seed=2)
+        rows.append({
+            "trace": "storm", "n": n, "delta": PAPER_DEFAULT.delta,
+            "window": STORM_WINDOW, "pool": len(pool),
+            "requests": STORM_REQUESTS,
+            "cold_hits": cold.hits, "cold_misses": cold.misses,
+            "hot_hits": hot.hits, "hot_misses": hot.misses,
+            "hot_hit_rate": round(hot.hit_rate, 6),
+            "cold_plans_per_sec": round(cold.plans_per_sec, 1),
+            "hot_plans_per_sec": round(hot.plans_per_sec, 1),
+            "unique_windows": cold.unique_windows,
+            "signature": hot.signature,
+        })
+    return rows
+
+
+def check_gates(rows: list[dict], max_regret: float, max_regret_greedy: float,
+                min_plans_per_sec: float) -> list[str]:
+    errors = []
+    for row in rows:
+        if row["trace"] == "storm":
+            key = f"storm n={row['n']}"
+            if row["hot_plans_per_sec"] < min_plans_per_sec:
+                errors.append(
+                    f"{key}: hot serving path {row['hot_plans_per_sec']} "
+                    f"plans/s < floor {min_plans_per_sec}")
+            if row["hot_hit_rate"] < 0.9:
+                errors.append(f"{key}: hot hit rate {row['hot_hit_rate']} "
+                              f"< 0.9 (LRU is not serving repeated windows)")
+            continue
+        key = (f"trace={row['trace']} n={row['n']} delta={row['delta']} "
+               f"W={row['window']}")
+        if row["online_s"] < row["offline_s"] * (1 - 1e-9):
+            errors.append(f"{key}: online {row['online_s']} beats the "
+                          f"offline DP {row['offline_s']} (offline sees "
+                          f"strictly more — the DP is broken)")
+        bound = max_regret if row["window"] >= 2 else max_regret_greedy
+        if row["online_s"] > row["offline_s"] * bound:
+            errors.append(f"{key}: online {row['online_s']} > "
+                          f"{bound}x offline {row['offline_s']}")
+        if row["delta"] >= 1e-3 and row["window"] >= 2 \
+                and row["cold_event_s"] <= row["online_s"] * (1 + 1e-9):
+            errors.append(f"{key}: online {row['online_s']} does not beat "
+                          f"cold per-event {row['cold_event_s']} at "
+                          f"ms-scale delta")
+    return errors
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small grid for CI (subset of the full grid so the "
+                         "committed baseline still covers every row)")
+    ap.add_argument("--max-regret", type=float, default=1.10,
+                    help="max online/offline total-time ratio allowed on "
+                         "W >= 2 grid rows (measured: W >= 2 is exact on "
+                         "every grid trace)")
+    ap.add_argument("--max-regret-greedy", type=float, default=1.25,
+                    help="max online/offline ratio for the no-lookahead W=1 "
+                         "ablation (measured worst case 1.18x on the moe/"
+                         "mixed traces at n=48, delta=1ms)")
+    ap.add_argument("--min-plans-per-sec", type=float, default=2000.0,
+                    help="floor for the cache-hit serving path (measured "
+                         ">= 50k/s locally; the floor only catches "
+                         "order-of-magnitude serving regressions)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        rows = bench_grid(trace_names=("decode", "mixed"), ns=(16,),
+                          deltas=(10e-6, 15e-3), windows=(2, 4))
+        rows += bench_storm(ns=(16,))
+    else:
+        rows = bench_grid()
+        rows += bench_storm()
+    print("trace,n,delta,window,online_s,offline_s,online_vs_offline,"
+          "cold_vs_online,replans/reuses")
+    for row in rows:
+        if row["trace"] == "storm":
+            print(f"storm,{row['n']},-,{row['window']},"
+                  f"hot={row['hot_plans_per_sec']}/s,"
+                  f"cold={row['cold_plans_per_sec']}/s,"
+                  f"hit_rate={row['hot_hit_rate']},-,-")
+            continue
+        print(f"{row['trace']},{row['n']},{row['delta']},{row['window']},"
+              f"{row['online_s']:.6e},{row['offline_s']:.6e},"
+              f"{row['online_vs_offline']},{row['cold_vs_online']},"
+              f"{row['replans']}/{row['plan_reuses']}")
+    errors = check_gates(rows, args.max_regret, args.max_regret_greedy,
+                         args.min_plans_per_sec)
+    if errors:
+        # gate first: never overwrite the committed baseline with violating data
+        for e in errors:
+            print(f"# FAIL: {e}", file=sys.stderr)
+        sys.exit(1)
+    if args.json:
+        out = {
+            "meta": {
+                "what": "online receding-horizon planning vs offline DP vs "
+                        "cold per-event over traces x n x delta x window, "
+                        "plus plan-serving storm throughput "
+                        "(repro.workloads.online_planner / serve, "
+                        "BENCH_online baseline)",
+                "max_regret": args.max_regret,
+                "max_regret_greedy": args.max_regret_greedy,
+                "min_plans_per_sec": args.min_plans_per_sec,
+            },
+            "rows": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"# wrote {len(rows)} rows to {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,9 +5,9 @@ Networks with Reusable Subrings" (Juerss & Schmid, 2026).
 """
 from . import baselines
 from .batchsim import (BatchFabricResult, BatchLane, BatchTraceResult,
-                       ScheduleTape, TraceLane, batch_completion_times,
-                       batch_run, batch_run_trace, clear_tape_caches,
-                       compile_tape)
+                       FabricSnapshot, ScheduleTape, TraceLane,
+                       batch_completion_times, batch_run, batch_run_trace,
+                       clear_tape_caches, compile_tape)
 from .bruck import (Collective, Step, a2a_steps, ag_steps, is_pow2, num_steps,
                     rs_steps, schedule_length, simulate_a2a_data,
                     simulate_ag_data, simulate_rs_data, step_counts, steps_for)
@@ -33,9 +33,9 @@ __all__ = [
     "Collective", "Step", "a2a_steps", "ag_steps", "is_pow2", "num_steps",
     "rs_steps", "schedule_length", "simulate_a2a_data", "simulate_ag_data",
     "simulate_rs_data", "step_counts", "steps_for",
-    "BatchFabricResult", "BatchLane", "BatchTraceResult", "ScheduleTape",
-    "TraceLane", "batch_completion_times", "batch_run", "batch_run_trace",
-    "clear_tape_caches", "compile_tape",
+    "BatchFabricResult", "BatchLane", "BatchTraceResult", "FabricSnapshot",
+    "ScheduleTape", "TraceLane", "batch_completion_times", "batch_run",
+    "batch_run_trace", "clear_tape_caches", "compile_tape",
     "OCS_TECHNOLOGIES", "PAPER_DEFAULT", "TPU_V5E", "CostModel", "gbps",
     "ocs_ports", "ocs_preset",
     "Plan", "Schedule", "SegmentTables", "ag_transmission_optimal",

@@ -81,6 +81,57 @@ def validate_phases(phases) -> tuple[tuple[Schedule, float], ...]:
     return phases
 
 
+@dataclasses.dataclass(frozen=True)
+class FabricSnapshot:
+    """Resumable fabric state at a collective boundary of a trace.
+
+    Captured after the last phase of a (prefix) trace has fully drained
+    (`FabricSim.run_trace(..., capture_state=True)` or
+    `BatchTraceResult.snapshot`) and accepted back as the ``initial`` state by
+    both trace engines.  The resumed run continues on the same absolute
+    clock, so playing phases [0, k) and then resuming [k, P) from the
+    snapshot reproduces the single full run: the sparse engine's per-port
+    segment gate means prefix timings never depend on suffix traffic, and the
+    boundary swap into the resumed phases is charged on top of ``port_free``
+    exactly as the full run charges it.  This is what lets the online planner
+    re-plan a trace suffix from the committed prefix without replaying it.
+
+    link_offset  : circuit every egress port is left configured at (uniform —
+                   ring traffic drains every port through the final segment).
+    node_ready   : per node, the time its final prefix receive completed; the
+                   resumed phase injects at ``node_ready[u] + alpha_s``.
+    port_free    : per port, busy-until time of its last prefix service.
+    chunks_moved / reconfigs_paid / delta_stall carry the prefix accounting so
+    resumed results report trace-cumulative totals.
+    """
+
+    n: int
+    link_offset: int
+    node_ready: tuple[float, ...]
+    port_free: tuple[float, ...]
+    chunks_moved: int = 0
+    reconfigs_paid: int = 0
+    delta_stall: float = 0.0
+
+    def __post_init__(self):
+        if self.n < 2:
+            raise ValueError(f"need at least 2 nodes, got n={self.n}")
+        object.__setattr__(self, "node_ready",
+                           tuple(float(t) for t in self.node_ready))
+        object.__setattr__(self, "port_free",
+                           tuple(float(t) for t in self.port_free))
+        for name in ("node_ready", "port_free"):
+            v = getattr(self, name)
+            if len(v) != self.n:
+                raise ValueError(
+                    f"{name} has length {len(v)} != n={self.n}")
+
+    @property
+    def clock(self) -> float:
+        """Prefix completion time (the last node's final receive)."""
+        return max(self.node_ready)
+
+
 # --- Tape compilation ---------------------------------------------------------
 
 
@@ -197,6 +248,10 @@ class TraceLane:
 
     phases : (schedule, m_bytes) per collective, played back-to-back on one
              fabric with port-state carryover (see `FabricSim.run_trace`).
+    initial: optional `FabricSnapshot` to resume from — the lane's ports
+             start at the snapshot's busy-until times and configured circuit
+             instead of an idle fabric, and results report trace-cumulative
+             accounting.
     Other knobs are per-lane exactly as in `BatchLane`.
     """
 
@@ -205,10 +260,15 @@ class TraceLane:
     overlap: float = 0.0
     link_speed: tuple[float, ...] | None = None
     payload_scale: tuple[float, ...] | None = None
+    initial: FabricSnapshot | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "phases", validate_phases(self.phases))
         n = self.phases[0][0].n
+        if self.initial is not None and self.initial.n != n:
+            raise ValueError(
+                f"initial snapshot is for n={self.initial.n}, phases have "
+                f"n={n}")
         if not 0.0 <= self.overlap <= 1.0:
             raise ValueError(f"overlap must be in [0, 1], got {self.overlap}")
         if self.delta is not None and self.delta < 0:
@@ -283,23 +343,35 @@ def _knob_arrays(lanes, cm: CostModel, n: int):
 
 
 def _play(*, n: int, C: int, cm: CostModel, nb_step, g_step, hops, boundary,
-          changed, delta_eff, speed, scale):
+          changed, delta_eff, speed, scale, F0=None, ready0=None,
+          changed0=None):
     """Canonical-order tape playback over [B, S] step arrays.
 
     ``nb_step[b, k]`` is lane b's per-node payload of sub-step k (before any
     destination scaling); ``boundary`` marks steps that open a new segment
     (the scalar loop's per-port segment gate resets there) and ``changed``
     marks steps whose opening boundary physically rewires circuits (those
-    charge ``delta_eff``).  Returns (node_done, step_done, ok) where ``ok``
-    flags the lanes whose heap execution provably coincides with this
-    canonical order (see module docstring).
+    charge ``delta_eff``).  ``F0`` / ``ready0`` / ``changed0`` resume lanes
+    from a `FabricSnapshot`: per-port busy-until times, per-node final
+    receive times of the committed prefix (step 0 injects at
+    ``ready0 + alpha_s``), and the per-lane flag for an entry boundary that
+    rewires circuits (charged like any segment boundary).  Returns
+    (node_done, step_done, ok, port_free) where ``ok`` flags the lanes whose
+    heap execution provably coincides with this canonical order (see module
+    docstring) and ``port_free`` is the final per-port busy-until state.
     """
     B, S = nb_step.shape
     alpha_s, alpha_h, beta = cm.alpha_s, cm.alpha_h, cm.beta
     ports = np.arange(n, dtype=np.int64)[None, :]           # [1, n]
 
-    F = np.zeros((B, n))              # port busy-until
-    inj = np.full((B, n), alpha_s)    # injection times of the current step
+    # port busy-until / injection times of the current step, warm-started
+    # from the snapshot arrays in the same float-op order as the scalar
+    # restore (free = port_free [+ delta_eff]; t_inj = node_ready + alpha_s)
+    F = np.zeros((B, n)) if F0 is None else np.array(F0, dtype=float)
+    if changed0 is not None:
+        F = F + np.where(changed0, delta_eff, 0.0)[:, None]
+    inj = (np.full((B, n), alpha_s) if ready0 is None
+           else np.asarray(ready0, dtype=float) + alpha_s)
     step_done = np.zeros((B, S))
     ok = np.ones(B, dtype=bool)       # canonical-order check per lane
     seg_max_arr = np.full((B, n), -np.inf)  # latest arrival this segment
@@ -361,7 +433,7 @@ def _play(*, n: int, C: int, cm: CostModel, nb_step, g_step, hops, boundary,
         seg_max_arr = np.where(reset, last_arr,
                                np.maximum(seg_max_arr, last_arr))
         step_done[:, k] = recv.max(axis=1)
-    return recv, step_done, ok
+    return recv, step_done, ok, F
 
 
 def batch_run(lanes: Sequence[BatchLane], cm: CostModel, *,
@@ -398,7 +470,7 @@ def batch_run(lanes: Sequence[BatchLane], cm: CostModel, *,
     changed = np.stack([t.arrays["changed_pay"] for t in tapes])
     nb_step = (m[:, None] * counts) / n   # same float-op order as the scalar loop
 
-    node_done, step_done, ok = _play(
+    node_done, step_done, ok, _ = _play(
         n=n, C=C, cm=cm, nb_step=nb_step, g_step=g_step, hops=hops,
         boundary=boundary, changed=changed, delta_eff=delta_eff,
         speed=speed, scale=scale)
@@ -451,10 +523,23 @@ class BatchTraceResult:
     reconfigs_paid: np.ndarray  # [B] int
     delta_stall: np.ndarray     # [B]
     fast_path: np.ndarray       # [B] bool
+    port_free: np.ndarray       # [B, n] final per-port busy-until
     lanes: tuple[TraceLane, ...]
 
     def __len__(self) -> int:
         return len(self.lanes)
+
+    def snapshot(self, i: int) -> FabricSnapshot:
+        """Lane i's resumable end-of-trace fabric state."""
+        lane = self.lanes[i]
+        return FabricSnapshot(
+            n=lane.n,
+            link_offset=lane.phases[-1][0].link_offsets()[-1],
+            node_ready=tuple(float(t) for t in self.node_done[i]),
+            port_free=tuple(float(t) for t in self.port_free[i]),
+            chunks_moved=int(self.chunks_moved[i]),
+            reconfigs_paid=int(self.reconfigs_paid[i]),
+            delta_stall=float(self.delta_stall[i]))
 
     def result(self, i: int):
         """Lane i as a scalar-compatible `TraceFabricResult` (mode='batched')."""
@@ -524,16 +609,39 @@ def batch_run_trace(lanes: Sequence[TraceLane], cm: CostModel, *,
         boundary[:, k] = True
         changed[:, k] = g_step[:, k] != g_step[:, k - 1]
 
-    node_done, step_done, ok = _play(
+    # resumed lanes start from their snapshot's port state; entering the
+    # first phase is then a boundary like any other (rewire iff the resumed
+    # phase's initial offset differs from the snapshot's)
+    F0 = ready0 = changed0 = None
+    init_chunks = np.zeros(B, dtype=np.int64)
+    init_paid = np.zeros(B, dtype=np.int64)
+    init_stall = np.zeros(B)
+    if any(lane.initial is not None for lane in lanes):
+        F0, ready0 = np.zeros((B, n)), np.zeros((B, n))
+        changed0 = np.zeros(B, dtype=bool)
+        for b, lane in enumerate(lanes):
+            snap = lane.initial
+            if snap is None:
+                continue
+            F0[b] = snap.port_free
+            ready0[b] = snap.node_ready
+            changed0[b] = int(g_step[b, 0]) != snap.link_offset
+            init_chunks[b] = snap.chunks_moved
+            init_paid[b] = snap.reconfigs_paid
+            init_stall[b] = snap.delta_stall
+
+    node_done, step_done, ok, port_free = _play(
         n=n, C=C, cm=cm, nb_step=nb_step, g_step=g_step, hops=hops,
         boundary=boundary, changed=changed, delta_eff=delta_eff,
-        speed=speed, scale=scale)
+        speed=speed, scale=scale, F0=F0, ready0=ready0, changed0=changed0)
 
     completion = node_done.max(axis=1)
     phase_done = step_done[:, phase_last]
-    reconfigs_paid = (n * changed.sum(axis=1)).astype(np.int64)
-    delta_stall = reconfigs_paid * delta_eff
-    chunks_moved = (n * C * hops.sum(axis=1)).astype(np.int64)
+    paid_run = n * (changed.sum(axis=1)
+                    + (changed0 if changed0 is not None else 0))
+    reconfigs_paid = (paid_run + init_paid).astype(np.int64)
+    delta_stall = paid_run * delta_eff + init_stall
+    chunks_moved = (n * C * hops.sum(axis=1) + init_chunks).astype(np.int64)
 
     if not ok.all():
         if not allow_fallback:
@@ -550,7 +658,8 @@ def batch_run_trace(lanes: Sequence[TraceLane], cm: CostModel, *,
                             if lane.link_speed is not None else None),
                 payload_scale=(list(lane.payload_scale)
                                if lane.payload_scale is not None else None))
-            res = sim.run_trace(lane.phases, cm.replace(delta=float(delta[b])))
+            res = sim.run_trace(lane.phases, cm.replace(delta=float(delta[b])),
+                                initial=lane.initial, capture_state=True)
             completion[b] = res.completion
             node_done[b] = res.node_done
             step_done[b] = res.step_done
@@ -558,12 +667,13 @@ def batch_run_trace(lanes: Sequence[TraceLane], cm: CostModel, *,
             chunks_moved[b] = res.chunks_moved
             reconfigs_paid[b] = res.reconfigs_paid
             delta_stall[b] = res.delta_stall
+            port_free[b] = res.final_state.port_free
 
     return BatchTraceResult(
         completion=completion, node_done=node_done, step_done=step_done,
         phase_done=phase_done, chunks_moved=chunks_moved,
         reconfigs_paid=reconfigs_paid, delta_stall=delta_stall,
-        fast_path=ok, lanes=lanes)
+        fast_path=ok, port_free=port_free, lanes=lanes)
 
 
 def batch_completion_times(schedules: Sequence[Schedule], m: float,

@@ -53,8 +53,9 @@ import dataclasses
 import heapq
 from typing import Sequence
 
-from .batchsim import (BatchLane, TraceLane, batch_run, batch_run_trace,
-                       compile_tape, validate_phases, validate_rates)
+from .batchsim import (BatchLane, FabricSnapshot, TraceLane, batch_run,
+                       batch_run_trace, compile_tape, validate_phases,
+                       validate_rates)
 from .cost_model import CostModel
 from .schedules import Schedule, changed_links
 
@@ -116,6 +117,9 @@ class TraceFabricResult:
     reconfigs_paid   : (port, boundary) swaps that paid a blocking delta,
                        across all phases *and* phase boundaries.
     delta_stall      : total port-blocking reconfiguration time, seconds.
+    final_state      : resumable end-of-trace fabric state (populated only
+                       when `run_trace` is called with ``capture_state=True``;
+                       feed it back as ``initial`` to continue the trace).
     """
 
     completion: float
@@ -127,6 +131,7 @@ class TraceFabricResult:
     boundary_changed: tuple[int, ...]
     reconfigs_paid: int
     delta_stall: float
+    final_state: FabricSnapshot | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,6 +144,7 @@ class _EngineOut:
     chunks_moved: int
     reconfigs_paid: int
     delta_stall: float
+    port_free: tuple[float, ...]
 
 
 def trace_boundary_changed(schedules: Sequence[Schedule]) -> tuple[int, ...]:
@@ -208,7 +214,8 @@ class FabricSim:
         return self._run_sparse(schedule, m, cm)
 
     def run_trace(self, phases: Sequence[tuple[Schedule, float]],
-                  cm: CostModel) -> TraceFabricResult:
+                  cm: CostModel, *, initial: FabricSnapshot | None = None,
+                  capture_state: bool = False) -> TraceFabricResult:
         """Play back-to-back collectives on one fabric without resetting ports.
 
         ``phases`` is a sequence of (schedule, m_bytes) pairs sharing one
@@ -222,31 +229,64 @@ class FabricSim:
         legacy sum-of-independent-collectives number bit-for-bit (each phase
         restarts from a pre-established topology and no boundary is charged),
         which is the cold-fabric execution baseline of benchmarks/trace_bench.
+
+        ``initial`` resumes mid-trace from a `FabricSnapshot` (ports start at
+        the snapshot's busy-until times and configured circuit; entering the
+        first phase is a carryover boundary like any other) and
+        ``capture_state=True`` records the resumable end state in
+        ``final_state`` — together they let a trace be split at any
+        collective boundary and replayed in pieces, which is what the online
+        planner's re-plan-from-committed-prefix relies on.  Both require
+        sparse/batched mode (full-pause is the stateless legacy baseline).
         """
         phases = _validate_phases(phases)
         if self.mode == "full-pause":
+            if initial is not None or capture_state:
+                raise ValueError(
+                    "snapshot/restore requires mode='sparse' or 'batched': "
+                    "full-pause is the stateless legacy baseline (every "
+                    "collective restarts from a pre-established topology)")
             return self._trace_full_pause(phases, cm)
+        if initial is not None and initial.n != phases[0][0].n:
+            raise ValueError(
+                f"initial snapshot is for n={initial.n}, phases have "
+                f"n={phases[0][0].n}")
         if self.mode == "batched":
             lane = TraceLane(
                 phases=phases, overlap=self.overlap,
                 link_speed=(tuple(self.link_speed)
                             if self.link_speed is not None else None),
                 payload_scale=(tuple(self.payload_scale)
-                               if self.payload_scale is not None else None))
-            return batch_run_trace(
-                [lane], cm, chunks_per_msg=self.chunks_per_msg).result(0)
-        out = self._sparse_engine(phases, cm)
+                               if self.payload_scale is not None else None),
+                initial=initial)
+            batch = batch_run_trace(
+                [lane], cm, chunks_per_msg=self.chunks_per_msg)
+            res = batch.result(0)
+            if capture_state:
+                res = dataclasses.replace(res, final_state=batch.snapshot(0))
+            return res
+        out = self._sparse_engine(phases, cm, initial=initial)
         last, k = [], 0
         for sched, _ in phases:
             k += compile_tape(sched).S
             last.append(k - 1)
+        final_state = None
+        if capture_state:
+            final_state = FabricSnapshot(
+                n=phases[0][0].n,
+                link_offset=phases[-1][0].link_offsets()[-1],
+                node_ready=out.node_done, port_free=out.port_free,
+                chunks_moved=out.chunks_moved,
+                reconfigs_paid=out.reconfigs_paid,
+                delta_stall=out.delta_stall)
         return TraceFabricResult(
             completion=out.completion, mode=self.mode,
             phase_done=tuple(out.step_done[i] for i in last),
             step_done=out.step_done,
             node_done=out.node_done, chunks_moved=out.chunks_moved,
             boundary_changed=trace_boundary_changed([s for s, _ in phases]),
-            reconfigs_paid=out.reconfigs_paid, delta_stall=out.delta_stall)
+            reconfigs_paid=out.reconfigs_paid, delta_stall=out.delta_stall,
+            final_state=final_state)
 
     def _trace_full_pause(self, phases, cm: CostModel) -> TraceFabricResult:
         """Sum of independent full-pause runs, bit-for-bit (the baseline)."""
@@ -340,12 +380,16 @@ class FabricSim:
             reconfigs_paid=out.reconfigs_paid, delta_stall=out.delta_stall)
 
     def _sparse_engine(self, phases: Sequence[tuple[Schedule, float]],
-                       cm: CostModel) -> _EngineOut:
+                       cm: CostModel,
+                       initial: FabricSnapshot | None = None) -> _EngineOut:
         """Asynchronous per-link event loop over one or more concatenated
         phases.  A single phase is exactly the pre-trace `run` semantics; for
         a trace the phases' segment lists are concatenated, so a collective
         boundary behaves like any other segment boundary (ports drain, then
-        swap only if the next used segment needs a different circuit)."""
+        swap only if the next used segment needs a different circuit).  With
+        ``initial`` the ports resume from the snapshot's busy-until times and
+        configured circuit, injections chain off the snapshot's per-node
+        ready times, and the accounting counters continue cumulatively."""
         n = phases[0][0].n
         tapes = [compile_tape(sched) for sched, _ in phases]
         offsets: list[int] = []
@@ -383,7 +427,7 @@ class FabricSim:
         # per-segment count is just C * (total hops in the segment).
         expected = [[C * sh for sh in seg_hops] for _ in range(n)]
 
-        # per-port state
+        # per-port state (warm-started from the snapshot when resuming)
         cfg_seg = [0] * n            # segment whose traffic the port serves
         cfg_g = [seg_g[0]] * n       # circuit offset physically configured
         free = [0.0] * n             # port busy-until (service or swap)
@@ -396,9 +440,30 @@ class FabricSim:
         chunks_moved = 0
         reconfigs_paid = 0
         delta_stall = 0.0
+        if initial is not None:
+            free = list(initial.port_free)
+            chunks_moved = initial.chunks_moved
+            reconfigs_paid = initial.reconfigs_paid
+            delta_stall = initial.delta_stall
+            if seg_g[0] != initial.link_offset:
+                # entering the resumed phases is a carryover boundary like
+                # any other: every port carries first-segment traffic, so
+                # every port swaps off the inherited circuit
+                for port in range(n):
+                    free[port] += delta_eff
+                    delta_stall += delta_eff
+                    reconfigs_paid += 1
 
         heap: list[tuple] = []  # (t, seq, is_free, port, step, src, chunk, hop)
         seq = 0
+        if initial is not None:
+            # inherited busy-until times have no in-run completion event, so
+            # seed one free event per port: a chunk arriving while the port
+            # is still draining snapshot-time work (or the entry swap) must
+            # be re-triggered, not stranded in pend
+            for port in range(n):
+                heapq.heappush(heap, (free[port], seq, 1, port, 0, 0, 0, 0))
+                seq += 1
 
         def advance(port: int) -> None:
             """Move the port past fully-served segments, paying delta only
@@ -458,8 +523,10 @@ class FabricSim:
                     seq += 1
 
         for u in range(n):
+            t0 = (alpha_s if initial is None
+                  else initial.node_ready[u] + alpha_s)
             for c in range(C):
-                heapq.heappush(heap, (alpha_s, seq, 0, u, 0, u, c, 0))
+                heapq.heappush(heap, (t0, seq, 0, u, 0, u, c, 0))
                 seq += 1
         for port in range(n):
             advance(port)  # fast-forward ports with no early-segment traffic
@@ -474,7 +541,8 @@ class FabricSim:
         return _EngineOut(
             completion=max(node_done), step_done=tuple(step_done),
             node_done=node_done, chunks_moved=chunks_moved,
-            reconfigs_paid=reconfigs_paid, delta_stall=delta_stall)
+            reconfigs_paid=reconfigs_paid, delta_stall=delta_stall,
+            port_free=tuple(free))
 
 
 def simulate_fabric(schedule: Schedule, m: float, cm: CostModel,

@@ -69,6 +69,16 @@ class PlanRequest:
                     distance floor during evaluation (analytic fabrics only;
                     rejected for 'ocs-sim', whose event engine models a
                     full-port OCS).
+    init_g        : link offset the fabric was left configured at by a
+                    preceding collective (windowed / carryover requests, e.g.
+                    the online trace planner).  Candidates are charged the
+                    sparse entry-boundary cost of swapping from ``init_g`` to
+                    their first link offset, in both score and
+                    predicted_time; for the composite 'ar' the entry charge
+                    applies to the chosen RS schedule at the composite level.
+                    Part of the request's canonical JSON, so the plan cache
+                    never serves a plan computed under a different inherited
+                    fabric state (requires a reconfigurable fabric).
     """
 
     kind: PlanKind
@@ -84,6 +94,7 @@ class PlanRequest:
     max_R: int | None = None
     delta_budget: float | None = None
     ports: int | None = None
+    init_g: int | None = None
 
     def __post_init__(self):
         if self.kind not in PLAN_KINDS:
@@ -120,6 +131,15 @@ class PlanRequest:
             raise ValueError(f"delta_budget must be >= 0, got {self.delta_budget}")
         if self.ports is not None and self.ports < 1:
             raise ValueError(f"ports must be >= 1, got {self.ports}")
+        if self.init_g is not None:
+            if self.fabric == "static":
+                raise ValueError(
+                    "init_g (inherited fabric state) requires a "
+                    "reconfigurable fabric; a static fabric has no circuits "
+                    "to carry over")
+            if self.init_g < 1:
+                raise ValueError(
+                    f"init_g must be a positive link offset, got {self.init_g}")
         if self.strategies is not None and not isinstance(self.strategies, tuple):
             object.__setattr__(self, "strategies", tuple(self.strategies))
         object.__setattr__(self, "m_bytes", float(self.m_bytes))
@@ -144,7 +164,7 @@ class PlanRequest:
             "paper_faithful": self.paper_faithful,
             "strategies": list(self.strategies) if self.strategies is not None else None,
             "max_R": self.max_R, "delta_budget": self.delta_budget,
-            "ports": self.ports,
+            "ports": self.ports, "init_g": self.init_g,
         }
 
     @staticmethod
@@ -159,7 +179,7 @@ class PlanRequest:
             paper_faithful=d.get("paper_faithful", False),
             strategies=tuple(strategies) if strategies is not None else None,
             max_R=d.get("max_R"), delta_budget=d.get("delta_budget"),
-            ports=d.get("ports"),
+            ports=d.get("ports"), init_g=d.get("init_g"),
         )
 
 

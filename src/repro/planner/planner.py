@@ -47,7 +47,7 @@ from typing import NamedTuple, Sequence
 
 from repro.core import baselines
 from repro.core.batchsim import batch_completion_times
-from repro.core.schedules import Schedule, static_schedule
+from repro.core.schedules import Schedule, changed_links, static_schedule
 from repro.core.simulator import (TimeBreakdown, allreduce_time,
                                   allreduce_time_overlap, collective_time,
                                   collective_time_overlap)
@@ -100,7 +100,13 @@ class Planner:
 
     @staticmethod
     def cache_key(req: PlanRequest) -> str:
-        """Canonical JSON identity of a request (the plan-cache key)."""
+        """Canonical JSON identity of a request (the plan-cache key).
+
+        Includes the inherited fabric state (``init_g``): two windowed
+        requests that are otherwise identical but enter from different link
+        configurations are different planning problems and must never share
+        a cache entry.
+        """
         return json.dumps(req.to_dict(), sort_keys=True)
 
     def cache_info(self) -> PlanCacheInfo:
@@ -169,6 +175,18 @@ class Planner:
         return collective_time(cand.schedule, req.m_bytes, req.cost_model,
                                ports=req.ports)
 
+    @staticmethod
+    def _entry_cost(req: PlanRequest, sched: Schedule | None) -> float:
+        """Sparse boundary cost of entering ``sched`` from the inherited
+        fabric state (0 when the request carries no ``init_g``, and for the
+        ring implementation, whose fixed topology the carryover model does
+        not cover)."""
+        if req.init_g is None or sched is None:
+            return 0.0
+        return req.cost_model.delta_sparse(
+            changed_links(req.n, req.init_g, sched.link_offsets()[0]),
+            req.overlap)
+
     def _sim_scores(self, req: PlanRequest,
                     cands: list[Candidate]) -> dict[int, float]:
         """Batched event scores for every schedule candidate (ocs-sim)."""
@@ -203,11 +221,12 @@ class Planner:
         ranked: list[RankedAlternative] = []
         for i, cand in enumerate(cands):
             bd = self._evaluate(req, req.kind, cand)
+            entry = self._entry_cost(req, cand.schedule)
             if i in sim_scores:
-                score = predicted = sim_scores[i]
+                score = predicted = sim_scores[i] + entry
             else:
-                score = _objective_score(bd, req.objective)
-                predicted = bd.total
+                score = _objective_score(bd, req.objective) + entry
+                predicted = bd.total + entry
             sched = cand.schedule
             ranked.append(RankedAlternative(
                 strategy=cand.name, impl=cand.impl, predicted_time=predicted,
@@ -266,9 +285,11 @@ class Planner:
         """
 
         def sub(kind: str, cap: int | None) -> PlanResult:
+            # init_g is stripped: the entry boundary is charged once at the
+            # composite level (on the chosen RS schedule), not per phase
             return self._plan_collective(dataclasses.replace(
                 req, kind=kind, strategies=sched_names,
-                max_R=cap, delta_budget=None))
+                max_R=cap, delta_budget=None, init_g=None))
 
         total_cap = req.effective_max_R()
         if total_cap is None:
@@ -307,11 +328,13 @@ class Planner:
                 name = "bruck[static]"
             assert rs_sched is not None and ag_sched is not None
             bd = self._allreduce_bd(req, rs_sched, ag_sched)
+            entry = self._entry_cost(req, rs_sched)
             if req.fabric == "ocs-sim":
-                score = predicted = self._allreduce_score(req, rs_res, ag_res, bd)
+                score = predicted = (
+                    self._allreduce_score(req, rs_res, ag_res, bd) + entry)
             else:
-                score = _objective_score(bd, req.objective)
-                predicted = bd.total
+                score = _objective_score(bd, req.objective) + entry
+                predicted = bd.total + entry
             evaluated.append((name, "bruck", score, predicted, bd,
                               rs_sched, ag_sched))
         if want_ring:

@@ -19,12 +19,28 @@ reuse argument one level:
                       and per-collective R is chosen jointly under a
                       trace-wide delta budget.
 
+  - `online_planner` — `OnlinePlanner` plans the same stream *online*: a
+                      receding-horizon window of W upcoming events, the
+                      joint DP warm-started at the committed fabric state,
+                      commit-one-advance, and re-plan on mispredictions
+                      (W = stream length recovers `plan_trace` exactly);
+  - `serve`         — `PlanService` answers windowed plan requests through
+                      a serving LRU (carryover state in the key) with
+                      `request_storm` measuring plans/sec and hit rate.
+
 Fabric execution of a planned trace lives in `core.fabricsim.FabricSim
-.run_trace` / `core.batchsim.batch_run_trace`; benchmarks/trace_bench.py
-records carryover vs cold-fabric vs static on mixed traces.
+.run_trace` / `core.batchsim.batch_run_trace` (now with mid-trace
+snapshot/restore via `core.FabricSnapshot`); benchmarks/trace_bench.py
+records carryover vs cold-fabric vs static on mixed traces and
+benchmarks/online_bench.py the online-vs-offline regret and serving
+throughput.
 """
-from .trace_planner import (PhasePlan, TRACE_PLAN_MODES, TracePlan,
-                            plan_trace)
+from .online_planner import OnlinePlanner, OnlineStats, run_online
+from .serve import (PlanService, ServeRequest, ServedPlan, StormResult,
+                    build_request_pool, request_storm)
+from .trace_planner import (PhaseCandidate, PhasePlan, TRACE_PLAN_MODES,
+                            TracePlan, phase_candidates, plan_trace,
+                            window_dp)
 from .traces import (CollectiveEvent, Trace, approx_param_bytes,
                      concat_traces, decode_ag_trace, mixed_trace,
                      moe_a2a_trace, train_step_trace)
@@ -32,5 +48,9 @@ from .traces import (CollectiveEvent, Trace, approx_param_bytes,
 __all__ = [
     "CollectiveEvent", "Trace", "approx_param_bytes", "concat_traces",
     "decode_ag_trace", "mixed_trace", "moe_a2a_trace", "train_step_trace",
-    "PhasePlan", "TRACE_PLAN_MODES", "TracePlan", "plan_trace",
+    "PhaseCandidate", "PhasePlan", "TRACE_PLAN_MODES", "TracePlan",
+    "phase_candidates", "plan_trace", "window_dp",
+    "OnlinePlanner", "OnlineStats", "run_online",
+    "PlanService", "ServeRequest", "ServedPlan", "StormResult",
+    "build_request_pool", "request_storm",
 ]

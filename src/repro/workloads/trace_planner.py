@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+from typing import Sequence
 
 from repro.core.cost_model import CostModel, PAPER_DEFAULT
 from repro.core.schedules import Schedule, changed_links, static_schedule
@@ -146,8 +147,15 @@ class TracePlan:
 
 
 @dataclasses.dataclass(frozen=True)
-class _Cand:
-    """One evaluable schedule for one phase of the joint DP."""
+class PhaseCandidate:
+    """One evaluable schedule for one phase of the joint DP.
+
+    time is the phase's modeled completion (boundary costs excluded); paid
+    counts its intra-collective circuit-rewiring boundaries; g_first / g_last
+    are the link offsets the schedule starts and ends on — the DP charges
+    `CostModel.delta_sparse(changed_links(n, g, g_first), overlap)` to enter
+    the candidate from a fabric left at offset g.
+    """
 
     strategy: str
     schedule: Schedule
@@ -164,10 +172,14 @@ def _phase_time(sched: Schedule, m: float, cm: CostModel, fabric: str,
     return collective_time(sched, m, cm).total
 
 
-def _candidates(kind: str, n: int, r: int, m: float, cm: CostModel,
-                fabric: str, overlap: float, planner) -> list[_Cand]:
+def phase_candidates(kind: str, n: int, r: int, m: float, cm: CostModel,
+                     fabric: str, overlap: float,
+                     planner) -> list[PhaseCandidate]:
     """Full all-R candidate table of one phase, from the planner's ranked
-    alternatives (ring-impl rows carry no schedule and are skipped)."""
+    alternatives (ring-impl rows carry no schedule and are skipped).  Goes
+    through the planner's plan cache, so repeated (kind, m) phases — and the
+    online planner's re-plans over a shifted window — pay for the table once.
+    """
     from repro.planner import PlanRequest  # deferred: planner imports core
 
     res = planner.plan(PlanRequest(kind=kind, n=n, m_bytes=m, cost_model=cm,
@@ -178,17 +190,84 @@ def _candidates(kind: str, n: int, r: int, m: float, cm: CostModel,
             continue
         sched = Schedule(kind=kind, n=n, x=tuple(alt.x), r=r)
         offs = sched.link_offsets()
-        out.append(_Cand(
+        out.append(PhaseCandidate(
             strategy=alt.strategy, schedule=sched, time=alt.predicted_time,
             paid=sum(1 for c in sched.reconfig_changed_links() if c),
             g_first=offs[0], g_last=offs[-1]))
     return out
 
 
-def _phase_plan(kind: str, m: float, tag: str, cand: _Cand) -> PhasePlan:
+def _phase_plan(kind: str, m: float, tag: str,
+                cand: PhaseCandidate) -> PhasePlan:
     return PhasePlan(kind=kind, m_bytes=m, tag=tag, strategy=cand.strategy,
                      schedule=cand.schedule, time=cand.time,
                      paid_reconfigs=cand.paid)
+
+
+def window_dp(n: int, cand_lists: Sequence[Sequence[PhaseCandidate]],
+              cm: CostModel, *, overlap: float = 0.0,
+              init_g: int | None = None, init_spent: int = 0,
+              cap: int | None = None,
+              label: str = "window") -> list[PhaseCandidate]:
+    """Joint (link offset, reconfigs spent) DP over a window of phases.
+
+    The carryover DP of `plan_trace`, factored out so the receding-horizon
+    online planner can warm-start it mid-trace: ``init_g`` is the link offset
+    the fabric was left at by already-committed collectives (None = fresh
+    fabric, no entry boundary), ``init_spent`` the paid intra-collective
+    reconfigurations already committed against the trace-wide cap, and
+    ``cap`` the absolute cap itself (None = unbounded).  Entering the first
+    window phase from ``init_g`` charges the sparse changed-circuit diff
+    exactly like any later boundary.  Returns the chosen candidate per phase
+    (ties broken identically to `plan_trace`: strict improvement only, final
+    state broken by smallest (total, key)).
+    """
+    if not cand_lists:
+        raise ValueError("window_dp needs at least one phase")
+    # state: (final link offset, paid intra reconfigs so far) ->
+    #        (best total, predecessor state, winning candidate)
+    layers: list[dict] = []
+    cur: dict = {}
+    for cand in cand_lists[0]:
+        spent = init_spent + cand.paid
+        if cap is not None and spent > cap:
+            continue
+        t = cand.time
+        if init_g is not None:
+            t = cm.delta_sparse(
+                changed_links(n, init_g, cand.g_first), overlap) + cand.time
+        key = (cand.g_last, spent)
+        if key not in cur or t < cur[key][0]:
+            cur[key] = (t, None, cand)
+    for p in range(1, len(cand_lists)):
+        layers.append(cur)
+        nxt: dict = {}
+        for (g, spent), (total, _, _) in cur.items():
+            for cand in cand_lists[p]:
+                spent2 = spent + cand.paid
+                if cap is not None and spent2 > cap:
+                    continue
+                t2 = (total + cm.delta_sparse(
+                    changed_links(n, g, cand.g_first), overlap) + cand.time)
+                key = (cand.g_last, spent2)
+                if key not in nxt or t2 < nxt[key][0]:
+                    nxt[key] = (t2, (g, spent), cand)
+        cur = nxt
+    if not cur:
+        raise ValueError(
+            f"reconfiguration cap {cap} is infeasible for the "
+            f"{len(cand_lists)}-phase {label} with {init_spent} already "
+            f"spent (even R=0 schedules do not fit)")
+
+    best_key = min(cur, key=lambda k: (cur[k][0], k))
+    chosen: list[PhaseCandidate] = []
+    key = best_key
+    for layer in reversed(layers + [cur]):
+        total, prev_key, cand = layer[key]
+        chosen.append(cand)
+        key = prev_key
+    chosen.reverse()
+    return chosen
 
 
 def _finish(trace: Trace, mode: str, fabric: str, overlap: float,
@@ -288,47 +367,10 @@ def plan_trace(trace: Trace, cm: CostModel = PAPER_DEFAULT, *,
     cap: int | None = None
     if delta_budget is not None and unit > 0:
         cap = int(delta_budget / unit + 1e-12)
-    cand_lists = [_candidates(kind, n, r, m, cm, fabric, overlap, planner)
+    cand_lists = [phase_candidates(kind, n, r, m, cm, fabric, overlap, planner)
                   for kind, m, _ in phases]
-
-    # state: (final link offset, paid intra reconfigs so far) ->
-    #        (best total, predecessor state, winning candidate)
-    layers: list[dict] = []
-    cur: dict = {}
-    for cand in cand_lists[0]:
-        if cap is not None and cand.paid > cap:
-            continue
-        key = (cand.g_last, cand.paid)
-        if key not in cur or cand.time < cur[key][0]:
-            cur[key] = (cand.time, None, cand)
-    for p in range(1, len(phases)):
-        layers.append(cur)
-        nxt: dict = {}
-        for (g, spent), (total, _, _) in cur.items():
-            for cand in cand_lists[p]:
-                spent2 = spent + cand.paid
-                if cap is not None and spent2 > cap:
-                    continue
-                t2 = (total + cm.delta_sparse(
-                    changed_links(n, g, cand.g_first), overlap) + cand.time)
-                key = (cand.g_last, spent2)
-                if key not in nxt or t2 < nxt[key][0]:
-                    nxt[key] = (t2, (g, spent), cand)
-        cur = nxt
-    if not cur:
-        raise ValueError(
-            f"delta_budget={delta_budget} is infeasible for "
-            f"{len(phases)}-phase trace {trace.name!r} (even R=0 schedules "
-            f"do not fit)")
-
-    best_key = min(cur, key=lambda k: (cur[k][0], k))
-    chosen: list[_Cand] = []
-    key = best_key
-    for layer in reversed(layers + [cur]):
-        total, prev_key, cand = layer[key]
-        chosen.append(cand)
-        key = prev_key
-    chosen.reverse()
+    chosen = window_dp(n, cand_lists, cm, overlap=overlap, cap=cap,
+                       label=f"trace {trace.name!r}")
     plans = [_phase_plan(kind, m, tag, cand)
              for (kind, m, tag), cand in zip(phases, chosen)]
     return _finish(trace, mode, fabric, overlap, delta_budget, cm, plans,

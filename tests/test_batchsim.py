@@ -270,3 +270,133 @@ def test_result_accessor_is_fabricresult_compatible():
     assert one.completion == res.completion[1]
     assert one.changed_links == lanes[1].schedule.reconfig_changed_links()
     assert isinstance(one.node_done, tuple) and len(one.node_done) == 12
+
+
+# --- mid-trace snapshot / restore ---------------------------------------------
+
+
+def random_phases(rng: random.Random, n: int, k: int):
+    phases = []
+    for _ in range(k):
+        kind = rng.choice(["a2a", "rs", "ag"])
+        phases.append((random_schedule(rng, kind, n, rng.choice([2, 3])),
+                       rng.choice([0.25, 1.0, 4.0]) * MB))
+    return tuple(phases)
+
+
+def assert_states_match(a, b):
+    assert a.n == b.n and a.link_offset == b.link_offset
+    assert a.chunks_moved == b.chunks_moved
+    assert a.reconfigs_paid == b.reconfigs_paid
+    assert a.delta_stall == pytest.approx(b.delta_stall, rel=REL_TOL)
+    np.testing.assert_allclose(a.node_ready, b.node_ready, rtol=REL_TOL)
+    np.testing.assert_allclose(a.port_free, b.port_free, rtol=REL_TOL)
+
+
+@pytest.mark.parametrize("n", [6, 12, 48])
+def test_snapshot_restore_grid_matches_uninterrupted_run(n):
+    """Differential fuzz across restore boundaries: running a trace straight
+    through equals capturing a mid-trace `FabricSnapshot` at every split
+    point and resuming from it — on the scalar sparse engine, and on the
+    batched engine fed the scalar snapshot — within 1e-9."""
+    from repro.core import TraceLane, batch_run_trace
+
+    rng = random.Random(7000 + n)
+    for delta in (1e-6, 1e-3, 15e-3):
+        cm = PAPER_DEFAULT.replace(delta=delta)
+        phases = random_phases(rng, n, rng.choice([3, 4]))
+        chunks = rng.choice([1, 2, 4])
+        sim = FabricSim(chunks_per_msg=chunks, mode="sparse")
+        full = sim.run_trace(phases, cm, capture_state=True)
+        for split in range(1, len(phases)):
+            snap = sim.run_trace(phases[:split], cm,
+                                 capture_state=True).final_state
+            resumed = sim.run_trace(phases[split:], cm, initial=snap,
+                                    capture_state=True)
+            assert resumed.completion == pytest.approx(full.completion,
+                                                       rel=REL_TOL)
+            np.testing.assert_allclose(resumed.node_done, full.node_done,
+                                       rtol=REL_TOL)
+            assert resumed.reconfigs_paid == full.reconfigs_paid
+            assert resumed.chunks_moved == full.chunks_moved
+            assert resumed.delta_stall == pytest.approx(full.delta_stall,
+                                                        rel=REL_TOL)
+            assert_states_match(resumed.final_state, full.final_state)
+            # the batched engine resumes from the same scalar snapshot
+            batch = batch_run_trace(
+                [TraceLane(phases=phases[split:], initial=snap)], cm,
+                chunks_per_msg=chunks)
+            assert batch.completion[0] == pytest.approx(full.completion,
+                                                        rel=REL_TOL)
+            assert batch.reconfigs_paid[0] == full.reconfigs_paid
+            assert batch.chunks_moved[0] == full.chunks_moved
+            assert_states_match(batch.snapshot(0), full.final_state)
+
+
+def test_batched_capture_matches_scalar_capture():
+    """`FabricSim(mode='batched').run_trace(..., capture_state=True)` and the
+    scalar sparse engine capture the same resumable state."""
+    rng = random.Random(11)
+    n = 16
+    phases = random_phases(rng, n, 3)
+    cm = PAPER_DEFAULT.replace(delta=1e-3)
+    scalar = FabricSim(chunks_per_msg=2, mode="sparse").run_trace(
+        phases, cm, capture_state=True)
+    batched = FabricSim(chunks_per_msg=2, mode="batched").run_trace(
+        phases, cm, capture_state=True)
+    assert_states_match(batched.final_state, scalar.final_state)
+    assert scalar.final_state.clock == pytest.approx(
+        max(scalar.node_done), rel=REL_TOL)
+
+
+def test_snapshot_restore_rejects_full_pause_and_mismatched_n():
+    from repro.core import FabricSnapshot, TraceLane
+
+    n = 8
+    phases = ((periodic_a2a(n, 1), MB),)
+    sparse = FabricSim(mode="sparse")
+    snap = sparse.run_trace(phases, PAPER_DEFAULT,
+                            capture_state=True).final_state
+    pause = FabricSim(mode="full-pause")
+    with pytest.raises(ValueError, match="full-pause"):
+        pause.run_trace(phases, PAPER_DEFAULT, initial=snap)
+    with pytest.raises(ValueError, match="full-pause"):
+        pause.run_trace(phases, PAPER_DEFAULT, capture_state=True)
+    other = ((periodic_a2a(12, 1), MB),)
+    with pytest.raises(ValueError, match="n=8"):
+        sparse.run_trace(other, PAPER_DEFAULT, initial=snap)
+    with pytest.raises(ValueError, match="n=8"):
+        TraceLane(phases=other, initial=snap)
+    with pytest.raises(ValueError, match="at least 2"):
+        FabricSnapshot(n=1, link_offset=1, node_ready=(0.0,),
+                       port_free=(0.0,))
+    with pytest.raises(ValueError, match="node_ready"):
+        FabricSnapshot(n=4, link_offset=1, node_ready=(0.0,) * 3,
+                       port_free=(0.0,) * 4)
+    with pytest.raises(ValueError, match="port_free"):
+        FabricSnapshot(n=4, link_offset=1, node_ready=(0.0,) * 4,
+                       port_free=(0.0,) * 3)
+
+
+def test_fresh_snapshot_resume_equals_cold_run():
+    """Resuming from an all-idle snapshot is exactly a cold run with an
+    extra entry swap only when the configured circuit differs."""
+    from repro.core import FabricSnapshot
+
+    n = 12
+    sched = periodic_a2a(n, 2)
+    phases = ((sched, MB),)
+    cm = PAPER_DEFAULT.replace(delta=1e-3)
+    sim = FabricSim(chunks_per_msg=2, mode="sparse")
+    cold = sim.run_trace(phases, cm)
+    g0 = sched.link_offsets()[0]
+    idle = FabricSnapshot(n=n, link_offset=g0, node_ready=(0.0,) * n,
+                          port_free=(0.0,) * n)
+    same = sim.run_trace(phases, cm, initial=idle)
+    assert same.completion == cold.completion  # matching circuit: free entry
+    moved = FabricSnapshot(n=n, link_offset=g0 + 1, node_ready=(0.0,) * n,
+                           port_free=(0.0,) * n)
+    swapped = sim.run_trace(phases, cm, initial=moved)
+    assert swapped.completion > cold.completion
+    # the entry swap is a (port, boundary) event on every port
+    assert swapped.reconfigs_paid == cold.reconfigs_paid + n

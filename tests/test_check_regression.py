@@ -93,6 +93,45 @@ def test_trace_schema_gates_drift(tmp_path, capsys):
     assert "free_boundaries" in err and "carryover_vs_cold" in err
 
 
+ONLINE_ROW = {
+    "trace": "mixed", "n": 16, "delta": 1e-3, "window": 4, "events": 10,
+    "phases": 12, "online_s": 3.3e-3, "offline_s": 3.3e-3,
+    "cold_event_s": 1.4e-2, "online_vs_offline": 1.0, "cold_vs_online": 4.3,
+    "replans": 7, "plan_reuses": 3, "free_boundaries": 11,
+    "paid_reconfigs": 0,
+}
+STORM_ROW = {
+    "trace": "storm", "n": 16, "delta": 1e-5, "window": 3, "pool": 54,
+    "requests": 256, "cold_hits": 214, "cold_misses": 42, "hot_hits": 256,
+    "hot_misses": 0, "hot_hit_rate": 1.0, "cold_plans_per_sec": 13000.0,
+    "hot_plans_per_sec": 100000.0, "unique_windows": 53, "signature": "abc",
+}
+
+
+def test_online_schema_gates_drift_and_signature(tmp_path, capsys):
+    base = _write(tmp_path / "b.json", [ONLINE_ROW, STORM_ROW])
+    ok = _write(tmp_path / "ok.json",
+                [dict(ONLINE_ROW),
+                 dict(STORM_ROW, hot_plans_per_sec=30000.0)])  # noisy but ok
+    check_main([base, ok])
+    assert "# OK: 2 rows" in capsys.readouterr().out
+    drift = _write(tmp_path / "d.json",
+                   [dict(ONLINE_ROW, online_s=4.0e-3, replans=9),
+                    dict(STORM_ROW, signature="def",
+                         hot_plans_per_sec=1000.0)])
+    with pytest.raises(SystemExit) as exc:
+        check_main([base, drift])
+    assert exc.value.code == 1
+    err = capsys.readouterr().err
+    assert "online_s" in err and "replans" in err
+    assert "signature" in err and "hot_plans_per_sec" in err
+
+
+def test_online_headline():
+    assert "plans/s" in headline("online", [ONLINE_ROW, STORM_ROW])
+    assert "W>=2" in headline("online", [ONLINE_ROW, STORM_ROW])
+
+
 def test_bench_summary_rows(tmp_path):
     base = _write(tmp_path / "b.json", [TRACE_ROW])
     fresh = _write(tmp_path / "f.json", [dict(TRACE_ROW)])

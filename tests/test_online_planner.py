@@ -1,0 +1,227 @@
+"""Online receding-horizon planner: bit-identity at W=full, bounded regret,
+warm-start correctness against the executing fabric, and re-planning on
+mispredicted streams (repro.workloads.online_planner)."""
+import dataclasses
+
+import pytest
+
+from repro.core import FabricSim, PAPER_DEFAULT
+from repro.workloads import (CollectiveEvent, OnlinePlanner, decode_ag_trace,
+                             mixed_trace, moe_a2a_trace, plan_trace,
+                             run_online)
+
+
+def _cm(delta):
+    return PAPER_DEFAULT.replace(delta=delta)
+
+
+# --- W = full recovers the offline DP exactly ---------------------------------
+
+
+@pytest.mark.parametrize("delta", [10e-6, 15e-3])
+@pytest.mark.parametrize("make", [
+    lambda n: mixed_trace(n, seed=0),
+    lambda n: decode_ag_trace(n, decode_steps=5, seed=1, jitter=0.25),
+    lambda n: moe_a2a_trace(n, layers=2, seed=2),
+])
+def test_full_window_bit_identical_to_offline(make, delta):
+    """With W >= the stream length every window solve sees the whole stream,
+    so the online planner must commit exactly the offline DP's choices —
+    the assembled TracePlan is bit-identical (not just close) to
+    `plan_trace(mode='carryover')` up to the mode label."""
+    trace = make(12)
+    cm = _cm(delta)
+    offline = plan_trace(trace, cm, mode="carryover")
+    online, stats = run_online(trace, cm, window=len(trace.events))
+    assert dataclasses.replace(online, mode="carryover") == offline
+    # one DP solve on the first observe, pure replay afterwards
+    assert stats.replans == 1
+    assert stats.plan_reuses == len(trace.events) - 1
+    assert stats.commits == len(trace.events)
+    assert stats.mispredictions == 0
+
+
+@pytest.mark.parametrize("budget", [0.0, 0.02, 0.5])
+def test_full_window_bit_identical_under_delta_budget(budget):
+    """The trace-wide reconfiguration budget threads through the warm-started
+    window DP (committed spend becomes init_spent), so W=full stays
+    bit-identical to the budgeted offline plan."""
+    trace = mixed_trace(12, seed=3)
+    cm = _cm(15e-3)
+    offline = plan_trace(trace, cm, mode="carryover", delta_budget=budget)
+    online, _ = run_online(trace, cm, window=len(trace.events),
+                           delta_budget=budget)
+    assert dataclasses.replace(online, mode="carryover") == offline
+
+
+# --- regret vs window size ----------------------------------------------------
+
+
+@pytest.mark.parametrize("delta", [10e-6, 1e-3, 15e-3])
+@pytest.mark.parametrize("make", [
+    lambda n: mixed_trace(n, seed=0),
+    lambda n: decode_ag_trace(n, decode_steps=6, seed=4, jitter=0.25),
+])
+def test_regret_monotone_nonincreasing_in_window(make, delta):
+    """More lookahead never hurts on a correctly-predicted stream, and no
+    window ever beats the offline DP (which sees strictly more)."""
+    trace = make(16)
+    cm = _cm(delta)
+    offline = plan_trace(trace, cm, mode="carryover").total_time
+    totals = []
+    for w in (1, 2, 4, len(trace.events)):
+        online, _ = run_online(trace, cm, window=w)
+        totals.append(online.total_time)
+        assert online.total_time >= offline * (1 - 1e-9)
+    for wider, narrower in zip(totals[1:], totals):
+        assert wider <= narrower * (1 + 1e-9), (
+            f"regret increased with a wider window: {totals}")
+    assert totals[-1] == pytest.approx(offline, rel=1e-12)
+
+
+# --- warm start matches the executing fabric ----------------------------------
+
+
+@pytest.mark.parametrize("prefix", [1, 3, 5])
+def test_committed_prefix_state_matches_fabric_execution(prefix):
+    """The (link offset) state each window solve is warm-started from is the
+    state the *fabric* reaches when the committed schedules actually run:
+    `run_trace(..., capture_state=True)` over the committed prefix ends at
+    exactly `OnlinePlanner.fabric_state`."""
+    trace = mixed_trace(12, seed=5)
+    cm = _cm(15e-3)
+    op = OnlinePlanner(trace.n, r=trace.r, cm=cm, window=3)
+    op.predict(trace.events)
+    for _ in range(prefix):
+        op.observe()
+    partial = op.result()
+    assert len(partial.trace.events) == prefix
+    sim = FabricSim(mode="sparse")
+    res = sim.run_trace(partial.fabric_phases(), cm, capture_state=True)
+    assert res.final_state is not None
+    assert res.final_state.link_offset == op.fabric_state
+    # and the modeled spend the next solve budgets against is the plan's
+    assert op.reconfigs_spent == partial.paid_reconfigs
+
+
+# --- mispredictions -----------------------------------------------------------
+
+
+def test_substituted_event_replans_suffix_from_committed_state():
+    """A substitution invalidates only the un-committed suffix: from the
+    misprediction on, the planner's commits equal those of a fresh planner
+    warm-started at the committed (g, spent) state and given the realized
+    suffix as its prediction stream."""
+    trace = mixed_trace(12, seed=6)
+    cm = _cm(15e-3)
+    k = 4  # position of the mispredicted event
+    substitute = CollectiveEvent(kind="a2a", m_bytes=3.5e6, tag="surprise")
+    assert trace.events[k] != substitute
+
+    op = OnlinePlanner(trace.n, r=trace.r, cm=cm, window=3)
+    op.predict(trace.events)
+    for _ in range(k):
+        op.observe()
+    g_k, spent_k = op.fabric_state, op.reconfigs_spent
+    realized_suffix = [substitute] + list(trace.events[k + 1:])
+    op.observe(substitute)
+    for ev in realized_suffix[1:]:
+        op.observe(ev)
+    assert op.stats().mispredictions == 1
+
+    ref = OnlinePlanner(trace.n, r=trace.r, cm=cm, window=3,
+                        init_g=g_k, init_spent=spent_k)
+    ref.predict(realized_suffix)
+    for _ in realized_suffix:
+        ref.observe()
+    plan, ref_plan = op.result(), ref.result()
+    assert plan.phases[-len(ref_plan.phases):] == ref_plan.phases
+
+
+def test_unpredicted_arrival_and_drop_count_as_mispredictions():
+    trace = decode_ag_trace(12, decode_steps=4, seed=7)
+    cm = _cm(1e-3)
+    op = OnlinePlanner(trace.n, cm=cm, window=2)
+    # no predictions at all: every explicit observe is an unpredicted arrival
+    for ev in trace.events:
+        op.observe(ev)
+    assert op.stats().mispredictions == len(trace.events)
+    assert op.committed_events == trace.events
+
+    op2 = OnlinePlanner(trace.n, cm=cm, window=2)
+    op2.predict(trace.events)
+    op2.drop_predicted(2)
+    assert op2.predicted_events == trace.events[2:]
+    assert op2.stats().mispredictions == 2
+    with pytest.raises(ValueError, match="cannot drop"):
+        op2.drop_predicted(len(trace.events))  # only len-2 remain
+
+
+def test_dropped_prediction_replans_shifted_window():
+    """Committing after a drop re-solves the shifted window rather than
+    replaying the stale plan, and the result equals planning the surviving
+    stream online from scratch."""
+    trace = mixed_trace(12, seed=8)
+    cm = _cm(15e-3)
+    survived = trace.events[1:]
+    op = OnlinePlanner(trace.n, r=trace.r, cm=cm, window=3)
+    op.predict(trace.events)
+    op.drop_predicted()  # events[0] never arrives
+    for _ in survived:
+        op.observe()
+    ref = OnlinePlanner(trace.n, r=trace.r, cm=cm, window=3)
+    ref.predict(survived)
+    for _ in survived:
+        ref.observe()
+    assert op.result().phases == ref.result().phases
+    assert op.stats().mispredictions == 1
+
+
+# --- driver & validation ------------------------------------------------------
+
+
+def test_run_online_realized_stream_shorter_than_predictions():
+    trace = mixed_trace(12, seed=9)
+    cm = _cm(1e-3)
+    realized = list(trace.events[:3])
+    plan, stats = run_online(trace, cm, window=2, realized=realized)
+    assert len(plan.trace.events) == 3
+    assert stats.commits == 3
+
+
+def test_online_planner_validation():
+    with pytest.raises(ValueError, match="at least 2 nodes"):
+        OnlinePlanner(1)
+    with pytest.raises(ValueError, match="radix"):
+        OnlinePlanner(8, r=1)
+    with pytest.raises(ValueError, match="window"):
+        OnlinePlanner(8, window=0)
+    with pytest.raises(ValueError, match="fabric"):
+        OnlinePlanner(8, fabric="static")
+    with pytest.raises(ValueError, match="overlap"):
+        OnlinePlanner(8, overlap=0.5)
+    with pytest.raises(ValueError, match="delta_budget"):
+        OnlinePlanner(8, delta_budget=-1.0)
+    with pytest.raises(ValueError, match="init_spent"):
+        OnlinePlanner(8, init_spent=-1)
+    op = OnlinePlanner(8, window=2)
+    with pytest.raises(TypeError, match="CollectiveEvents"):
+        op.predict([("a2a", 1e6)])
+    with pytest.raises(ValueError, match="no predicted events"):
+        op.observe()
+    with pytest.raises(ValueError, match="nothing committed"):
+        op.result()
+
+
+def test_delta_budget_is_trace_wide_online():
+    """The budget caps paid intra-collective reconfigurations across the
+    whole realized stream, not per window: an online run never spends more
+    than the cap the offline planner enforces."""
+    trace = mixed_trace(16, seed=10)
+    cm = _cm(15e-3)
+    budget = cm.delta  # exactly one full-fabric-equivalent of stall
+    unit = cm.delta_sparse(trace.n, 0.0)
+    cap = int(budget / unit + 1e-12)
+    for w in (1, 2, len(trace.events)):
+        online, _ = run_online(trace, cm, window=w, delta_budget=budget)
+        assert online.paid_reconfigs <= cap

@@ -1,0 +1,223 @@
+"""Plan-serving front-end: LRU accounting, storm determinism, never worse
+than cold per-event planning, and carryover-aware cache keys
+(repro.workloads.serve + the Planner init_g key regression)."""
+import json
+
+import pytest
+
+from repro.core import PAPER_DEFAULT
+from repro.planner import PlanRequest, Planner
+from repro.workloads import (PlanService, ServeRequest, build_request_pool,
+                             mixed_trace, plan_trace, request_storm)
+
+CM = PAPER_DEFAULT.replace(delta=15e-3)
+
+
+def _events(n=12, k=3, seed=0):
+    return mixed_trace(n, seed=seed).events[:k]
+
+
+# --- request / plan surfaces --------------------------------------------------
+
+
+def test_serve_request_round_trip_and_validation():
+    req = ServeRequest(events=_events(), n=12, r=2, init_g=3)
+    back = ServeRequest.from_dict(json.loads(json.dumps(req.to_dict())))
+    assert back == req
+    with pytest.raises(ValueError, match="at least one event"):
+        ServeRequest(events=(), n=12)
+    with pytest.raises(ValueError, match="at least 2 nodes"):
+        ServeRequest(events=_events(), n=1)
+    with pytest.raises(ValueError, match="radix"):
+        ServeRequest(events=_events(), n=12, r=1)
+    with pytest.raises(ValueError, match="init_g"):
+        ServeRequest(events=_events(), n=12, init_g=0)
+
+
+def test_service_validation():
+    with pytest.raises(ValueError, match="fabric"):
+        PlanService(fabric="static")
+    with pytest.raises(ValueError, match="overlap"):
+        PlanService(overlap=0.5)
+    with pytest.raises(ValueError, match="cache_size"):
+        PlanService(cache_size=-1)
+
+
+def test_served_window_matches_offline_trace_dp():
+    """A fresh-fabric request over a whole trace is exactly the offline
+    carryover DP's problem: same schedules, same modeled total."""
+    trace = mixed_trace(12, seed=1)
+    offline = plan_trace(trace, CM, mode="carryover")
+    service = PlanService(cm=CM)
+    plan = service.serve(ServeRequest(events=trace.events, n=trace.n,
+                                      r=trace.r))
+    assert plan.entry_changed == 0 and plan.entry_cost == 0.0
+    assert [p.schedule for p in plan.phases] == list(offline.schedules())
+    assert plan.total_time == pytest.approx(offline.total_time, rel=1e-12)
+    assert plan.final_g == plan.phases[-1].schedule.link_offsets()[-1]
+
+
+# --- LRU accounting -----------------------------------------------------------
+
+
+def test_cache_hit_miss_and_eviction_accounting():
+    service = PlanService(cm=CM, cache_size=2)
+    reqs = [ServeRequest(events=_events(seed=s), n=12) for s in range(3)]
+    assert service.serve(reqs[0]) == service.serve(reqs[0])
+    info = service.cache_info()
+    assert (info.hits, info.misses, info.size) == (1, 1, 1)
+    service.serve(reqs[1])
+    service.serve(reqs[2])  # capacity 2: evicts reqs[0] (LRU)
+    info = service.cache_info()
+    assert (info.misses, info.size, info.capacity) == (3, 2, 2)
+    service.serve(reqs[0])  # evicted -> miss again
+    assert service.cache_info().misses == 4
+    service.cache_clear()
+    info = service.cache_info()
+    assert (info.hits, info.misses, info.size) == (0, 0, 0)
+
+    # cache_size=0 bypasses the LRU entirely but still serves plans
+    bypass = PlanService(cm=CM, cache_size=0)
+    assert bypass.serve(reqs[0]).phases
+    assert bypass.cache_info().size == 0
+
+
+def test_cache_key_includes_carryover_state():
+    """Identical windows with different inherited link offsets are different
+    planning problems — the serving LRU must never conflate them."""
+    service = PlanService(cm=CM)
+    events = _events()
+    fresh = service.serve(ServeRequest(events=events, n=12))
+    inherited = service.serve(ServeRequest(events=events, n=12, init_g=4))
+    assert service.cache_info().misses == 2  # no stale hit
+    assert fresh.entry_cost == 0.0
+    first_g = inherited.phases[0].schedule.link_offsets()[0]
+    if first_g != 4:
+        assert inherited.entry_cost > 0.0
+    assert inherited.total_time >= fresh.total_time
+
+
+# --- storm driver -------------------------------------------------------------
+
+
+def test_request_storm_deterministic_across_services():
+    pool = build_request_pool(12, window=3, seed=0)
+    runs = []
+    for _ in range(2):
+        service = PlanService(cm=CM)
+        cold = request_storm(service, pool, requests=64, seed=1)
+        hot = request_storm(service, pool, requests=64, seed=2)
+        runs.append((cold.signature, cold.hits, cold.misses,
+                     hot.signature, hot.hits, hot.misses,
+                     cold.unique_windows))
+    assert runs[0] == runs[1]
+    # the plan sequence differs between differently-seeded storms
+    assert runs[0][0] != runs[0][3]
+
+
+def test_request_storm_accounting_and_validation():
+    pool = build_request_pool(12, window=2, seed=3)
+    service = PlanService(cm=CM)
+    storm = request_storm(service, pool, requests=50, seed=4)
+    assert storm.hits + storm.misses == storm.requests == 50
+    # cold cache: at most one miss per drawn pool entry (fewer when distinct
+    # pool entries are identical windows, e.g. repeated decode steps)
+    assert storm.misses <= storm.unique_windows
+    drawn_keys = {PlanService.request_key(r) for r in pool}
+    assert storm.misses <= len(drawn_keys)
+    assert storm.hit_rate == pytest.approx(storm.hits / 50)
+    assert storm.plans_per_sec > 0
+    with pytest.raises(ValueError, match="non-empty pool"):
+        request_storm(service, [], requests=1)
+    with pytest.raises(ValueError, match="requests"):
+        request_storm(service, pool, requests=0)
+    with pytest.raises(ValueError, match="hot_fraction"):
+        request_storm(service, pool, hot_fraction=0.0)
+
+
+# --- property: serving never loses to cold per-event planning -----------------
+
+
+def test_serving_never_exceeds_cold_per_event_property():
+    """For any window, the served joint plan is never worse than planning
+    each event independently with full-fabric boundary swaps (the cold
+    reference contains a feasible point of the window DP, and every sparse
+    boundary charge is <= the full delta)."""
+    hypothesis = pytest.importorskip("hypothesis")  # noqa: F841
+    from hypothesis import given, settings  # noqa: E402
+    from hypothesis import strategies as st  # noqa: E402
+
+    from repro.workloads import CollectiveEvent, Trace
+
+    events_st = st.lists(
+        st.builds(CollectiveEvent,
+                  kind=st.sampled_from(["a2a", "rs", "ag", "ar"]),
+                  m_bytes=st.floats(min_value=1e4, max_value=64e6),
+                  tag=st.just("prop")),
+        min_size=1, max_size=4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(events=events_st, n=st.sampled_from([8, 12, 16]),
+           delta=st.sampled_from([10e-6, 1e-3, 15e-3]))
+    def inner(events, n, delta):
+        cm = PAPER_DEFAULT.replace(delta=delta)
+        service = PlanService(cm=cm, cache_size=0)
+        served = service.serve(ServeRequest(events=events, n=n))
+        cold = plan_trace(Trace(name="prop", n=n, events=tuple(events)),
+                          cm, mode="cold")
+        assert served.total_time <= cold.total_time * (1 + 1e-9)
+
+    inner()
+
+
+# --- Planner cache-key regression (carryover state) ---------------------------
+
+
+def test_planner_cache_key_distinguishes_init_g():
+    """Regression: before init_g entered the request (and so the LRU key),
+    a plan computed for one inherited fabric state could be served for
+    another, silently mispricing the entry boundary."""
+    planner = Planner()
+    base = dict(kind="a2a", n=16, m_bytes=4e6, cost_model=CM, fabric="ocs")
+    fresh = planner.plan(PlanRequest(**base))
+    warm = planner.plan(PlanRequest(**base, init_g=5))
+    assert planner.cache_key(PlanRequest(**base)) != \
+        planner.cache_key(PlanRequest(**base, init_g=5))
+    assert planner.cache_info().misses == 2  # distinct problems, no stale hit
+    assert warm.predicted_time > fresh.predicted_time  # entry swap is priced
+
+    # same request again is a hit, per init_g
+    planner.plan(PlanRequest(**base, init_g=5))
+    assert planner.cache_info().hits == 1
+
+    # JSON round trip preserves the carryover state
+    req = PlanRequest(**base, init_g=5)
+    assert PlanRequest.from_dict(req.to_dict()) == req
+
+    with pytest.raises(ValueError, match="init_g"):
+        PlanRequest(**base, init_g=0)
+    with pytest.raises(ValueError, match="reconfigurable"):
+        PlanRequest(kind="a2a", n=16, m_bytes=4e6, cost_model=CM,
+                    fabric="static", init_g=2)
+
+
+def test_planner_init_g_entry_matches_sparse_swap_cost():
+    """The entry charge is exactly the sparse changed-circuit diff between
+    the inherited offset and the winning schedule's first offset."""
+    from repro.core import changed_links
+
+    planner = Planner()
+    base = dict(kind="rs", n=12, m_bytes=2e6, cost_model=CM, fabric="ocs")
+    fresh = planner.plan(PlanRequest(**base))
+    for g in (1, 3, 7):
+        warm = planner.plan(PlanRequest(**base, init_g=g))
+        first = warm.schedule.link_offsets()[0]
+        entry = CM.delta_sparse(changed_links(12, g, first), 0.0)
+        # the winning schedule may differ from the fresh one (entry cost can
+        # flip the ranking); the modeled total is fresh-equivalent + entry
+        # only when the same schedule wins
+        if warm.schedule == fresh.schedule:
+            assert warm.predicted_time == pytest.approx(
+                fresh.predicted_time + entry, rel=1e-12)
+        assert warm.predicted_time <= fresh.predicted_time + \
+            CM.delta_sparse(12, 0.0) * (1 + 1e-9)
