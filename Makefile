@@ -5,7 +5,7 @@ PYTHONPATH := src
 COV_MIN ?= 84
 
 .PHONY: test test-fast bench bench-smoke plan-bench fabric-bench sim-bench \
-	trace-bench online-bench sweep coverage lint
+	trace-bench online-bench sweep coverage lint verify-gate
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -67,5 +67,11 @@ coverage:
 		--cov=repro --cov-report=xml --cov-report=term
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.coverage_gate coverage.xml --min $(COV_MIN)
 
+# Static audit of every plan the committed BENCH_*.json baselines imply
+# (repro.analysis verifier + fast-path certificate coverage); exit 1 on any
+# violation.
+verify-gate:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.verify_gate
+
 lint:
-	ruff check --select E,F,W,I src tests benchmarks examples
+	ruff check --select E,F,W,I,B,C4 src tests benchmarks examples

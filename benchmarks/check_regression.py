@@ -14,10 +14,12 @@ The file schema is auto-detected from the row keys:
     event simulator is deterministic, so the event/analytic ratio and the
     sparse speedup must match the baseline within ``--rel-tol``.
   - sim rows (``batched_wall_s``, BENCH_sim_scale.json): the batch engine is
-    deterministic, so lane counts, fast-path counts, and the completion
-    checksum must match the baseline (checksum within 1e-9 relative); the
-    scoring-tier wall speedup is timing-noisy and only has to stay above
-    ``--wall-frac`` of the committed value (and above 1x absolutely).
+    deterministic, so lane counts, fast-path counts, statically-certified
+    lane counts, and the completion checksum must match the baseline
+    (checksum within 1e-9 relative); the scoring-tier wall speedup is
+    timing-noisy and only has to stay above ``--wall-frac`` of the committed
+    value (and above 1x absolutely), and certified playback must stay within
+    1.25x of the guard-based (``certify=False``) wall time.
   - trace rows (``carryover_s``, BENCH_trace.json): trace planning is
     deterministic, so the carryover/cold/static ratios must match the
     baseline within ``--rel-tol`` and the boundary-reuse counts exactly.
@@ -94,6 +96,17 @@ def check_sim(base_rows: list[dict], fresh_rows: list[dict],
             if fresh[field] != ref[field]:
                 errors.append(f"{tag}: {field} {fresh[field]} != baseline "
                               f"{ref[field]} (engine grid is deterministic)")
+        if "certified_lanes" in ref:  # baselines predating the certifier skip
+            if fresh["certified_lanes"] != ref["certified_lanes"]:
+                errors.append(f"{tag}: certified_lanes "
+                              f"{fresh['certified_lanes']} != baseline "
+                              f"{ref['certified_lanes']} (certificates are "
+                              f"static and deterministic)")
+            guard = fresh.get("guard_wall_s")
+            if guard is not None and fresh["batched_wall_s"] > 1.25 * guard:
+                errors.append(f"{tag}: certified playback "
+                              f"{fresh['batched_wall_s']}s slower than the "
+                              f"guard-based path {guard}s x 1.25")
         drift = (abs(fresh["completion_checksum"] - ref["completion_checksum"])
                  / max(abs(ref["completion_checksum"]), 1e-12))
         if drift > 1e-9:
@@ -218,12 +231,12 @@ def check_row_coverage(base_rows: list[dict], fresh_rows: list[dict],
     fresh = set(_index(fresh_rows, keys))
     errors = []
     for key in sorted(fresh - base, key=str):
-        errors.append(f"fresh row {dict(zip(keys, key))} is not in the "
+        errors.append(f"fresh row {dict(zip(keys, key, strict=True))} is not in the "
                       f"baseline grid (stale baseline: the row would never "
                       f"be gated — regenerate the committed BENCH file)")
     if not subset_ok:
         for key in sorted(base - fresh, key=str):
-            errors.append(f"baseline row {dict(zip(keys, key))} is missing "
+            errors.append(f"baseline row {dict(zip(keys, key, strict=True))} is missing "
                           f"from the fresh results (pass --subset-ok only "
                           f"for smoke runs that measure a subset)")
     return errors

@@ -7,8 +7,11 @@ Two measurement tiers plus the plan-serving path:
     exact-dp schedule for all three collectives at one n) completion-timed
     once by the scalar per-chunk `FabricSim` loop and once by a single
     `batchsim.batch_run` call.  Gates (exit 1): batched >= ``--min-speedup``
-    x faster, every lane on the vectorized fast path, and completions equal
-    to the scalar loop within 1e-9 relative.
+    x faster, every lane on the vectorized fast path, every lane statically
+    certified (`repro.analysis.certifier` — the row reports the certified
+    fraction), certified playback no slower than the guard-based
+    ``certify=False`` path, and completions equal to the scalar loop within
+    1e-9 relative.
   - ``scale`` tier (n in {768, 1536}): batched-only — the scalar engine is
     not run at all at this scale (it would take minutes per grid point);
     the row records wall time and a completion checksum so regressions in
@@ -61,26 +64,36 @@ def bench_scoring(n: int = 96, m: float = 4 * MB, chunks: int = 8) -> dict:
                 .run(lane.schedule, m, cm).completion for lane in lanes]
 
     # steady-state timing: one untimed pass per engine warms every memoized
-    # layer (step structure, link-offset gcds, compiled tapes) so neither
-    # timed side is charged the other's cold-cache work
+    # layer (step structure, link-offset gcds, compiled tapes, fast-path
+    # certificates) so neither timed side is charged the other's cold-cache
+    # work
     run_scalar()
     batch_run(lanes, cm, chunks_per_msg=chunks)
+    batch_run(lanes, cm, chunks_per_msg=chunks, certify=False)
     t0 = time.perf_counter()
     scalar = run_scalar()
     scalar_wall = time.perf_counter() - t0
     t0 = time.perf_counter()
     res = batch_run(lanes, cm, chunks_per_msg=chunks)
     batched_wall = time.perf_counter() - t0
+    # guard-based path: same batch with certificates disabled, so the
+    # canonical-order guards run their per-step bookkeeping (the pre-certifier
+    # behaviour); certified playback must not be slower than this
+    t0 = time.perf_counter()
+    batch_run(lanes, cm, chunks_per_msg=chunks, certify=False)
+    guard_wall = time.perf_counter() - t0
     worst_rel = max(
         abs(float(b) - s) / max(abs(s), 1e-30)
-        for b, s in zip(res.completion, scalar))
+        for b, s in zip(res.completion, scalar, strict=True))
     return {
         "tier": "scoring", "n": n, "r": 2, "m_bytes": m, "chunks": chunks,
         "delta": DELTA, "lanes": len(lanes),
         "scalar_wall_s": round(scalar_wall, 4),
         "batched_wall_s": round(batched_wall, 4),
+        "guard_wall_s": round(guard_wall, 4),
         "batched_speedup": round(scalar_wall / max(batched_wall, 1e-9), 2),
         "fast_lanes": int(res.fast_path.sum()),
+        "certified_lanes": int(res.certified.sum()),
         "worst_rel_diff": float(f"{worst_rel:.3e}"),
         "completion_checksum": float(res.completion.sum()),
     }
@@ -103,8 +116,10 @@ def bench_scale(n: int, m: float = 4 * MB, chunks: int = 4,
         "delta": DELTA, "lanes": len(lanes),
         "scalar_wall_s": None,     # deliberately never run at this scale
         "batched_wall_s": round(batched_wall, 4),
+        "guard_wall_s": None,      # guard-path A/B is a scoring-tier gate
         "batched_speedup": None,
         "fast_lanes": int(res.fast_path.sum()),
+        "certified_lanes": int(res.certified.sum()),
         "worst_rel_diff": None,
         "completion_checksum": float(res.completion.sum()),
     }
@@ -151,6 +166,11 @@ def check_gates(rows: list[dict], cache: dict, min_speedup: float) -> list[str]:
             errors.append(f"{key}: only {row['fast_lanes']}/{row['lanes']} "
                           f"lanes on the vectorized fast path (uniform lanes "
                           f"must never fall back)")
+        if row["certified_lanes"] != row["lanes"]:
+            errors.append(f"{key}: only {row['certified_lanes']}/"
+                          f"{row['lanes']} lanes statically certified "
+                          f"(uniform candidate lanes under alpha_s > 0 must "
+                          f"all hold fast-path certificates)")
         if row["tier"] != "scoring":
             continue
         if row["batched_speedup"] < min_speedup:
@@ -159,6 +179,11 @@ def check_gates(rows: list[dict], cache: dict, min_speedup: float) -> list[str]:
         if row["worst_rel_diff"] > 1e-9:
             errors.append(f"{key}: batched vs scalar completion drift "
                           f"{row['worst_rel_diff']} > 1e-9")
+        if row["batched_wall_s"] > 1.25 * row["guard_wall_s"]:
+            errors.append(f"{key}: certified playback {row['batched_wall_s']}"
+                          f"s slower than the guard-based path "
+                          f"{row['guard_wall_s']}s x 1.25 (the certificate "
+                          f"must never cost more than the guards it waives)")
     if cache["misses"] != cache["distinct_requests"]:
         errors.append(f"plan cache: {cache['misses']} misses != "
                       f"{cache['distinct_requests']} distinct requests")
@@ -187,12 +212,13 @@ def main(argv=None) -> None:
             rows.append(bench_scale(n))
     cache = bench_plan_cache()
 
-    print("tier,n,lanes,scalar_wall_s,batched_wall_s,speedup,fast_lanes,"
-          "worst_rel_diff")
+    print("tier,n,lanes,scalar_wall_s,batched_wall_s,guard_wall_s,speedup,"
+          "fast_lanes,certified_lanes,worst_rel_diff")
     for row in rows:
         print(f"{row['tier']},{row['n']},{row['lanes']},"
               f"{row['scalar_wall_s']},{row['batched_wall_s']},"
-              f"{row['batched_speedup']},{row['fast_lanes']},"
+              f"{row['guard_wall_s']},{row['batched_speedup']},"
+              f"{row['fast_lanes']},{row['certified_lanes']},"
               f"{row['worst_rel_diff']}")
     print(f"# plan cache: {cache['hits']} hits / {cache['misses']} misses "
           f"(rate {cache['hit_rate']}), cold {cache['cold_plan_us']} us -> "

@@ -1,0 +1,200 @@
+"""Static audit of the plans implied by the committed BENCH_*.json baselines.
+
+The committed benchmark baselines pin down a grid of (workload, fabric,
+cost-model) points whose plans the repo claims are correct.  This gate
+re-derives every plan the baselines imply — planner candidate sets, trace
+plans in all three modes, online receding-horizon plans, the serving-storm
+request pool, and the batch-engine candidate lanes — and runs them through
+the static verifier (`repro.analysis`) WITHOUT running a simulator.  Any
+`Violation` fails the gate (exit 1), so a planner change that starts
+emitting malformed schedules is caught in CI even when its modeled times
+still look plausible.
+
+Also reports the statically-certified lane fraction for the batch-engine
+grid (`repro.analysis.certifier`): under the paper cost model every uniform
+candidate lane must hold a fast-path certificate.
+
+Usage:
+
+    python -m benchmarks.verify_gate [--root DIR] [--max-pool N]
+
+Reads whichever of BENCH_planner.json / BENCH_trace.json /
+BENCH_online.json / BENCH_sim_scale.json exist under --root (default: the
+repository root, next to this package).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _load_rows(root: str, name: str) -> list[dict]:
+    path = os.path.join(root, name)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)["rows"]
+
+
+def audit_planner(rows: list[dict]) -> tuple[list[str], int]:
+    """Re-plan every (kind, n, r, m) point of BENCH_planner and verify."""
+    from repro.analysis import verify_plan
+    from repro.core import PAPER_DEFAULT
+    from repro.planner import Planner, PlanRequest
+
+    planner = Planner(cache_size=0, verify=False)  # the gate IS the verifier
+    findings, audited = [], 0
+    for row in rows:
+        kinds = tuple(row.get("kinds") or ("a2a", "rs", "ag")) + ("ar",)
+        for kind in kinds:
+            req = PlanRequest(kind=kind, n=row["n"], m_bytes=row["m_bytes"],
+                              cost_model=PAPER_DEFAULT, r=row["r"])
+            res = planner.plan(req)
+            audited += 1
+            findings += [f"planner n={row['n']} r={row['r']} {kind}: {v}"
+                         for v in verify_plan(res)]
+    return findings, audited
+
+
+def audit_trace(rows: list[dict]) -> tuple[list[str], int]:
+    """Re-plan every (trace, n, delta) point in all three modes and verify."""
+    from benchmarks.trace_bench import make_trace
+    from repro.analysis import verify_trace_plan
+    from repro.core import PAPER_DEFAULT
+    from repro.workloads import plan_trace
+
+    findings, audited = [], 0
+    for key in sorted({(r["trace"], r["n"], r["delta"]) for r in rows},
+                      key=str):
+        name, n, delta = key
+        trace = make_trace(name, n)
+        cm = PAPER_DEFAULT.replace(delta=delta)
+        for mode in ("static", "cold", "carryover"):
+            tp = plan_trace(trace, cm, mode=mode)
+            audited += 1
+            findings += [f"trace={name} n={n} delta={delta} {mode}: {v}"
+                         for v in verify_trace_plan(tp, cm=cm)]
+    return findings, audited
+
+
+def audit_online(rows: list[dict], max_pool: int) -> tuple[list[str], int]:
+    """Replay every online window grid point and the storm request pool."""
+    from benchmarks.online_bench import STORM_WINDOW
+    from benchmarks.trace_bench import make_trace
+    from repro.analysis import verify_served_plan, verify_trace_plan
+    from repro.core import PAPER_DEFAULT
+    from repro.workloads import PlanService, build_request_pool, run_online
+
+    findings, audited = [], 0
+    for row in rows:
+        if row["trace"] == "storm":
+            service = PlanService(cm=PAPER_DEFAULT, cache_size=0,
+                                  verify=False)
+            pool = build_request_pool(row["n"], window=row.get(
+                "window", STORM_WINDOW), seed=0)[:max_pool]
+            for req in pool:
+                sp = service.serve(req)
+                audited += 1
+                findings += [f"storm n={row['n']} ({len(req.events)}ev "
+                             f"init_g={req.init_g}): {v}"
+                             for v in verify_served_plan(sp, PAPER_DEFAULT)]
+            continue
+        trace = make_trace(row["trace"], row["n"])
+        cm = PAPER_DEFAULT.replace(delta=row["delta"])
+        tp, _ = run_online(trace, cm, window=row["window"])
+        audited += 1
+        findings += [f"online trace={row['trace']} n={row['n']} "
+                     f"delta={row['delta']} W={row['window']}: {v}"
+                     for v in verify_trace_plan(tp, cm=cm)]
+    return findings, audited
+
+
+def audit_sim(rows: list[dict]) -> tuple[list[str], int, list[str]]:
+    """Verify every batch-engine candidate tape; report certified fraction."""
+    from benchmarks.sim_bench import _candidate_lanes
+    from repro.analysis import certify_batch, verify_schedule
+    from repro.core import PAPER_DEFAULT
+
+    findings, audited, certified_lines = [], 0, []
+    for row in rows:
+        lanes = _candidate_lanes(row["n"], row["m_bytes"],
+                                 max_lanes=row["lanes"])
+        cm = PAPER_DEFAULT.replace(delta=row["delta"])
+        for lane in lanes:
+            audited += 1
+            findings += [f"sim tier={row['tier']} n={row['n']} "
+                         f"{lane.schedule.kind} x={lane.schedule.x}: {v}"
+                         for v in verify_schedule(lane.schedule)]
+        certified = int(certify_batch(lanes, cm).sum())
+        certified_lines.append(
+            f"# sim tier={row['tier']} n={row['n']}: {certified}/{len(lanes)}"
+            f" lanes certified ({certified / max(len(lanes), 1):.0%})")
+        if certified != len(lanes):
+            findings.append(
+                f"sim tier={row['tier']} n={row['n']}: only {certified}/"
+                f"{len(lanes)} uniform candidate lanes certified (alpha_s > "
+                f"0 regime must certify them all)")
+        baseline = row.get("certified_lanes")
+        if baseline is not None and certified != baseline:
+            findings.append(
+                f"sim tier={row['tier']} n={row['n']}: certified lanes "
+                f"{certified} != committed baseline {baseline}")
+    return findings, audited, certified_lines
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), ".."),
+        help="directory holding the committed BENCH_*.json baselines")
+    ap.add_argument("--max-pool", type=int, default=24,
+                    help="cap on storm-pool requests audited per n")
+    args = ap.parse_args(argv)
+
+    findings: list[str] = []
+    total = 0
+    for name, audit in (("BENCH_planner.json", audit_planner),
+                        ("BENCH_trace.json", audit_trace)):
+        rows = _load_rows(args.root, name)
+        if not rows:
+            print(f"# skip {name}: not present")
+            continue
+        found, audited = audit(rows)
+        findings += found
+        total += audited
+        print(f"# {name}: {audited} plans audited, {len(found)} violations")
+    rows = _load_rows(args.root, "BENCH_online.json")
+    if rows:
+        found, audited = audit_online(rows, args.max_pool)
+        findings += found
+        total += audited
+        print(f"# BENCH_online.json: {audited} plans audited, "
+              f"{len(found)} violations")
+    else:
+        print("# skip BENCH_online.json: not present")
+    rows = _load_rows(args.root, "BENCH_sim_scale.json")
+    if rows:
+        found, audited, certified_lines = audit_sim(rows)
+        findings += found
+        total += audited
+        for line in certified_lines:
+            print(line)
+        print(f"# BENCH_sim_scale.json: {audited} schedules audited, "
+              f"{len(found)} violations")
+    else:
+        print("# skip BENCH_sim_scale.json: not present")
+
+    if total == 0:
+        print("# FAIL: no baselines found to audit", file=sys.stderr)
+        sys.exit(1)
+    if findings:
+        for f in findings:
+            print(f"# FAIL: {f}", file=sys.stderr)
+        sys.exit(1)
+    print(f"# OK: {total} artifacts statically verified, zero violations")
+
+
+if __name__ == "__main__":
+    main()

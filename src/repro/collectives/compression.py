@@ -41,7 +41,7 @@ def compressed_all_reduce(grads, ef_state, axis_name: str):
 
     flat_g, tdef = jax.tree.flatten(grads)
     flat_e = tdef.flatten_up_to(ef_state)
-    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e, strict=True)]
     summed = tdef.unflatten([o[0] for o in outs])
     new_ef = tdef.unflatten([o[1] for o in outs])
     return summed, new_ef

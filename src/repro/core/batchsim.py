@@ -36,6 +36,14 @@ differential-fuzz suite (tests/test_batchsim.py) pins fast-path results to
 the scalar loop at 1e-9 relative tolerance across a seeded
 n x r x R x delta x straggler grid.
 
+Most lanes never needed the runtime checks at all: the static fast-path
+certifier (`repro.analysis.certifier`) proves, from the tape and the cost-
+model regime alone, that neither condition can trip — uniform lanes under a
+positive per-step startup latency.  `batch_run` / `batch_run_trace` consult
+it first (``certify=True``), exempt certified lanes from the guards, and
+skip the guards' per-step bookkeeping entirely when the whole batch is
+certified; ``BatchFabricResult.certified`` records who held a certificate.
+
 The planner's ``fabric="ocs-sim"`` event-scores whole candidate sets through
 `batch_run` in a single call; `benchmarks/sim_bench.py` records the wall-time
 ratio vs the scalar loop (>= 10x at n = 96 for a 30-candidate batch, and
@@ -184,7 +192,7 @@ def compile_tape(schedule: Schedule) -> ScheduleTape:
     offsets = tuple(off for off, _, _, _ in structure)
     counts = tuple(cnt for _, cnt, _, _ in structure)
     g_step = tuple(schedule.link_offsets())
-    hops = tuple(off // g for off, g in zip(offsets, g_step))
+    hops = tuple(off // g for off, g in zip(offsets, g_step, strict=True))
     segs = schedule.segments
     seg_of = [0] * len(offsets)
     for si, (a, b) in enumerate(segs):
@@ -290,6 +298,10 @@ class BatchFabricResult:
     fast_path[b] is True when lane b completed on the vectorized tape
     playback and False when it was re-run through the scalar oracle (the
     canonical-order check tripped, e.g. under a severe straggler).
+    certified[b] is True when lane b held a static fast-path certificate
+    (`repro.analysis.certifier`): its exactness was proven from the tape and
+    regime alone, without running the runtime guards.  certified implies
+    fast_path.
     """
 
     completion: np.ndarray      # [B]
@@ -299,6 +311,7 @@ class BatchFabricResult:
     reconfigs_paid: np.ndarray  # [B] int
     delta_stall: np.ndarray     # [B]
     fast_path: np.ndarray       # [B] bool
+    certified: np.ndarray       # [B] bool
     lanes: tuple[BatchLane, ...]
 
     def __len__(self) -> int:
@@ -344,7 +357,7 @@ def _knob_arrays(lanes, cm: CostModel, n: int):
 
 def _play(*, n: int, C: int, cm: CostModel, nb_step, g_step, hops, boundary,
           changed, delta_eff, speed, scale, F0=None, ready0=None,
-          changed0=None):
+          changed0=None, check_order: bool = True):
     """Canonical-order tape playback over [B, S] step arrays.
 
     ``nb_step[b, k]`` is lane b's per-node payload of sub-step k (before any
@@ -359,6 +372,14 @@ def _play(*, n: int, C: int, cm: CostModel, nb_step, g_step, hops, boundary,
     (node_done, step_done, ok, port_free) where ``ok`` flags the lanes whose
     heap execution provably coincides with this canonical order (see module
     docstring) and ``port_free`` is the final per-port busy-until state.
+
+    ``check_order=False`` skips the runtime canonical-order guards and their
+    ``first_arr`` / ``last_arr`` / ``seg_max_arr`` bookkeeping entirely and
+    returns ``ok`` all-True — only valid when every lane in the batch holds
+    a static fast-path certificate (`repro.analysis.certifier`), which
+    proves the guards could not have tripped.  The timing arrays are
+    bit-identical either way: the guards observe the timeline, they never
+    alter it.
     """
     B, S = nb_step.shape
     alpha_s, alpha_h, beta = cm.alpha_s, cm.alpha_h, cm.beta
@@ -374,7 +395,8 @@ def _play(*, n: int, C: int, cm: CostModel, nb_step, g_step, hops, boundary,
            else np.asarray(ready0, dtype=float) + alpha_s)
     step_done = np.zeros((B, S))
     ok = np.ones(B, dtype=bool)       # canonical-order check per lane
-    seg_max_arr = np.full((B, n), -np.inf)  # latest arrival this segment
+    if check_order:
+        seg_max_arr = np.full((B, n), -np.inf)  # latest arrival this segment
 
     for k in range(S):
         if k > 0:
@@ -386,7 +408,8 @@ def _play(*, n: int, C: int, cm: CostModel, nb_step, g_step, hops, boundary,
         gather_idx = (ports - g[:, None]) % n                # [B, n]
         gather_idx3 = np.broadcast_to(gather_idx[:, :, None], (B, n, C))
         arr = np.broadcast_to(inj[:, :, None], (B, n, C))    # stream-0 arrivals
-        first_arr, last_arr = inj.copy(), inj.copy()         # min/max over streams
+        if check_order:
+            first_arr, last_arr = inj.copy(), inj.copy()     # min/max over streams
         recv = np.empty((B, n))
         comp = np.empty((B, n, C))
         for j in range(int(h.max())):
@@ -413,32 +436,36 @@ def _play(*, n: int, C: int, cm: CostModel, nb_step, g_step, hops, boundary,
             cont = active & (j + 1 < h)
             if not cont.any():
                 break
-            if j == 0:
-                # a hop-1 chunk overtaking the port's own injection breaks
-                # the canonical within-step stream order
-                ok &= ~(cont & (nxt[:, :, 0] <= inj).any(axis=1))
-            first_arr = np.where(cont[:, None],
-                                 np.minimum(first_arr, nxt[:, :, 0]), first_arr)
-            last_arr = np.where(cont[:, None],
-                                np.maximum(last_arr, nxt[:, :, C - 1]), last_arr)
+            if check_order:
+                if j == 0:
+                    # a hop-1 chunk overtaking the port's own injection breaks
+                    # the canonical within-step stream order
+                    ok &= ~(cont & (nxt[:, :, 0] <= inj).any(axis=1))
+                first_arr = np.where(cont[:, None],
+                                     np.minimum(first_arr, nxt[:, :, 0]),
+                                     first_arr)
+                last_arr = np.where(cont[:, None],
+                                    np.maximum(last_arr, nxt[:, :, C - 1]),
+                                    last_arr)
             arr = nxt
-        # canonical cross-step order within a segment: step k's first
-        # arrivals must not precede (or tie with) any earlier arrival at the
-        # same port — the scalar loop's segment gate covers boundaries, so
-        # the running max resets there
-        if k > 0:
-            same_seg = ~boundary[:, k]
-            ok &= ~(same_seg & (first_arr <= seg_max_arr).any(axis=1))
-        reset = boundary[:, k][:, None]
-        seg_max_arr = np.where(reset, last_arr,
-                               np.maximum(seg_max_arr, last_arr))
+        if check_order:
+            # canonical cross-step order within a segment: step k's first
+            # arrivals must not precede (or tie with) any earlier arrival at
+            # the same port — the scalar loop's segment gate covers
+            # boundaries, so the running max resets there
+            if k > 0:
+                same_seg = ~boundary[:, k]
+                ok &= ~(same_seg & (first_arr <= seg_max_arr).any(axis=1))
+            reset = boundary[:, k][:, None]
+            seg_max_arr = np.where(reset, last_arr,
+                                   np.maximum(seg_max_arr, last_arr))
         step_done[:, k] = recv.max(axis=1)
     return recv, step_done, ok, F
 
 
 def batch_run(lanes: Sequence[BatchLane], cm: CostModel, *,
-              chunks_per_msg: int = 32,
-              allow_fallback: bool = True) -> BatchFabricResult:
+              chunks_per_msg: int = 32, allow_fallback: bool = True,
+              certify: bool = True) -> BatchFabricResult:
     """Play every lane's tape forward together (sparse-fabric semantics).
 
     All lanes must share the same world size n and sub-step count S (any mix
@@ -446,13 +473,20 @@ def batch_run(lanes: Sequence[BatchLane], cm: CostModel, *,
     RS and AG phases of an AllReduce).  Set ``allow_fallback=False`` to get a
     RuntimeError instead of the scalar re-run when a lane's canonical-order
     check trips (used by tests to prove the fast path was exercised).
+
+    ``certify=True`` (the default) consults the static fast-path certifier
+    first: lanes whose (schedule, regime) certificate proves the canonical-
+    order guards cannot trip are exempt from them, and when *every* lane is
+    certified the guards' per-step bookkeeping is skipped outright.  Timing
+    output is bit-identical with ``certify=False`` — the certificate only
+    decides whether the guards need to watch.
     """
     lanes = tuple(lanes)
     if not lanes:
         raise ValueError("batch_run needs at least one lane")
     tapes = [compile_tape(lane.schedule) for lane in lanes]
     n, S = tapes[0].n, tapes[0].S
-    for lane, tape in zip(lanes, tapes):
+    for lane, tape in zip(lanes, tapes, strict=True):
         if tape.n != n or tape.S != S:
             raise ValueError(
                 f"all lanes must share (n, S); got ({tape.n}, {tape.S}) for "
@@ -470,10 +504,18 @@ def batch_run(lanes: Sequence[BatchLane], cm: CostModel, *,
     changed = np.stack([t.arrays["changed_pay"] for t in tapes])
     nb_step = (m[:, None] * counts) / n   # same float-op order as the scalar loop
 
+    if certify:
+        from repro.analysis.certifier import certify_batch  # no cycle: analysis imports core only
+
+        certified = certify_batch(lanes, cm)
+    else:
+        certified = np.zeros(len(lanes), dtype=bool)
+
     node_done, step_done, ok, _ = _play(
         n=n, C=C, cm=cm, nb_step=nb_step, g_step=g_step, hops=hops,
         boundary=boundary, changed=changed, delta_eff=delta_eff,
-        speed=speed, scale=scale)
+        speed=speed, scale=scale, check_order=not bool(certified.all()))
+    ok |= certified  # certified lanes are exact by proof, not by observation
 
     completion = node_done.max(axis=1)
     n_changed = changed.sum(axis=1)
@@ -508,7 +550,8 @@ def batch_run(lanes: Sequence[BatchLane], cm: CostModel, *,
     return BatchFabricResult(
         completion=completion, node_done=node_done, step_done=step_done,
         chunks_moved=chunks_moved, reconfigs_paid=reconfigs_paid,
-        delta_stall=delta_stall, fast_path=ok, lanes=lanes)
+        delta_stall=delta_stall, fast_path=ok, certified=certified,
+        lanes=lanes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -523,6 +566,7 @@ class BatchTraceResult:
     reconfigs_paid: np.ndarray  # [B] int
     delta_stall: np.ndarray     # [B]
     fast_path: np.ndarray       # [B] bool
+    certified: np.ndarray       # [B] bool (static fast-path certificate held)
     port_free: np.ndarray       # [B, n] final per-port busy-until
     lanes: tuple[TraceLane, ...]
 
@@ -559,8 +603,8 @@ class BatchTraceResult:
 
 
 def batch_run_trace(lanes: Sequence[TraceLane], cm: CostModel, *,
-                    chunks_per_msg: int = 32,
-                    allow_fallback: bool = True) -> BatchTraceResult:
+                    chunks_per_msg: int = 32, allow_fallback: bool = True,
+                    certify: bool = True) -> BatchTraceResult:
     """Play every lane's trace forward together with fabric-state carryover.
 
     Each lane's phases are concatenated into one tape: a collective boundary
@@ -571,6 +615,9 @@ def batch_run_trace(lanes: Sequence[TraceLane], cm: CostModel, *,
     the same world size n and per-phase sub-step counts.  Lanes whose
     canonical-order check trips are re-run through the scalar
     `FabricSim.run_trace` oracle unless ``allow_fallback=False``.
+    ``certify`` engages the static fast-path certifier exactly as in
+    `batch_run` (snapshot-resumed lanes are never certified — the restored
+    per-port state breaks the rotational symmetry the certificate needs).
     """
     lanes = tuple(lanes)
     if not lanes:
@@ -578,7 +625,7 @@ def batch_run_trace(lanes: Sequence[TraceLane], cm: CostModel, *,
     tapes = [[compile_tape(sched) for sched, _ in lane.phases] for lane in lanes]
     n = tapes[0][0].n
     shape = tuple(t.S for t in tapes[0])
-    for lane, ts in zip(lanes, tapes):
+    for _lane, ts in zip(lanes, tapes, strict=True):
         if ts[0].n != n or tuple(t.S for t in ts) != shape:
             raise ValueError(
                 f"all trace lanes must share (n, per-phase S); got "
@@ -601,8 +648,8 @@ def batch_run_trace(lanes: Sequence[TraceLane], cm: CostModel, *,
                         for ts in tapes])
     nb_step = np.stack([
         np.concatenate([(m * t.arrays["counts"]) / n
-                        for (_, m), t in zip(lane.phases, ts)])
-        for lane, ts in zip(lanes, tapes)])
+                        for (_, m), t in zip(lane.phases, ts, strict=True)])
+        for lane, ts in zip(lanes, tapes, strict=True)])
     # a phase start opens a new segment (gate reset) and rewires only the
     # circuits that differ from the previous phase's final configuration
     for k in phase_start[1:]:
@@ -630,10 +677,19 @@ def batch_run_trace(lanes: Sequence[TraceLane], cm: CostModel, *,
             init_paid[b] = snap.reconfigs_paid
             init_stall[b] = snap.delta_stall
 
+    if certify:
+        from repro.analysis.certifier import certify_trace_batch  # no cycle
+
+        certified = certify_trace_batch(lanes, cm)
+    else:
+        certified = np.zeros(B, dtype=bool)
+
     node_done, step_done, ok, port_free = _play(
         n=n, C=C, cm=cm, nb_step=nb_step, g_step=g_step, hops=hops,
         boundary=boundary, changed=changed, delta_eff=delta_eff,
-        speed=speed, scale=scale, F0=F0, ready0=ready0, changed0=changed0)
+        speed=speed, scale=scale, F0=F0, ready0=ready0, changed0=changed0,
+        check_order=not bool(certified.all()))
+    ok |= certified  # certified lanes are exact by proof, not by observation
 
     completion = node_done.max(axis=1)
     phase_done = step_done[:, phase_last]
@@ -673,7 +729,7 @@ def batch_run_trace(lanes: Sequence[TraceLane], cm: CostModel, *,
         completion=completion, node_done=node_done, step_done=step_done,
         phase_done=phase_done, chunks_moved=chunks_moved,
         reconfigs_paid=reconfigs_paid, delta_stall=delta_stall,
-        fast_path=ok, port_free=port_free, lanes=lanes)
+        fast_path=ok, certified=certified, port_free=port_free, lanes=lanes)
 
 
 def batch_completion_times(schedules: Sequence[Schedule], m: float,

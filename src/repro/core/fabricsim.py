@@ -157,7 +157,7 @@ def trace_boundary_changed(schedules: Sequence[Schedule]) -> tuple[int, ...]:
     """
     return tuple(
         changed_links(prev.n, prev.link_offsets()[-1], nxt.link_offsets()[0])
-        for prev, nxt in zip(schedules, schedules[1:]))
+        for prev, nxt in zip(schedules, schedules[1:], strict=False))
 
 
 # canonical implementations live in batchsim (imported by both engines)
@@ -350,7 +350,7 @@ class FabricSim:
         step_done: list[float] = []
         chunks_moved = 0
         for off, cnt, g, xk in zip(tape.offsets, tape.counts, tape.g_step,
-                                   tape.boundary):
+                                   tape.boundary, strict=True):
             if xk:
                 done += cm.delta
             total += cm.alpha_s
@@ -398,7 +398,7 @@ class FabricSim:
         seg_of: list[int] = []
         seg_g: list[int] = []
         seg_hops: list[int] = []
-        for (_, m), tape in zip(phases, tapes):
+        for (_, m), tape in zip(phases, tapes, strict=True):
             base = len(seg_g)
             offsets.extend(tape.offsets)
             hops.extend(tape.hops)

@@ -1,0 +1,49 @@
+"""Shared strict-JSON-loader helpers.
+
+Every ``from_dict`` loader in the repo (traces, plan requests/results, serve
+requests) validates its payload through these before constructing objects:
+unknown fields and missing required fields fail *at the loader* with a
+`ValueError` naming the offending keys, instead of deferring to an obscure
+KeyError/TypeError deep inside a constructor — a corrupted or
+version-skewed cached artifact should be rejected at the trust boundary it
+crosses, not half-loaded.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+
+def require_keys(d: Mapping, *, required: Sequence[str],
+                 optional: Sequence[str] = (), what: str = "object") -> None:
+    """Reject payloads with missing required or unknown keys."""
+    if not isinstance(d, Mapping):
+        raise ValueError(f"{what} payload must be a JSON object, got "
+                         f"{type(d).__name__}")
+    missing = [k for k in required if k not in d]
+    if missing:
+        raise ValueError(f"{what} payload is missing required "
+                         f"field(s) {missing}")
+    allowed = set(required) | set(optional)
+    unknown = sorted(k for k in d if k not in allowed)
+    if unknown:
+        raise ValueError(
+            f"{what} payload has unknown field(s) {unknown}; expected a "
+            f"subset of {sorted(allowed)}")
+
+
+def require_positive_payload(m_bytes, what: str = "object") -> float:
+    """Serialized payloads must be strictly positive finite byte counts.
+
+    (In-memory zero-byte events are legal — e.g. a padding phase — but a
+    stored/shipped plan with m_bytes <= 0 is a corrupt artifact.)
+    """
+    try:
+        m = float(m_bytes)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"{what} payload m_bytes must be a number, got {m_bytes!r}"
+        ) from None
+    if not m > 0.0 or m != m or m == float("inf"):
+        raise ValueError(
+            f"{what} payload m_bytes must be > 0 and finite, got {m_bytes!r}")
+    return m

@@ -91,7 +91,8 @@ def changed_links(n: int, prev: int | Sequence[int],
 
     if isinstance(prev, int) and isinstance(nxt, int):
         return 0 if prev % n == nxt % n else n
-    return sum(1 for a, b in zip(norm("prev", prev), norm("nxt", nxt)) if a != b)
+    return sum(1 for a, b in zip(norm("prev", prev), norm("nxt", nxt),
+                                 strict=True) if a != b)
 
 
 @dataclasses.dataclass(frozen=True)

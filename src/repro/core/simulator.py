@@ -116,7 +116,7 @@ def collective_time(
 
     startup = hop_lat = tx = 0.0
     per_step: list[StepCost] = []
-    for st, g in zip(steps, link):
+    for st, g in zip(steps, link, strict=True):
         if st.offset % g:
             raise ValueError(f"invalid schedule: step {st.index} unreachable (offset "
                              f"{st.offset}, link {g})")
@@ -177,7 +177,7 @@ def collective_time_overlap(
             f"reconfigured step count {len(recon_steps)} != "
             f"boundary count {len(changed)}")
     sparse_by_step = {k: cm.delta_sparse(c, overlap)
-                      for k, c in zip(recon_steps, changed)}
+                      for k, c in zip(recon_steps, changed, strict=True)}
     new_steps = tuple(
         dataclasses.replace(sc, time=sc.time - cm.delta + sparse_by_step[sc.index])
         if sc.reconfigured else sc

@@ -115,7 +115,7 @@ def validate_schedule_reachability(n: int, offsets: list[int], link_offsets: lis
                       reversed for AG; 2^k in the radix-2 case)
     link_offsets[k] : OCS link offset in force during sub-step k
     """
-    for k, (mo, lo) in enumerate(zip(offsets, link_offsets)):
+    for k, (mo, lo) in enumerate(zip(offsets, link_offsets, strict=True)):
         if mo % lo != 0:
             raise ValueError(
                 f"step {k}: message offset {mo} not a multiple of link offset {lo}; "

@@ -161,8 +161,8 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, scale, causal, window,
     dvec = jnp.sum(dof.astype(jnp.float32) * of.astype(jnp.float32), axis=-1)
 
     sq_p, sk_p = sq + pq, sk + pk
-    kw = dict(scale=scale, causal=causal, window=window, block_q=block_q,
-              block_k=block_k, off=sk - sq, sk=sk)
+    kw = {"scale": scale, "causal": causal, "window": window,
+          "block_q": block_q, "block_k": block_k, "off": sk - sq, "sk": sk}
 
     q_spec = pl.BlockSpec((1, block_q, d), lambda bh, a, bq: (bh, bq, 0))
     k_spec_kv = pl.BlockSpec((1, block_k, d), lambda bh, a, bq: (bh, a, 0))

@@ -143,7 +143,7 @@ VARIANTS = ("baseline", "logits-sharded", "moe-ep-data", "remat-dots",
 
 
 def _apply_variant(cfg, variant: str):
-    tweaks = set(v.strip() for v in variant.split(",") if v.strip())
+    tweaks = {v.strip() for v in variant.split(",") if v.strip()}
     unknown = tweaks - set(VARIANTS)
     if unknown:
         raise ValueError(f"unknown variant(s) {unknown}; known: {VARIANTS}")

@@ -46,7 +46,7 @@ def serve_requests(cfg, params, requests: list[Request], max_seq: int,
     budget = max(r.max_new_tokens for r in requests)
     t0 = time.time()
     for i in range(budget):
-        for r, t in zip(requests, np.asarray(tok)[:, 0]):
+        for r, t in zip(requests, np.asarray(tok)[:, 0], strict=False):
             if len(r.out) < r.max_new_tokens:
                 r.out.append(int(t))
         if i == budget - 1:

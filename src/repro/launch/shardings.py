@@ -42,7 +42,7 @@ def _leaf_spec(mesh, path_keys: list[str], shape: tuple[int, ...],
 
     def guard(spec_core):
         fixed = []
-        for dim, ax in zip(core, spec_core):
+        for dim, ax in zip(core, spec_core, strict=False):
             fixed.append(ax if ax is not None and _axis_fits(mesh, ax, dim)
                          else None)
         return P(*([None] * lead + fixed))

@@ -174,7 +174,7 @@ def init_params(cfg: ArchConfig, key) -> PyTree:
     for kinds, reps in segments(cfg):
         seg_key, k = jax.random.split(seg_key)
         per_pos = []
-        for pos, kind in enumerate(kinds):
+        for _pos, kind in enumerate(kinds):
             k, kk = jax.random.split(k)
             per_pos.append(_stack_init(
                 lambda kk_, kind_=kind: init_block(cfg, kk_, kind_, dtype,
@@ -369,7 +369,7 @@ def prefill(cfg: ArchConfig, params, batch, max_seq: int):
 def _fill_cross_kv(cfg, params, caches, batch):
     enc_out = _encode(cfg, params, batch["frames"])
     new = []
-    for si, (kinds, reps) in enumerate(segments(cfg)):
+    for si, (kinds, _reps) in enumerate(segments(cfg)):
         per_pos = []
         for pos in range(len(kinds)):
             c = caches[si][pos]

@@ -19,6 +19,7 @@ import json
 from typing import Literal
 
 from repro.core.cost_model import CostModel, PAPER_DEFAULT
+from repro.core.jsonio import require_keys, require_positive_payload
 from repro.core.schedules import Schedule
 from repro.core.simulator import TimeBreakdown
 
@@ -169,9 +170,19 @@ class PlanRequest:
 
     @staticmethod
     def from_dict(d: dict) -> "PlanRequest":
+        require_keys(
+            d, required=("kind", "n", "m_bytes", "cost_model"),
+            optional=("r", "fabric", "overlap", "objective",
+                      "paper_faithful", "strategies", "max_R",
+                      "delta_budget", "ports", "init_g"),
+            what="PlanRequest")
+        require_keys(d["cost_model"],
+                     required=("alpha_s", "alpha_h", "bandwidth", "delta"),
+                     what="PlanRequest.cost_model")
         strategies = d.get("strategies")
         return PlanRequest(
-            kind=d["kind"], n=d["n"], m_bytes=d["m_bytes"],
+            kind=d["kind"], n=d["n"],
+            m_bytes=require_positive_payload(d["m_bytes"], "PlanRequest"),
             cost_model=CostModel(**d["cost_model"]),
             r=d.get("r", 2), fabric=d.get("fabric", "ocs"),
             overlap=d.get("overlap", 0.0),
@@ -214,6 +225,9 @@ class RankedAlternative:
 
     @staticmethod
     def from_dict(d: dict) -> "RankedAlternative":
+        require_keys(d, required=("strategy", "impl", "predicted_time",
+                                  "score"),
+                     optional=("R", "x"), what="RankedAlternative")
         x = d.get("x")
         return RankedAlternative(
             strategy=d["strategy"], impl=d["impl"],
@@ -258,15 +272,33 @@ class PlanResult:
 
     @staticmethod
     def from_dict(d: dict) -> "PlanResult":
+        require_keys(
+            d, required=("request", "strategy", "impl", "predicted_time",
+                         "breakdown"),
+            optional=("version", "schedule", "rs_schedule", "ag_schedule",
+                      "alternatives"),
+            what="PlanResult")
+        request = PlanRequest.from_dict(d["request"])
+        schedules = {
+            name: _schedule_from_dict(d.get(name))
+            for name in ("schedule", "rs_schedule", "ag_schedule")
+        }
+        for name, sched in schedules.items():
+            if sched is None:
+                continue
+            if sched.n != request.n or sched.r != request.r:
+                raise ValueError(
+                    f"PlanResult {name} is for (n={sched.n}, r={sched.r}) "
+                    f"but the request is for (n={request.n}, r={request.r})")
         return PlanResult(
-            request=PlanRequest.from_dict(d["request"]),
+            request=request,
             strategy=d["strategy"],
             impl=d["impl"],
             predicted_time=d["predicted_time"],
             breakdown=TimeBreakdown.from_dict(d["breakdown"]),
-            schedule=_schedule_from_dict(d.get("schedule")),
-            rs_schedule=_schedule_from_dict(d.get("rs_schedule")),
-            ag_schedule=_schedule_from_dict(d.get("ag_schedule")),
+            schedule=schedules["schedule"],
+            rs_schedule=schedules["rs_schedule"],
+            ag_schedule=schedules["ag_schedule"],
             alternatives=tuple(RankedAlternative.from_dict(a)
                                for a in d.get("alternatives", [])),
         )
@@ -293,4 +325,5 @@ def _schedule_to_dict(s: Schedule | None) -> dict | None:
 def _schedule_from_dict(d: dict | None) -> Schedule | None:
     if d is None:
         return None
+    require_keys(d, required=("kind", "n", "x", "r"), what="Schedule")
     return Schedule(kind=d["kind"], n=d["n"], x=tuple(d["x"]), r=d["r"])

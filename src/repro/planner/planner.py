@@ -45,6 +45,7 @@ import dataclasses
 import json
 from typing import NamedTuple, Sequence
 
+from repro.analysis import raise_on_violations, verify_plan
 from repro.core import baselines
 from repro.core.batchsim import batch_completion_times
 from repro.core.schedules import Schedule, changed_links, static_schedule
@@ -80,17 +81,25 @@ class Planner:
                  immutable `PlanResult`s, safe to share between callers).
     sim_chunks : chunks per message used by the ``ocs-sim`` event scoring
                  (the batch engine's MTU-like pipelining knob).
+    verify     : statically verify every freshly-planned result
+                 (`repro.analysis.verify_plan`) *before* it enters the plan
+                 cache — a corrupt plan raises `VerificationError` instead
+                 of being cached and served to every later hit.  Cache hits
+                 are returns of already-verified objects and are not
+                 re-checked, so the serving hot path is unaffected.
 
     Candidate generation reuses the memoized all-R DP tables in
     `core.schedules` and the compiled schedule tapes in `core.batchsim`, so
     repeated planning at the same (n, r) is cheap even on cache misses.
     """
 
-    def __init__(self, *, cache_size: int = 128, sim_chunks: int = 8):
+    def __init__(self, *, cache_size: int = 128, sim_chunks: int = 8,
+                 verify: bool = True):
         if cache_size < 0:
             raise ValueError(f"cache_size must be >= 0, got {cache_size}")
         self.cache_size = int(cache_size)
         self.sim_chunks = max(1, int(sim_chunks))
+        self.verify = bool(verify)
         self._cache: collections.OrderedDict[str, PlanResult] = \
             collections.OrderedDict()
         self._hits = 0
@@ -120,7 +129,7 @@ class Planner:
 
     def plan(self, req: PlanRequest) -> PlanResult:
         if self.cache_size == 0:
-            return self._plan_uncached(req)
+            return self._verified(self._plan_uncached(req))
         key = self.cache_key(req)
         hit = self._cache.get(key)
         if hit is not None:
@@ -128,10 +137,19 @@ class Planner:
             self._cache.move_to_end(key)
             return hit
         self._misses += 1
-        res = self._plan_uncached(req)
+        # verify-before-cache: a result that fails static verification must
+        # never be cached, or every later hit would serve the corruption
+        res = self._verified(self._plan_uncached(req))
         self._cache[key] = res
         while len(self._cache) > self.cache_size:
             self._cache.popitem(last=False)
+        return res
+
+    def _verified(self, res: PlanResult) -> PlanResult:
+        if self.verify:
+            raise_on_violations(
+                verify_plan(res),
+                context=f"plan({res.request.kind}, n={res.request.n})")
         return res
 
     def plan_batch(self, requests: Sequence[PlanRequest]) -> tuple[PlanResult, ...]:
@@ -196,7 +214,7 @@ class Planner:
         completions = batch_completion_times(
             [cands[i].schedule for i in idx], req.m_bytes, req.cost_model,
             overlap=req.overlap, chunks_per_msg=self.sim_chunks)
-        return {i: float(t) for i, t in zip(idx, completions)}
+        return {i: float(t) for i, t in zip(idx, completions, strict=True)}
 
     def _plan_collective(self, req: PlanRequest) -> PlanResult:
         cands: list[Candidate] = []

@@ -91,6 +91,12 @@ class OnlinePlanner:
                    fresh fabric, matching the offline planner.
     planner      : a `repro.planner.Planner` (defaults to the process-wide
                    `default_planner()`, sharing its plan cache).
+    verify       : statically audit every window DP solution — including
+                   warm-started suffix re-plans after a misprediction —
+                   before any of it can be committed
+                   (`repro.analysis.verify_window_choice`); a corrupt
+                   candidate raises `VerificationError` instead of moving
+                   the committed (g, spent) fabric-state ledger.
 
     Drive it with `predict` (append predicted events), `observe` (the next
     event actually arrived — commit its schedule), and `drop_predicted` (a
@@ -101,7 +107,7 @@ class OnlinePlanner:
     def __init__(self, n: int, *, r: int = 2, cm: CostModel = PAPER_DEFAULT,
                  window: int = 4, fabric: str = "ocs", overlap: float = 0.0,
                  delta_budget: float | None = None, init_g: int | None = None,
-                 init_spent: int = 0, planner=None):
+                 init_spent: int = 0, planner=None, verify: bool = True):
         if n < 2:
             raise ValueError(f"need at least 2 nodes, got n={n}")
         if r < 2:
@@ -126,6 +132,7 @@ class OnlinePlanner:
         self.delta_budget = delta_budget
         self.window = int(window)
         self.planner = planner
+        self.verify = bool(verify)
         unit = cm.delta_sparse(n, overlap)
         self._cap: int | None = None
         if delta_budget is not None and unit > 0:
@@ -224,7 +231,7 @@ class OnlinePlanner:
             self._reuses += 1
         committed = []
         phases = _flatten([event])
-        for (kind, m, tag), cand in zip(phases, self._plan):
+        for (kind, m, tag), cand in zip(phases, self._plan, strict=False):
             committed.append(_phase_plan(kind, m, tag, cand))
             self._g = cand.g_last
             self._spent += cand.paid
@@ -246,6 +253,16 @@ class OnlinePlanner:
             self.n, cand_lists, self.cm, overlap=self.overlap,
             init_g=self._g, init_spent=self._spent, cap=self._cap,
             label=f"{len(window)}-event window")
+        if self.verify:
+            # audit-before-commit: the suffix re-plan is checked against the
+            # committed (g, spent) ledger before any of it moves that ledger
+            from repro.analysis import raise_on_violations, verify_window_choice
+
+            raise_on_violations(
+                verify_window_choice(
+                    self.n, self._plan, init_spent=self._spent,
+                    cap=self._cap, label=f"{len(window)}-event window"),
+                context=f"online window n={self.n}")
         self._plan_events = list(window)
         self._replans += 1
 

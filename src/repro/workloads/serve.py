@@ -37,6 +37,7 @@ from collections import OrderedDict
 from typing import Sequence
 
 from repro.core.cost_model import CostModel, PAPER_DEFAULT
+from repro.core.jsonio import require_keys
 from repro.core.schedules import changed_links
 
 from .trace_planner import (TRACE_FABRICS, PhasePlan, phase_candidates,
@@ -78,9 +79,16 @@ class ServeRequest:
 
     @staticmethod
     def from_dict(d: dict) -> "ServeRequest":
+        require_keys(d, required=("events", "n"), optional=("r", "init_g"),
+                     what="ServeRequest")
+        init_g = d.get("init_g")
+        if init_g is not None and not 1 <= init_g < d["n"]:
+            raise ValueError(
+                f"ServeRequest init_g must be a link offset in [1, n), got "
+                f"init_g={init_g} with n={d['n']}")
         return ServeRequest(
             events=tuple(CollectiveEvent.from_dict(e) for e in d["events"]),
-            n=d["n"], r=d.get("r", 2), init_g=d.get("init_g"))
+            n=d["n"], r=d.get("r", 2), init_g=init_g)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,10 +139,16 @@ class PlanService:
     cache_size : serving-LRU capacity (entries are immutable `ServedPlan`s).
     planner    : the shared `repro.planner.Planner` the candidate tables go
                  through (defaults to the process-wide `default_planner()`).
+    verify     : statically audit every freshly-planned window
+                 (`repro.analysis.verify_served_plan`) before it is cached
+                 or served — a corrupt window raises `VerificationError`
+                 instead of becoming a production incident on every later
+                 cache hit.  Hits return already-audited plans unchecked.
     """
 
     def __init__(self, *, cm: CostModel = PAPER_DEFAULT, fabric: str = "ocs",
-                 overlap: float = 0.0, cache_size: int = 512, planner=None):
+                 overlap: float = 0.0, cache_size: int = 512, planner=None,
+                 verify: bool = True):
         if fabric not in TRACE_FABRICS:
             raise ValueError(
                 f"fabric must be one of {TRACE_FABRICS}, got {fabric!r}")
@@ -149,6 +163,7 @@ class PlanService:
         self.cm, self.fabric, self.overlap = cm, fabric, float(overlap)
         self.cache_size = int(cache_size)
         self.planner = planner
+        self.verify = bool(verify)
         self._cache: OrderedDict[str, ServedPlan] = OrderedDict()
         self._hits = 0
         self._misses = 0
@@ -207,23 +222,32 @@ class PlanService:
                            init_g=req.init_g,
                            label=f"{len(req.events)}-event serve window")
         plans = [_phase_plan(kind, m, tag, cand)
-                 for (kind, m, tag), cand in zip(phases, chosen)]
+                 for (kind, m, tag), cand in zip(phases, chosen, strict=True)]
         entry_changed = (0 if req.init_g is None else
                          changed_links(req.n, req.init_g, chosen[0].g_first))
         entry_cost = self.cm.delta_sparse(entry_changed, self.overlap)
         boundary_changed, boundary_cost = [], []
-        for prev, nxt in zip(chosen, chosen[1:]):
+        for prev, nxt in zip(chosen, chosen[1:], strict=False):
             bc = changed_links(req.n, prev.g_last, nxt.g_first)
             boundary_changed.append(bc)
             boundary_cost.append(self.cm.delta_sparse(bc, self.overlap))
         total = (entry_cost + sum(p.time for p in plans)
                  + sum(boundary_cost))
-        return ServedPlan(
+        plan = ServedPlan(
             request=req, phases=tuple(plans),
             entry_changed=entry_changed, entry_cost=entry_cost,
             boundary_changed=tuple(boundary_changed),
             boundary_cost=tuple(boundary_cost), total_time=total,
             final_g=chosen[-1].g_last)
+        if self.verify:
+            # audit-before-serve: runs on the cache-miss path only, so the
+            # hot hit path stays microsecond-scale
+            from repro.analysis import raise_on_violations, verify_served_plan
+
+            raise_on_violations(
+                verify_served_plan(plan, self.cm, self.overlap),
+                context=f"serve window n={req.n} ({len(req.events)} events)")
+        return plan
 
 
 # --- synthetic request storm --------------------------------------------------

@@ -276,7 +276,7 @@ def _finish(trace: Trace, mode: str, fabric: str, overlap: float,
     """Assemble boundary accounting + totals for a chosen phase sequence."""
     n = trace.n
     boundary_changed, boundary_cost = [], []
-    for prev, nxt in zip(phases, phases[1:]):
+    for prev, nxt in zip(phases, phases[1:], strict=False):
         if full_boundaries:
             # cold fabric: the next phase's initial topology is always
             # re-established with a full-fabric swap
@@ -372,6 +372,6 @@ def plan_trace(trace: Trace, cm: CostModel = PAPER_DEFAULT, *,
     chosen = window_dp(n, cand_lists, cm, overlap=overlap, cap=cap,
                        label=f"trace {trace.name!r}")
     plans = [_phase_plan(kind, m, tag, cand)
-             for (kind, m, tag), cand in zip(phases, chosen)]
+             for (kind, m, tag), cand in zip(phases, chosen, strict=True)]
     return _finish(trace, mode, fabric, overlap, delta_budget, cm, plans,
                    full_boundaries=False)

@@ -29,6 +29,7 @@ import json
 import random
 from typing import Sequence
 
+from repro.core.jsonio import require_keys, require_positive_payload
 from repro.models.config import ArchConfig
 
 EVENT_KINDS = ("a2a", "rs", "ag", "ar")
@@ -62,8 +63,12 @@ class CollectiveEvent:
 
     @staticmethod
     def from_dict(d: dict) -> "CollectiveEvent":
-        return CollectiveEvent(kind=d["kind"], m_bytes=d["m_bytes"],
-                               tag=d.get("tag", ""))
+        require_keys(d, required=("kind", "m_bytes"), optional=("tag",),
+                     what="CollectiveEvent")
+        return CollectiveEvent(
+            kind=d["kind"],
+            m_bytes=require_positive_payload(d["m_bytes"], "CollectiveEvent"),
+            tag=d.get("tag", ""))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +121,8 @@ class Trace:
 
     @staticmethod
     def from_dict(d: dict) -> "Trace":
+        require_keys(d, required=("name", "n", "events"),
+                     optional=("r", "version"), what="Trace")
         return Trace(name=d["name"], n=d["n"], r=d.get("r", 2),
                      events=tuple(CollectiveEvent.from_dict(e)
                                   for e in d["events"]))

@@ -28,7 +28,7 @@ def quiet(*_):
     return None
 
 # --- 1. bridge grad sync equals gspmd sync ------------------------------------
-kw = dict(arch="stablelm-3b", steps=4, batch_size=8, seq_len=32)
+kw = {"arch": "stablelm-3b", "steps": 4, "batch_size": 8, "seq_len": 32}
 _, _, losses_gspmd = train(TrainConfig(grad_sync="gspmd", **kw), quiet)
 _, _, losses_bridge = train(TrainConfig(grad_sync="bridge", **kw), quiet)
 np.testing.assert_allclose(losses_bridge, losses_gspmd, rtol=2e-4)
@@ -69,8 +69,8 @@ print("ok gpipe == sequential")
 
 # --- 5. elastic restart: save on (8 data), resume on (2 data x 4 model) -----------
 with tempfile.TemporaryDirectory() as d:
-    kw2 = dict(arch="stablelm-3b", batch_size=8, seq_len=32,
-               checkpoint_dir=d, checkpoint_every=2)
+    kw2 = {"arch": "stablelm-3b", "batch_size": 8, "seq_len": 32,
+           "checkpoint_dir": d, "checkpoint_every": 2}
     _, _, l1 = train(TrainConfig(steps=2, **kw2), quiet)
     _, _, l2 = train(TrainConfig(steps=4, mesh_shape=(2, 4),
                                  mesh_axes=("data", "model"), **kw2), quiet)

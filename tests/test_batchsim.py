@@ -184,13 +184,13 @@ def test_tape_structure_matches_schedule():
     assert tape.offsets == tuple(st.offset for st in steps)
     assert list(tape.g_step) == sched.link_offsets()
     assert tape.hops == tuple(st.offset // g for st, g in
-                              zip(steps, sched.link_offsets()))
+                              zip(steps, sched.link_offsets(), strict=True))
     assert tape.changed_links == sched.reconfig_changed_links()
     # duplicate-gcd boundary (first) is free, second pays
     assert tape.changed_pay == (False, False, False, True, False, False)
     # m-scaling is exact: nbytes == m * counts / n bit-for-bit
     m = 3.7 * MB
-    for st, cnt in zip(steps_for("a2a", 16, m, 4), tape.counts):
+    for st, cnt in zip(steps_for("a2a", 16, m, 4), tape.counts, strict=True):
         assert st.nbytes == m * cnt / 16
 
 

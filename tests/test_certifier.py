@@ -1,0 +1,215 @@
+"""Static fast-path certifier: soundness and engine-integration tests.
+
+The certificate claims a uniform lane cannot trip either of batchsim's
+runtime canonical-order guards, so its vectorized playback is exact without
+them.  These tests hold it to that claim:
+
+  - differential grid: certified lanes ride the fast path AND are bit-exact
+    against the scalar sparse `FabricSim` oracle;
+  - the certificate is refused whenever a soundness precondition fails
+    (per-node skew, snapshot-resumed traces, alpha_s == 0 regimes);
+  - guard-free playback (``certify=True`` with a fully certified batch) is
+    bit-identical to guard-checked playback (``certify=False``).
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.analysis import (certify_batch, certify_lane, certify_trace_batch,
+                            certify_trace_lane)
+from repro.core import FabricSim, PAPER_DEFAULT, Schedule, straggler_speeds
+from repro.core.batchsim import (BatchLane, TraceLane, batch_run,
+                                 batch_run_trace)
+from repro.core.bruck import schedule_length
+from repro.core.schedules import every_step_schedule, static_schedule
+
+MB = 1024.0 ** 2
+REL_TOL = 1e-9
+
+
+def random_schedule(rng: random.Random, kind: str, n: int, r: int = 2) -> Schedule:
+    s = schedule_length(kind, n, r)
+    x = tuple([0] + [rng.randint(0, 1) for _ in range(s - 1)])
+    return Schedule(kind=kind, n=n, x=x, r=r)
+
+
+def scalar_reference(lane: BatchLane, cm, chunks: int):
+    sim = FabricSim(
+        chunks_per_msg=chunks, overlap=lane.overlap, mode="sparse",
+        link_speed=list(lane.link_speed) if lane.link_speed else None,
+        payload_scale=list(lane.payload_scale) if lane.payload_scale else None)
+    eff_cm = cm if lane.delta is None else cm.replace(delta=lane.delta)
+    return sim.run(lane.schedule, lane.m_bytes, eff_cm)
+
+
+# --- never unsafe-but-certified: the differential grid ------------------------
+
+
+@pytest.mark.parametrize("n", [6, 12, 48])
+def test_certified_lanes_bit_exact_vs_scalar_oracle(n):
+    """Same seeded grid shape as the batchsim fuzz: every certified lane
+    must take the fast path and reproduce the scalar oracle exactly."""
+    rng = random.Random(2000 + n)
+    certified_seen = 0
+    for r in (2, 3):
+        for kind in ("a2a", "rs", "ag"):
+            for straggler in (None, {n // 2: 0.3}):
+                sched = random_schedule(rng, kind, n, r)
+                m = rng.choice([0.25, 2.0]) * MB
+                delta = rng.choice([1e-6, 1e-3, 15e-3])
+                chunks = rng.choice([1, 2, 4])
+                speed = (tuple(straggler_speeds(n, straggler))
+                         if straggler else None)
+                cm = PAPER_DEFAULT.replace(delta=delta)
+                lane = BatchLane(schedule=sched, m_bytes=m, link_speed=speed)
+                res = batch_run([lane], cm, chunks_per_msg=chunks)
+                if not res.certified[0]:
+                    continue
+                certified_seen += 1
+                assert res.fast_path[0]  # certified implies fast path
+                ref = scalar_reference(lane, cm, chunks)
+                assert res.completion[0] == pytest.approx(
+                    ref.completion, rel=REL_TOL)
+                np.testing.assert_allclose(res.node_done[0], ref.node_done,
+                                           rtol=REL_TOL)
+                np.testing.assert_allclose(res.step_done[0], ref.step_done,
+                                           rtol=REL_TOL)
+                assert res.chunks_moved[0] == ref.chunks_moved
+                assert res.reconfigs_paid[0] == ref.reconfigs_paid
+    # every uniform lane certifies under the paper regime (alpha_s > 0)
+    assert certified_seen >= 6
+
+
+def test_exhaustive_small_n_certificates_sound():
+    """All 0/1 tails at n=8: certificate granted => fast path, no fallback,
+    oracle-exact, for every kind under the paper cost model."""
+    for kind in ("a2a", "rs", "ag"):
+        s = schedule_length(kind, 8, 2)
+        for bits in range(1 << (s - 1)):
+            x = (0,) + tuple((bits >> i) & 1 for i in range(s - 1))
+            lane = BatchLane(schedule=Schedule(kind=kind, n=8, x=x, r=2),
+                             m_bytes=MB)
+            assert certify_lane(lane, PAPER_DEFAULT)
+            res = batch_run([lane], PAPER_DEFAULT, chunks_per_msg=2,
+                            allow_fallback=False)
+            assert res.certified[0] and res.fast_path[0]
+            ref = scalar_reference(lane, PAPER_DEFAULT, 2)
+            assert res.completion[0] == pytest.approx(ref.completion,
+                                                      rel=REL_TOL)
+
+
+# --- refusal cases ------------------------------------------------------------
+
+
+def test_skewed_lanes_are_not_certified():
+    sched = every_step_schedule("a2a", 12)
+    slow = tuple(straggler_speeds(12, {3: 0.25}))
+    skew = [1.0] * 12
+    skew[5] = 4.0
+    assert not certify_lane(
+        BatchLane(schedule=sched, m_bytes=MB, link_speed=slow), PAPER_DEFAULT)
+    assert not certify_lane(
+        BatchLane(schedule=sched, m_bytes=MB, payload_scale=tuple(skew)),
+        PAPER_DEFAULT)
+    assert certify_lane(BatchLane(schedule=sched, m_bytes=MB), PAPER_DEFAULT)
+
+
+def test_alpha_s_zero_regime_is_not_certified():
+    free = PAPER_DEFAULT.replace(alpha_s=0.0)
+    lane = BatchLane(schedule=every_step_schedule("a2a", 8), m_bytes=MB)
+    assert not certify_lane(lane, free)
+    res = batch_run([lane], free, chunks_per_msg=2)
+    assert not res.certified[0]  # guards stay armed; result still exact
+    ref = scalar_reference(lane, free, 2)
+    assert res.completion[0] == pytest.approx(ref.completion, rel=REL_TOL)
+
+
+def test_multi_hop_zero_payload_needs_alpha_h():
+    """With alpha_s > 0 but alpha_h == 0 and zero payload, guard 1 is only
+    provably idle when every relay is single-hop."""
+    cm = PAPER_DEFAULT.replace(alpha_h=0.0)
+    single_hop = every_step_schedule("a2a", 16)  # per-step gcd => hops == 1
+    multi_hop = static_schedule("a2a", 16)       # g=1 segment relays hops > 1
+    assert certify_lane(BatchLane(schedule=single_hop, m_bytes=0.0), cm)
+    assert not certify_lane(BatchLane(schedule=multi_hop, m_bytes=0.0), cm)
+    # positive payload restores the strict guard-1 inequality
+    assert certify_lane(BatchLane(schedule=multi_hop, m_bytes=MB), cm)
+
+
+def test_snapshot_resumed_trace_lane_not_certified():
+    sched = every_step_schedule("a2a", 8)
+    phases = ((sched, MB), (every_step_schedule("ag", 8), MB / 2))
+    base = TraceLane(phases=phases)
+    assert certify_trace_lane(base, PAPER_DEFAULT)
+    warm = batch_run_trace([base], PAPER_DEFAULT, chunks_per_msg=2)
+    snap = warm.snapshot(0)
+    resumed = TraceLane(phases=phases, initial=snap)
+    assert not certify_trace_lane(resumed, PAPER_DEFAULT)
+
+
+# --- guard-free playback is bit-identical -------------------------------------
+
+
+def test_certify_flag_does_not_change_results():
+    rng = random.Random(31)
+    n = 16
+    lanes = [BatchLane(schedule=random_schedule(rng, kind, n),
+                       m_bytes=rng.choice([0.5, 2.0]) * MB,
+                       overlap=rng.choice([0.0, 0.5]))
+             for kind in ("a2a", "rs", "ag") for _ in range(3)]
+    on = batch_run(lanes, PAPER_DEFAULT, chunks_per_msg=4, certify=True)
+    off = batch_run(lanes, PAPER_DEFAULT, chunks_per_msg=4, certify=False)
+    assert on.certified.all()
+    assert not off.certified.any()
+    np.testing.assert_array_equal(on.completion, off.completion)
+    np.testing.assert_array_equal(on.node_done, off.node_done)
+    np.testing.assert_array_equal(on.step_done, off.step_done)
+    np.testing.assert_array_equal(on.chunks_moved, off.chunks_moved)
+    np.testing.assert_array_equal(on.delta_stall, off.delta_stall)
+
+
+def test_certify_flag_does_not_change_trace_results():
+    rng = random.Random(33)
+    n = 12
+    lanes = []
+    for _ in range(4):
+        phases = tuple(
+            (random_schedule(rng, kind, n), rng.choice([0.5, 2.0]) * MB)
+            for kind in ("a2a", "rs", "ag"))
+        lanes.append(TraceLane(phases=phases))
+    on = batch_run_trace(lanes, PAPER_DEFAULT, chunks_per_msg=2, certify=True)
+    off = batch_run_trace(lanes, PAPER_DEFAULT, chunks_per_msg=2,
+                          certify=False)
+    assert on.certified.all()
+    assert not off.certified.any()
+    np.testing.assert_array_equal(on.completion, off.completion)
+    np.testing.assert_array_equal(on.delta_stall, off.delta_stall)
+
+
+def test_mixed_batch_keeps_guards_for_uncertified_lanes():
+    """A straggler lane in the batch keeps the guards armed; the uniform
+    lanes are still certified and everyone stays oracle-exact."""
+    n = 12
+    sched = every_step_schedule("a2a", n)
+    lanes = [
+        BatchLane(schedule=sched, m_bytes=MB),
+        BatchLane(schedule=sched, m_bytes=MB,
+                  link_speed=tuple(straggler_speeds(n, {2: 0.2}))),
+    ]
+    res = batch_run(lanes, PAPER_DEFAULT, chunks_per_msg=4)
+    assert bool(res.certified[0]) and not bool(res.certified[1])
+    for b, lane in enumerate(lanes):
+        ref = scalar_reference(lane, PAPER_DEFAULT, 4)
+        assert res.completion[b] == pytest.approx(ref.completion, rel=REL_TOL)
+
+
+def test_certify_batch_matches_per_lane():
+    sched = every_step_schedule("rs", 8)
+    lanes = [BatchLane(schedule=sched, m_bytes=MB),
+             BatchLane(schedule=sched, m_bytes=MB,
+                       link_speed=tuple(straggler_speeds(8, {1: 0.5})))]
+    mask = certify_batch(lanes, PAPER_DEFAULT)
+    assert mask.dtype == bool and mask.tolist() == [True, False]
+    tl = TraceLane(phases=((sched, MB),))
+    assert certify_trace_batch([tl], PAPER_DEFAULT).tolist() == [True]

@@ -41,7 +41,7 @@ def test_full_pause_matches_collective_time_event_exactly(n, R):
     # the pre-FabricSim accumulation, recomputed by hand:
     steps = steps_for("a2a", n, m, sched.r)
     legacy = sched.R * cm.delta
-    for st, g in zip(steps, sched.link_offsets(steps)):
+    for st, g in zip(steps, sched.link_offsets(steps), strict=True):
         legacy += cm.alpha_s
         legacy += simulate_step(n, g, st.offset, st.nbytes, cm, 8).completion
     res = FabricSim(chunks_per_msg=8, mode="full-pause").run(sched, m, cm)

@@ -28,7 +28,8 @@ def test_checkpoint_roundtrip(tmp_path):
     save(d, 10, tree)
     assert latest_step(d) == 10
     back = restore_into(d, jax.tree.map(lambda x: x, tree))
-    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back),
+                    strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

@@ -13,7 +13,8 @@ KEY = jax.random.PRNGKey(42)
 
 
 def tol(dtype):
-    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=5e-5, rtol=5e-5)
+    return ({"atol": 5e-2, "rtol": 5e-2} if dtype == jnp.bfloat16
+            else {"atol": 5e-5, "rtol": 5e-5})
 
 
 # --- flash attention ----------------------------------------------------------
@@ -66,7 +67,7 @@ def test_flash_attention_grad_matches_ref(case):
         return (fa_ref.attention(q, k, v, causal=causal, window=window) * g).sum()
     g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
     g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
-    for a, b_ in zip(g1, g2):
+    for a, b_ in zip(g1, g2, strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
                                    atol=1e-4, rtol=1e-4)
 
@@ -118,7 +119,7 @@ def test_rg_lru_grad():
     b = jax.random.normal(ks[1], (1, 20, 8))
     g1 = jax.grad(lambda a, b: rg_lru(a, b)[0].sum(), argnums=(0, 1))(a, b)
     g2 = jax.grad(lambda a, b: lru_ref.rg_lru_scan(a, b)[0].sum(), argnums=(0, 1))(a, b)
-    for x, y in zip(g1, g2):
+    for x, y in zip(g1, g2, strict=True):
         np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5, rtol=1e-5)
 
 
@@ -146,7 +147,7 @@ def test_wkv6_matches_ref(dims, dtype):
     np.testing.assert_allclose(np.asarray(y, np.float32),
                                np.asarray(yr, np.float32),
                                **(tol(dtype) if dtype == jnp.bfloat16
-                                  else dict(atol=5e-4, rtol=5e-4)))
+                                  else {"atol": 5e-4, "rtol": 5e-4}))
     np.testing.assert_allclose(np.asarray(s), np.asarray(sr), atol=5e-4, rtol=5e-4)
 
 

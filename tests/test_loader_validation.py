@@ -1,0 +1,171 @@
+"""Regression tests for strict JSON-loader validation (repro.core.jsonio).
+
+Corrupted or version-skewed serialized artifacts must be rejected with a
+clear ValueError at the loader, not crash half-constructed deeper in."""
+import pytest
+
+from repro.core.cost_model import PAPER_DEFAULT
+from repro.planner.api import PlanRequest, PlanResult
+from repro.planner.planner import Planner
+from repro.workloads.serve import ServeRequest
+from repro.workloads.traces import CollectiveEvent, Trace, mixed_trace
+
+
+@pytest.fixture(scope="module")
+def plan_dict():
+    res = Planner(cache_size=0).plan(PlanRequest(
+        kind="a2a", n=8, m_bytes=1 << 20, cost_model=PAPER_DEFAULT))
+    return res.to_dict()
+
+
+def _trace_dict():
+    return mixed_trace(8, moe_layers=1, decode_steps=1).to_dict()
+
+
+def _serve_dict():
+    return ServeRequest(
+        events=(CollectiveEvent("a2a", 1 << 20, "t"),), n=8,
+        init_g=2).to_dict()
+
+
+def _request_dict():
+    return PlanRequest(kind="a2a", n=8, m_bytes=1 << 20,
+                       cost_model=PAPER_DEFAULT).to_dict()
+
+
+# --- unknown fields -----------------------------------------------------------
+
+
+def test_trace_rejects_unknown_field():
+    d = _trace_dict()
+    d["fabrics"] = "ocs"
+    with pytest.raises(ValueError, match="unknown field.*fabrics"):
+        Trace.from_dict(d)
+
+
+def test_event_rejects_unknown_field():
+    d = {"kind": "a2a", "m_bytes": 1024.0, "tags": "oops"}
+    with pytest.raises(ValueError, match="unknown field.*tags"):
+        CollectiveEvent.from_dict(d)
+
+
+def test_plan_request_rejects_unknown_field():
+    d = _request_dict()
+    d["budget"] = 3
+    with pytest.raises(ValueError, match="unknown field.*budget"):
+        PlanRequest.from_dict(d)
+
+
+def test_plan_result_rejects_unknown_field(plan_dict):
+    d = dict(plan_dict)
+    d["winner"] = "bruck"
+    with pytest.raises(ValueError, match="unknown field.*winner"):
+        PlanResult.from_dict(d)
+
+
+def test_serve_request_rejects_unknown_field():
+    d = _serve_dict()
+    d["deadline"] = 1.0
+    with pytest.raises(ValueError, match="unknown field.*deadline"):
+        ServeRequest.from_dict(d)
+
+
+# --- missing required fields --------------------------------------------------
+
+
+@pytest.mark.parametrize("key", ["name", "n", "events"])
+def test_trace_rejects_missing_required(key):
+    d = _trace_dict()
+    del d[key]
+    with pytest.raises(ValueError, match=f"missing required.*{key}"):
+        Trace.from_dict(d)
+
+
+@pytest.mark.parametrize("key", ["kind", "n", "m_bytes", "cost_model"])
+def test_plan_request_rejects_missing_required(key):
+    d = _request_dict()
+    del d[key]
+    with pytest.raises(ValueError, match=f"missing required.*{key}"):
+        PlanRequest.from_dict(d)
+
+
+def test_plan_result_rejects_missing_breakdown(plan_dict):
+    d = dict(plan_dict)
+    del d["breakdown"]
+    with pytest.raises(ValueError, match="missing required.*breakdown"):
+        PlanResult.from_dict(d)
+
+
+def test_non_mapping_payload_rejected():
+    with pytest.raises(ValueError, match="must be a JSON object"):
+        Trace.from_dict(["not", "a", "dict"])
+
+
+# --- payload sign/finiteness --------------------------------------------------
+
+
+@pytest.mark.parametrize("bad", [0, -1, -0.5, float("nan"), float("inf"),
+                                 "big", None])
+def test_event_rejects_bad_payload(bad):
+    with pytest.raises(ValueError, match="m_bytes"):
+        CollectiveEvent.from_dict({"kind": "a2a", "m_bytes": bad})
+
+
+@pytest.mark.parametrize("bad", [0, -4096])
+def test_plan_request_rejects_nonpositive_payload(bad):
+    d = _request_dict()
+    d["m_bytes"] = bad
+    with pytest.raises(ValueError, match="m_bytes"):
+        PlanRequest.from_dict(d)
+
+
+def test_serve_request_rejects_zero_payload():
+    d = _serve_dict()
+    d["events"][0]["m_bytes"] = 0
+    with pytest.raises(ValueError, match="m_bytes"):
+        ServeRequest.from_dict(d)
+
+
+# --- cross-field consistency --------------------------------------------------
+
+
+def test_plan_result_rejects_mismatched_schedule_n(plan_dict):
+    d = dict(plan_dict)
+    d["request"] = dict(d["request"])
+    d["request"]["n"] = 16  # schedule link offsets were compiled for n=8
+    with pytest.raises(ValueError, match=r"n=8.*n=16|schedule length"):
+        PlanResult.from_dict(d)
+
+
+def test_plan_result_rejects_truncated_schedule_x(plan_dict):
+    d = dict(plan_dict)
+    assert d["schedule"] is not None
+    d["schedule"] = dict(d["schedule"])
+    d["schedule"]["x"] = d["schedule"]["x"][:-1]
+    with pytest.raises(ValueError, match="schedule length"):
+        PlanResult.from_dict(d)
+
+
+def test_plan_result_rejects_unknown_cost_model_field(plan_dict):
+    d = dict(plan_dict)
+    d["request"] = dict(d["request"])
+    d["request"]["cost_model"] = dict(d["request"]["cost_model"])
+    d["request"]["cost_model"]["beta"] = 1e-9
+    with pytest.raises(ValueError, match="unknown field.*beta"):
+        PlanResult.from_dict(d)
+
+
+def test_serve_request_rejects_out_of_range_init_g():
+    d = _serve_dict()
+    d["init_g"] = 8  # == n: not a valid link offset
+    with pytest.raises(ValueError, match="init_g"):
+        ServeRequest.from_dict(d)
+
+
+# --- good payloads still round-trip -------------------------------------------
+
+
+def test_good_roundtrips_still_work(plan_dict):
+    assert Trace.from_dict(_trace_dict()).to_dict() == _trace_dict()
+    assert ServeRequest.from_dict(_serve_dict()).to_dict() == _serve_dict()
+    assert PlanResult.from_dict(plan_dict).to_dict() == plan_dict

@@ -73,7 +73,7 @@ def test_regret_monotone_nonincreasing_in_window(make, delta):
         online, _ = run_online(trace, cm, window=w)
         totals.append(online.total_time)
         assert online.total_time >= offline * (1 - 1e-9)
-    for wider, narrower in zip(totals[1:], totals):
+    for wider, narrower in zip(totals[1:], totals, strict=False):
         assert wider <= narrower * (1 + 1e-9), (
             f"regret increased with a wider window: {totals}")
     assert totals[-1] == pytest.approx(offline, rel=1e-12)

@@ -337,7 +337,7 @@ def test_ocs_sim_scores_every_candidate_with_the_simulator():
     scheds = [core_schedules.Schedule(kind="a2a", n=48, x=a.x)
               for a in res.alternatives]
     sim = batch_completion_times(scheds, 4.0 * MB, cm, chunks_per_msg=8)
-    for a, t in zip(res.alternatives, sim):
+    for a, t in zip(res.alternatives, sim, strict=True):
         assert a.score == pytest.approx(float(t), rel=1e-12)
         assert a.predicted_time == a.score
     assert res.predicted_time == res.alternatives[0].score

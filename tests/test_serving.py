@@ -178,7 +178,8 @@ def test_planner_cache_key_distinguishes_init_g():
     a plan computed for one inherited fabric state could be served for
     another, silently mispricing the entry boundary."""
     planner = Planner()
-    base = dict(kind="a2a", n=16, m_bytes=4e6, cost_model=CM, fabric="ocs")
+    base = {"kind": "a2a", "n": 16, "m_bytes": 4e6, "cost_model": CM,
+            "fabric": "ocs"}
     fresh = planner.plan(PlanRequest(**base))
     warm = planner.plan(PlanRequest(**base, init_g=5))
     assert planner.cache_key(PlanRequest(**base)) != \
@@ -207,7 +208,8 @@ def test_planner_init_g_entry_matches_sparse_swap_cost():
     from repro.core import changed_links
 
     planner = Planner()
-    base = dict(kind="rs", n=12, m_bytes=2e6, cost_model=CM, fabric="ocs")
+    base = {"kind": "rs", "n": 12, "m_bytes": 2e6, "cost_model": CM,
+            "fabric": "ocs"}
     fresh = planner.plan(PlanRequest(**base))
     for g in (1, 3, 7):
         warm = planner.plan(PlanRequest(**base, init_g=g))

@@ -63,7 +63,8 @@ def test_changed_links_matches_schedule_method():
             offs = sched.link_offsets()
             segs = sched.segments
             expect = tuple(changed_links(n, offs[a_prev], offs[a])
-                           for (a_prev, _), (a, _) in zip(segs, segs[1:]))
+                           for (a_prev, _), (a, _) in zip(segs, segs[1:],
+                                                          strict=False))
             assert sched.reconfig_changed_links() == expect
 
 
@@ -156,7 +157,7 @@ def test_boundary_cost_zero_iff_offsets_align():
     carry = plan_trace(mixed_trace(16, seed=0), cm, mode="carryover")
     for plan_prev, plan_next, changed, cost in zip(
             carry.phases, carry.phases[1:], carry.boundary_changed,
-            carry.boundary_cost):
+            carry.boundary_cost, strict=False):
         expect = changed_links(carry.trace.n,
                                plan_prev.schedule.link_offsets()[-1],
                                plan_next.schedule.link_offsets()[0])
@@ -303,7 +304,7 @@ def test_run_trace_validation():
 def test_batched_trace_matches_scalar_sparse():
     rng = random.Random(23)
     for n in (6, 12, 48):
-        for trial in range(3):
+        for _trial in range(3):
             phases = tuple(
                 (random_schedule(rng, n, rng.choice(["a2a", "rs", "ag"])),
                  rng.choice([0.25 * MB, 2 * MB]))
@@ -325,9 +326,9 @@ def test_batched_trace_matches_scalar_sparse():
             assert res.chunks_moved[0] == ref.chunks_moved
             got = res.result(0)
             assert got.boundary_changed == ref.boundary_changed
-            for a, b in zip(got.phase_done, ref.phase_done):
+            for a, b in zip(got.phase_done, ref.phase_done, strict=True):
                 assert a == pytest.approx(b, rel=1e-9)
-            for a, b in zip(got.step_done, ref.step_done):
+            for a, b in zip(got.step_done, ref.step_done, strict=True):
                 assert a == pytest.approx(b, rel=1e-9)
 
 

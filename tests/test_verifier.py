@@ -1,0 +1,232 @@
+"""Static verifier tests: clean artifacts verify, corruptions are caught.
+
+Three layers:
+  1. zero-violation grids — everything the planner / trace planner / online
+     planner / plan service produce on the existing test grids must verify
+     clean (the verifier must not reject working artifacts);
+  2. the tier-1 mutation-catch test — every corruption in
+     `repro.analysis.mutations` must be caught by its designated rule;
+  3. trust-boundary behaviour — a corrupted plan raises `VerificationError`
+     at the boundary and is never inserted into the LRU caches.
+"""
+import dataclasses
+
+import pytest
+
+from repro.analysis import (VerificationError, verify_plan, verify_schedule,
+                            verify_served_plan, verify_snapshot, verify_tape,
+                            verify_trace_plan)
+from repro.analysis.mutations import run_mutations
+from repro.core.batchsim import FabricSnapshot, compile_tape
+from repro.core.cost_model import PAPER_DEFAULT, CostModel
+from repro.core.schedules import (Schedule, every_step_schedule,
+                                  schedule_length, static_schedule)
+from repro.planner import Planner, PlanRequest
+from repro.workloads.serve import PlanService, ServeRequest, build_request_pool
+from repro.workloads.trace_planner import TRACE_PLAN_MODES, plan_trace
+from repro.workloads.traces import CollectiveEvent, Trace, mixed_trace
+
+MB = 1024.0 ** 2
+
+
+# --- zero violations on clean artifacts ---------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["a2a", "rs", "ag"])
+@pytest.mark.parametrize("n,r", [(4, 2), (8, 2), (12, 2), (16, 2),
+                                 (17, 2), (9, 3), (27, 3)])
+def test_clean_schedules_verify(kind, n, r):
+    for sched in (static_schedule(kind, n, r=r),
+                  every_step_schedule(kind, n, r=r)):
+        assert not verify_schedule(sched), verify_schedule(sched)
+
+
+@pytest.mark.parametrize("kind", ["a2a", "rs", "ag"])
+def test_all_enumerated_schedules_verify(kind):
+    import itertools
+
+    s = schedule_length(kind, 8, 2)
+    for tail in itertools.product((0, 1), repeat=s - 1):
+        sched = Schedule(kind=kind, n=8, x=(0,) + tail, r=2)
+        assert not verify_tape(compile_tape(sched))
+
+
+@pytest.mark.parametrize("kind", ["a2a", "rs", "ag", "ar"])
+@pytest.mark.parametrize("n", [8, 16])
+def test_planner_results_verify(kind, n):
+    planner = Planner(cache_size=0, verify=False)
+    for init_g, max_R in [(None, None), (2, None), (None, 1)]:
+        res = planner.plan(PlanRequest(kind=kind, n=n, m_bytes=4 * MB,
+                                       init_g=init_g, max_R=max_R))
+        assert not verify_plan(res), verify_plan(res)
+
+
+def test_planner_sim_fabric_results_verify():
+    planner = Planner(cache_size=0, verify=False)
+    res = planner.plan(PlanRequest(kind="a2a", n=8, m_bytes=MB,
+                                   fabric="ocs-sim"))
+    assert not verify_plan(res), verify_plan(res)
+
+
+@pytest.mark.parametrize("mode", TRACE_PLAN_MODES)
+def test_trace_plans_verify(mode):
+    trace = mixed_trace(16, moe_layers=1, decode_steps=2)
+    tp = plan_trace(trace, PAPER_DEFAULT, mode=mode)
+    assert not verify_trace_plan(tp, cm=PAPER_DEFAULT), \
+        verify_trace_plan(tp, cm=PAPER_DEFAULT)
+
+
+def test_budgeted_trace_plan_verifies():
+    trace = mixed_trace(16, moe_layers=1, decode_steps=2)
+    tp = plan_trace(trace, PAPER_DEFAULT, mode="carryover",
+                    delta_budget=2e-5)
+    assert not verify_trace_plan(tp, cm=PAPER_DEFAULT)
+
+
+def test_online_plans_verify():
+    from repro.workloads.online_planner import run_online
+
+    trace = mixed_trace(16, moe_layers=1, decode_steps=2)
+    tp, _ = run_online(trace, PAPER_DEFAULT, window=3)
+    assert not verify_trace_plan(tp, cm=PAPER_DEFAULT), \
+        verify_trace_plan(tp, cm=PAPER_DEFAULT)
+
+
+def test_served_plans_verify_across_pool():
+    service = PlanService(cm=PAPER_DEFAULT, cache_size=0, verify=False)
+    for req in build_request_pool(16)[:12]:
+        sp = service.serve(req)
+        assert not verify_served_plan(sp, PAPER_DEFAULT), \
+            verify_served_plan(sp, PAPER_DEFAULT)
+
+
+def test_clean_snapshot_verifies():
+    snap = FabricSnapshot(n=8, link_offset=2, node_ready=(0.5,) * 8,
+                          port_free=(1.0,) * 8)
+    assert not verify_snapshot(snap)
+
+
+# --- the tier-1 mutation-catch test -------------------------------------------
+
+
+def test_every_mutation_caught_by_its_rule():
+    outcomes = run_mutations()
+    missed = [o for o in outcomes if not o.caught]
+    assert not missed, "\n".join(
+        f"{o.name}: wanted {o.rule}, fired {o.fired}" for o in missed)
+    assert len({o.rule for o in outcomes}) >= 15
+    assert len(outcomes) >= 15
+
+
+def test_mutations_fire_no_rules_on_good_fixtures():
+    # sanity: the harness corrupts copies, never the shared fixtures
+    from repro.analysis.mutations import (_good_plan, _good_served_plan,
+                                          _good_trace_plan)
+
+    run_mutations()
+    assert not verify_plan(_good_plan())
+    assert not verify_trace_plan(_good_trace_plan(), cm=PAPER_DEFAULT)
+    assert not verify_served_plan(_good_served_plan(), PAPER_DEFAULT)
+
+
+# --- trust boundaries: raise + never cache ------------------------------------
+
+
+def _corrupt(res):
+    return dataclasses.replace(res, schedule=static_schedule("rs", res.request.n))
+
+
+def test_planner_rejects_corrupt_plan_and_does_not_cache(monkeypatch):
+    planner = Planner(cache_size=8)
+    req = PlanRequest(kind="a2a", n=8, m_bytes=MB)
+    good = planner._plan_uncached(req)
+    monkeypatch.setattr(Planner, "_plan_uncached",
+                        lambda self, r: _corrupt(good))
+    with pytest.raises(VerificationError, match="plan/kind"):
+        planner.plan(req)
+    assert len(planner._cache) == 0
+    monkeypatch.undo()
+    # after the corruption is gone, the same request plans and caches fine
+    res = planner.plan(req)
+    assert not verify_plan(res)
+    assert len(planner._cache) == 1
+
+
+def test_planner_verify_flag_disables_audit(monkeypatch):
+    planner = Planner(cache_size=0, verify=False)
+    req = PlanRequest(kind="a2a", n=8, m_bytes=MB)
+    good = planner._plan_uncached(req)
+    monkeypatch.setattr(Planner, "_plan_uncached",
+                        lambda self, r: _corrupt(good))
+    assert planner.plan(req).schedule.kind == "rs"  # served unchecked
+
+
+def test_service_rejects_corrupt_window_and_does_not_cache(monkeypatch):
+    import repro.workloads.serve as serve_mod
+
+    real_dp = serve_mod.window_dp
+
+    def crooked_dp(n, cand_lists, cm, **kw):
+        chosen = list(real_dp(n, cand_lists, cm, **kw))
+        chosen[-1] = dataclasses.replace(
+            chosen[-1], g_last=(chosen[-1].g_last % (n - 1)) + 1
+            if chosen[-1].g_last != (chosen[-1].g_last % (n - 1)) + 1
+            else chosen[-1].g_last + 1)
+        return chosen
+
+    monkeypatch.setattr(serve_mod, "window_dp", crooked_dp)
+    service = PlanService(cm=PAPER_DEFAULT, cache_size=8)
+    req = ServeRequest(events=(CollectiveEvent("a2a", MB, "t0"),
+                               CollectiveEvent("ag", MB / 2, "t1")),
+                       n=16, init_g=2)
+    with pytest.raises(VerificationError, match="serve/"):
+        service.serve(req)
+    assert len(service._cache) == 0
+    monkeypatch.undo()
+    sp = service.serve(req)
+    assert not verify_served_plan(sp, PAPER_DEFAULT)
+    assert len(service._cache) == 1
+
+
+def test_online_planner_rejects_corrupt_window(monkeypatch):
+    import repro.workloads.online_planner as op_mod
+
+    real_dp = op_mod.window_dp
+
+    def crooked_dp(n, cand_lists, cm, **kw):
+        chosen = list(real_dp(n, cand_lists, cm, **kw))
+        chosen[0] = dataclasses.replace(chosen[0], paid=chosen[0].paid + 1)
+        return chosen
+
+    monkeypatch.setattr(op_mod, "window_dp", crooked_dp)
+    op = op_mod.OnlinePlanner(16, cm=PAPER_DEFAULT, window=2)
+    op.predict((CollectiveEvent("a2a", MB, "t0"),
+                CollectiveEvent("ag", MB / 2, "t1")))
+    with pytest.raises(VerificationError, match="window/paid"):
+        op.observe()
+
+
+def test_verification_error_carries_violations():
+    sched = Schedule(kind="a2a", n=16, x=(0, 0, 1, 0), r=2)
+    bad = dataclasses.replace(compile_tape(sched), hops=(9, 9, 9, 9))
+    violations = verify_tape(bad)
+    assert violations and any(v.rule == "tape/hops" for v in violations)
+    err = VerificationError(violations, context="test artifact")
+    assert "tape/hops" in str(err) and "test artifact" in str(err)
+    assert err.violations == tuple(violations)
+
+
+def test_certified_regimes_match_guard_decisions():
+    # alpha_s == 0 disables the overtaking certificate: verifier stays
+    # orthogonal, but the certifier must refuse (covered in depth in
+    # tests/test_certifier.py; this is the analysis-package smoke coupling)
+    from repro.analysis import certify_lane
+    from repro.core.batchsim import BatchLane
+
+    sched = every_step_schedule("a2a", 8)
+    lane = BatchLane(schedule=sched, m_bytes=MB)
+    assert certify_lane(lane, PAPER_DEFAULT)
+    free = CostModel(alpha_s=0.0, alpha_h=0.0,
+                     bandwidth=PAPER_DEFAULT.bandwidth,
+                     delta=PAPER_DEFAULT.delta)
+    assert not certify_lane(lane, free)
