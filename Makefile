@@ -5,7 +5,7 @@ PYTHONPATH := src
 COV_MIN ?= 84
 
 .PHONY: test test-fast bench bench-smoke plan-bench fabric-bench sim-bench \
-	trace-bench online-bench sweep coverage lint verify-gate
+	trace-bench online-bench sweep coverage lint verify-gate docs-gate
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -34,10 +34,12 @@ plan-bench:
 fabric-bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.fabric_bench --json BENCH_fabric_overlap.json
 
-# Scalar sparse FabricSim vs the vectorized batch engine (core.batchsim):
-# 30+-candidate event-scoring batch at n=96 (gated >= 10x), batched-only
-# n in {768, 1536} scale rows, and LRU plan-cache hit rates; recorded to
-# BENCH_sim_scale.json.
+# Scalar sparse FabricSim vs the vectorized batch engine (core.batchsim)
+# vs the JAX jit/vmap backend (core.batchsim_jax): 30+-candidate
+# event-scoring batch at n=96 (gated >= 10x), batched-only n in {768, 1536}
+# scale rows, the NumPy-vs-JAX differential tier at n=1536/256 lanes (gated
+# >= 3x, bit-stable, <= 1e-6), JAX-only n in {8192, 32768} rows, and LRU
+# plan-cache hit rates; recorded to BENCH_sim_scale.json.
 sim-bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.sim_bench --json BENCH_sim_scale.json
 
@@ -72,6 +74,11 @@ coverage:
 # violation.
 verify-gate:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.verify_gate
+
+# Docs honesty gate: every relative link in README/docs resolves, and every
+# fenced python block in docs/batch_engine.md executes (doctest-style).
+docs-gate:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.docs_gate
 
 lint:
 	ruff check --select E,F,W,I,B,C4 src tests benchmarks examples

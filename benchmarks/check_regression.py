@@ -19,7 +19,11 @@ The file schema is auto-detected from the row keys:
     (checksum within 1e-9 relative); the scoring-tier wall speedup is
     timing-noisy and only has to stay above ``--wall-frac`` of the committed
     value (and above 1x absolutely), and certified playback must stay within
-    1.25x of the guard-based (``certify=False``) wall time.
+    1.25x of the guard-based (``certify=False``) wall time.  ``jax`` /
+    ``jax-scale`` tier rows additionally pin the resolved backend and
+    bit-stability, and the jax tier's warm speedup over the NumPy engine
+    must clear both the *absolute* 3x floor of the acceptance spec and
+    ``--wall-frac`` of the committed value.
   - trace rows (``carryover_s``, BENCH_trace.json): trace planning is
     deterministic, so the carryover/cold/static ratios must match the
     baseline within ``--rel-tol`` and the boundary-reuse counts exactly.
@@ -82,6 +86,41 @@ def check_planner(base_rows: list[dict], fresh_rows: list[dict],
     return errors, matched
 
 
+#: the acceptance spec's hard floor for the jax tier's warm speedup over the
+#: NumPy batch engine — absolute, never scaled by --wall-frac
+JAX_SPEEDUP_FLOOR = 3.0
+
+
+def check_sim_jax(key, ref: dict, fresh: dict,
+                  wall_frac: float) -> list[str]:
+    """Gates for one jax / jax-scale tier row (vs its committed baseline)."""
+    errors = []
+    tag = f"sim tier={key[0]} n={key[1]}"
+    for field in ("lanes", "chunks", "hop_cap", "fast_lanes",
+                  "certified_lanes", "backend"):
+        if fresh[field] != ref[field]:
+            errors.append(f"{tag}: {field} {fresh[field]} != baseline "
+                          f"{ref[field]} (jax grid is deterministic)")
+    if not fresh["bit_stable"]:
+        errors.append(f"{tag}: JAX playback not bit-stable run-to-run")
+    drift = (abs(fresh["completion_checksum"] - ref["completion_checksum"])
+             / max(abs(ref["completion_checksum"]), 1e-12))
+    if drift > 1e-9:
+        errors.append(f"{tag}: completion_checksum drifted {drift:.2e} "
+                      f"from baseline (> 1e-9)")
+    if ref.get("jax_speedup") is not None:
+        if fresh["worst_rel_diff"] > 1e-6:
+            errors.append(f"{tag}: jax vs numpy completion drift "
+                          f"{fresh['worst_rel_diff']} > 1e-6")
+        floor = max(JAX_SPEEDUP_FLOOR, wall_frac * ref["jax_speedup"])
+        if fresh["jax_speedup"] < floor:
+            errors.append(f"{tag}: jax_speedup {fresh['jax_speedup']} < "
+                          f"{floor:.2f} (baseline {ref['jax_speedup']}, "
+                          f"frac {wall_frac}, hard floor "
+                          f"{JAX_SPEEDUP_FLOOR})")
+    return errors
+
+
 def check_sim(base_rows: list[dict], fresh_rows: list[dict],
               wall_frac: float) -> tuple[list[str], int]:
     errors, matched = [], 0
@@ -91,6 +130,9 @@ def check_sim(base_rows: list[dict], fresh_rows: list[dict],
             continue
         matched += 1
         ref = base[key]
+        if key[0] in ("jax", "jax-scale"):
+            errors += check_sim_jax(key, ref, fresh, wall_frac)
+            continue
         tag = f"sim tier={key[0]} n={key[1]}"
         for field in ("lanes", "fast_lanes", "chunks"):
             if fresh[field] != ref[field]:

@@ -1,0 +1,151 @@
+"""Docs gate: dead-link check + executable doc examples.
+
+Two checks keep the documentation honest:
+
+1. **Link check** — every relative markdown link in README.md and
+   docs/*.md must resolve to an existing file (fragments are checked
+   against the target file's headings when the target is markdown).
+   External http(s)/mailto links are skipped (no network in CI).
+2. **Doc examples** — every fenced ```python block in
+   docs/batch_engine.md is executed, in order, in one shared namespace
+   (doctest-style: the doc is effectively a script split by prose).  A
+   block that raises fails the gate, so the examples cannot rot.  `bash`
+   blocks are never executed — large-n / CLI examples belong there.
+
+Usage:
+
+    python -m benchmarks.docs_gate [--root DIR]
+
+Exit 1 on any dead link or failing example.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+import traceback
+
+# [text](target) — excludes images handled the same way on purpose, and
+# skips autolinks/backticks.  Good enough for the repo's plain-markdown docs.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"^```(\w*)\s*$")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+
+DOC_GLOBS = ("README.md", "docs")
+EXEC_DOCS = ("docs/batch_engine.md",)
+
+
+def _doc_files(root: str) -> list[str]:
+    files = [os.path.join(root, "README.md")]
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        files += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                        if f.endswith(".md"))
+    return [f for f in files if os.path.exists(f)]
+
+
+def _anchor(heading: str) -> str:
+    """GitHub-style anchor slug for a heading line."""
+    slug = heading.strip().lower()
+    slug = re.sub(r"[`*_~]", "", slug)
+    slug = re.sub(r"[^\w\- ]", "", slug)
+    return slug.replace(" ", "-")
+
+
+def _anchors(path: str) -> set[str]:
+    with open(path, encoding="utf-8") as f:
+        return {_anchor(m.group(1)) for line in f
+                if (m := _HEADING_RE.match(line))}
+
+
+def check_links(root: str) -> list[str]:
+    """Return one error string per dead relative link under README/docs."""
+    errors: list[str] = []
+    for path in _doc_files(root):
+        rel = os.path.relpath(path, root)
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        # strip fenced code blocks: link-looking text inside them is code
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for target in _LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            target, _, frag = target.partition("#")
+            if not target:        # pure in-page anchor: check this file
+                if frag and _anchor(frag) not in _anchors(path):
+                    errors.append(f"{rel}: dead anchor #{frag}")
+                continue
+            dest = os.path.normpath(
+                os.path.join(os.path.dirname(path), target))
+            if not os.path.exists(dest):
+                errors.append(f"{rel}: dead link {target}")
+            elif frag and dest.endswith(".md") \
+                    and _anchor(frag) not in _anchors(dest):
+                errors.append(f"{rel}: dead anchor {target}#{frag}")
+    return errors
+
+
+def python_blocks(path: str) -> list[tuple[int, str]]:
+    """(first_line_number, source) for each fenced ```python block."""
+    blocks, buf, start, lang = [], [], 0, None
+    with open(path, encoding="utf-8") as f:
+        for i, line in enumerate(f, 1):
+            m = _FENCE_RE.match(line)
+            if m and lang is None:
+                lang, start, buf = m.group(1), i + 1, []
+            elif line.startswith("```") and lang is not None:
+                if lang == "python":
+                    blocks.append((start, "".join(buf)))
+                lang = None
+            elif lang is not None:
+                buf.append(line)
+    return blocks
+
+
+def run_doc_examples(root: str) -> list[str]:
+    """Execute every python block of each EXEC_DOCS file; return errors."""
+    errors: list[str] = []
+    for rel in EXEC_DOCS:
+        path = os.path.join(root, rel)
+        if not os.path.exists(path):
+            errors.append(f"{rel}: executable doc missing")
+            continue
+        blocks = python_blocks(path)
+        if not blocks:
+            errors.append(f"{rel}: no fenced python blocks to execute")
+            continue
+        ns: dict = {"__name__": f"docs_gate::{rel}"}
+        for lineno, src in blocks:
+            try:
+                exec(compile(src, f"{rel}:{lineno}", "exec"), ns)  # noqa: S102
+            except Exception:
+                errors.append(f"{rel} block at line {lineno} raised:\n"
+                              f"{traceback.format_exc()}")
+                break  # later blocks share the namespace; don't cascade
+        print(f"# {rel}: {len(blocks)} python blocks executed")
+    return errors
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), ".."),
+        help="repository root holding README.md and docs/")
+    args = ap.parse_args(argv)
+    root = os.path.abspath(args.root)
+
+    errors = check_links(root)
+    print(f"# link check: {len(_doc_files(root))} files, "
+          f"{len(errors)} dead links")
+    errors += run_doc_examples(root)
+
+    if errors:
+        for e in errors:
+            print(f"# FAIL: {e}", file=sys.stderr)
+        sys.exit(1)
+    print("# OK: docs gate passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,8 @@ Only `repro.core` is imported at module level, so the planner and workloads
 layers can depend on this package without cycles.
 """
 from .certifier import (certify_batch, certify_lane, certify_trace_batch,
-                        certify_trace_lane, clear_certifier_cache)
+                        certify_trace_lane, clear_certifier_cache,
+                        partition_backends)
 from .verifier import (clear_verifier_caches, verify_plan, verify_schedule,
                        verify_served_plan, verify_snapshot, verify_tape,
                        verify_trace_plan, verify_window_choice)
@@ -26,5 +27,5 @@ __all__ = [
     "verify_served_plan", "verify_window_choice", "verify_snapshot",
     "clear_verifier_caches",
     "certify_lane", "certify_trace_lane", "certify_batch",
-    "certify_trace_batch", "clear_certifier_cache",
+    "certify_trace_batch", "clear_certifier_cache", "partition_backends",
 ]

@@ -48,6 +48,15 @@ place for uncertified lanes.  The differential grid in
 scalar oracle across the batchsim fuzz grid, and asserts no lane the runtime
 guards would have failed is ever certified.
 
+The certificate also gates the JAX backend (`repro.core.batchsim_jax`): the
+XLA kernel carries neither the runtime guards nor the per-port skew arrays,
+so *only* certified lanes may run on it — certification implies uniformity
+(no ``link_speed`` / ``payload_scale``) and proves the guards could not have
+tripped, which is exactly what the guard-free kernel needs.
+`partition_backends` is the routing decision `batch_run(backend="jax")`
+executes: certified lanes to XLA, everything else to the guarded NumPy
+playback with its scalar-oracle fallback.
+
 The per-(schedule, regime) decision is memoized, so serving paths that
 score the same candidate schedules under one cost model pay the tape scan
 once.
@@ -113,6 +122,20 @@ def certify_trace_batch(lanes: Sequence[TraceLane],
     """Per-lane certificates as a [B] bool array (batch_run_trace's mask)."""
     return np.array([certify_trace_lane(lane, cm) for lane in lanes],
                     dtype=bool)
+
+
+def partition_backends(lanes: Sequence[BatchLane],
+                       cm: CostModel) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Split a batch into its JAX-eligible and NumPy-only lanes.
+
+    Returns ``(jax_idx, numpy_idx, certified)``: the certificate mask plus
+    the index arrays `batch_run(backend="jax")` routes with.  Eligibility
+    *is* certification — there is no separate JAX criterion, because the
+    certificate is precisely the proof that the guard-free, skew-free XLA
+    kernel computes the same timeline as the guarded NumPy playback.
+    """
+    certified = certify_batch(lanes, cm)
+    return np.flatnonzero(certified), np.flatnonzero(~certified), certified
 
 
 def clear_certifier_cache() -> None:

@@ -4,13 +4,15 @@ Maps the paper's OCS subring communication pattern onto `shard_map` +
 `jax.lax.ppermute`.  Each Bruck step k is one collective-permute at ring
 offset 2^k; the BRIDGE schedule (from `repro.core.schedules`) selects the
 offset decomposition (see DESIGN.md Section 3 for the hardware adaptation).
+
+Importing this package never requires jax: the jax-native submodules load
+only when the `._compat` probe succeeded, so a CPU-only install without jax
+can still import `repro.collectives._compat` (and through it the pure-NumPy
+core, e.g. `repro.core.batchsim` with ``backend="auto"``).  Accessing a
+collective by name on a jax-less install raises an actionable ImportError
+at the access, not at import time.
 """
-from .allreduce import (bridge_all_reduce, bruck_all_reduce, ring_all_gather,
-                        ring_all_reduce, ring_reduce_scatter)
-from .bruck_a2a import bruck_all_to_all
-from .bruck_rs_ag import bruck_all_gather, bruck_reduce_scatter
-from .compression import compressed_all_reduce, make_error_feedback_state
-from .schedule_bridge import CollectivePlan, plan_gradient_sync
+from ._compat import HAS_JAX, JAX_IMPORT_ERROR
 
 __all__ = [
     "bruck_all_to_all", "bruck_all_gather", "bruck_reduce_scatter",
@@ -19,3 +21,22 @@ __all__ = [
     "compressed_all_reduce", "make_error_feedback_state",
     "CollectivePlan", "plan_gradient_sync",
 ]
+
+if HAS_JAX:
+    from .allreduce import (bridge_all_reduce, bruck_all_reduce,
+                            ring_all_gather, ring_all_reduce,
+                            ring_reduce_scatter)
+    from .bruck_a2a import bruck_all_to_all
+    from .bruck_rs_ag import bruck_all_gather, bruck_reduce_scatter
+    from .compression import compressed_all_reduce, make_error_feedback_state
+    from .schedule_bridge import CollectivePlan, plan_gradient_sync
+else:  # pragma: no cover - exercised on jax-less installs (subprocess test)
+    def __getattr__(name):
+        if name in __all__:
+            raise ImportError(
+                f"repro.collectives.{name} requires jax, which failed to "
+                f"import ({JAX_IMPORT_ERROR!r}); the NumPy planning/"
+                f"simulation core (repro.core, repro.planner) works without "
+                f"it") from JAX_IMPORT_ERROR
+        raise AttributeError(
+            f"module 'repro.collectives' has no attribute {name!r}")

@@ -14,10 +14,48 @@ shims and the drift they triage:
   cost_analysis_dict     `Compiled.cost_analysis()` returned a one-element
                          list of dicts on older releases and a flat dict on
                          newer ones; normalize to a dict.
+
+Importing this module must never raise: the version probes are all guarded,
+so a CPU-only install without jax (or with a jax whose pallas extras are
+broken) can still import the pure-NumPy core — `repro.core.batchsim` and the
+JAX batch backend consult `HAS_JAX` / `require_jax()` instead of importing
+jax at module scope and letting kernels/-style import errors leak into the
+core path.  The individual shims raise a clear `ImportError` only when they
+are actually *called* without jax installed.
 """
 from __future__ import annotations
 
-import jax
+try:  # the probe itself must never raise at import time
+    import jax
+    HAS_JAX = True
+    JAX_IMPORT_ERROR: Exception | None = None
+except Exception as exc:  # pragma: no cover - exercised on jax-less installs
+    jax = None  # type: ignore[assignment]
+    HAS_JAX = False
+    JAX_IMPORT_ERROR = exc
+
+
+def require_jax(feature: str = "this feature"):
+    """Return the jax module, raising an actionable error when absent.
+
+    Every shim below (and the JAX batch backend) funnels through this, so a
+    jax-less install fails at the *call* that genuinely needs jax with a
+    message naming the feature, never at import time.
+    """
+    if not HAS_JAX:  # pragma: no cover - exercised on jax-less installs
+        raise ImportError(
+            f"{feature} requires jax, which failed to import "
+            f"({JAX_IMPORT_ERROR!r}); install jax[cpu] or use the NumPy "
+            f"backend") from JAX_IMPORT_ERROR
+    return jax
+
+
+def jax_version() -> tuple[int, ...]:
+    """Installed jax version as an int tuple, () when jax is absent."""
+    if not HAS_JAX:
+        return ()
+    return tuple(int(p) for p in jax.__version__.split(".")[:3]
+                 if p.isdigit())
 
 
 def axis_size(axis_name: str) -> int:
@@ -26,10 +64,11 @@ def axis_size(axis_name: str) -> int:
     `jax.lax.axis_size` landed in newer releases; on older ones `psum(1)`
     over the axis constant-folds to the same static value at trace time.
     """
-    fn = getattr(jax.lax, "axis_size", None)
+    jx = require_jax("axis_size")
+    fn = getattr(jx.lax, "axis_size", None)
     if fn is not None:
         return fn(axis_name)
-    return int(jax.lax.psum(1, axis_name))
+    return int(jx.lax.psum(1, axis_name))
 
 
 def shard_map(*args, **kwargs):
@@ -38,7 +77,8 @@ def shard_map(*args, **kwargs):
     Also translates the `check_vma` kwarg to its pre-rename spelling
     `check_rep` when the installed version only knows the old one.
     """
-    fn = getattr(jax, "shard_map", None)
+    jx = require_jax("shard_map")
+    fn = getattr(jx, "shard_map", None)
     if fn is None:
         from jax.experimental.shard_map import shard_map as fn
     try:
@@ -58,7 +98,8 @@ def pcast(x, axis_names, to: str = "varying"):
     replicated and varying values interchangeably inside shard_map, so the
     cast is a no-op there.
     """
-    fn = getattr(jax.lax, "pcast", None)
+    jx = require_jax("pcast")
+    fn = getattr(jx.lax, "pcast", None)
     if fn is None:
         return x
     return fn(x, axis_names, to=to)
@@ -70,6 +111,7 @@ def pallas_compiler_params(**kwargs):
     jax >= 0.6 spells it `pltpu.CompilerParams`; 0.4/0.5 releases spell it
     `pltpu.TPUCompilerParams` with the same fields (dimension_semantics, ...).
     """
+    require_jax("pallas compiler params")
     from jax.experimental.pallas import tpu as pltpu
 
     cls = getattr(pltpu, "CompilerParams", None)

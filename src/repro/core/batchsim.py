@@ -44,10 +44,27 @@ it first (``certify=True``), exempt certified lanes from the guards, and
 skip the guards' per-step bookkeeping entirely when the whole batch is
 certified; ``BatchFabricResult.certified`` records who held a certificate.
 
+Backends.  ``batch_run(..., backend=...)`` picks the playback engine for the
+*certified* lanes:
+
+  - ``"numpy"`` (default): the `_play` loop below — exact, guarded, no
+    dependencies beyond NumPy.
+  - ``"jax"``: certified lanes are lowered to the XLA kernel in
+    `repro.core.batchsim_jax` (jit + vmap over lanes, float64, bit-identical
+    to `_play` on CPU); uncertified lanes keep the guarded NumPy path and
+    its scalar-oracle fallback.  Requires jax and ``certify=True`` — the
+    JAX kernel is guard-free, so only proven-exact lanes may enter it.
+  - ``"auto"``: ``"jax"`` when jax is importable, some lane is certified,
+    and the batch is big enough to amortize dispatch/compile overhead
+    (`_JAX_AUTO_MIN_WORK`); ``"numpy"`` otherwise.  This is what the
+    planner's ``fabric="ocs-sim"`` scoring uses.
+
 The planner's ``fabric="ocs-sim"`` event-scores whole candidate sets through
 `batch_run` in a single call; `benchmarks/sim_bench.py` records the wall-time
 ratio vs the scalar loop (>= 10x at n = 96 for a 30-candidate batch, and
-n >= 768 grids that the scalar engine cannot touch in CI time).
+n >= 768 grids that the scalar engine cannot touch in CI time) and the JAX
+rows' gated speedup over this NumPy engine (docs/batch_engine.md has the
+measured performance model).
 """
 from __future__ import annotations
 
@@ -302,6 +319,9 @@ class BatchFabricResult:
     (`repro.analysis.certifier`): its exactness was proven from the tape and
     regime alone, without running the runtime guards.  certified implies
     fast_path.
+    backend is the resolved playback engine ("numpy" or "jax"); under "jax"
+    the certified lanes ran on the XLA kernel and the uncertified ones on
+    the guarded NumPy path (timing output is identical either way).
     """
 
     completion: np.ndarray      # [B]
@@ -313,6 +333,7 @@ class BatchFabricResult:
     fast_path: np.ndarray       # [B] bool
     certified: np.ndarray       # [B] bool
     lanes: tuple[BatchLane, ...]
+    backend: str = "numpy"
 
     def __len__(self) -> int:
         return len(self.lanes)
@@ -463,9 +484,57 @@ def _play(*, n: int, C: int, cm: CostModel, nb_step, g_step, hops, boundary,
     return recv, step_done, ok, F
 
 
+# "auto" switches to the JAX backend only above this estimated certified
+# work, in chunk-services (C * n * total certified hops).  Calibrated on the
+# CI-class single-core CPU (benchmarks/sim_bench.py): below it the NumPy
+# loop's per-hop dispatch is cheaper than jit dispatch + (first-call)
+# compilation; the planner's n=96 candidate sets (~1e6) stay on NumPy, wide
+# n>=768 sets (>=1e7) go to XLA.
+_JAX_AUTO_MIN_WORK = 5e6
+
+
+def _resolve_backend(backend: str, *, certify: bool, certified: np.ndarray,
+                     n: int, C: int, hops: np.ndarray) -> str:
+    """Resolve a ``backend=`` request to the engine that will actually run.
+
+    "jax" demands jax and ``certify=True`` (the XLA kernel is guard-free —
+    only certified lanes may enter it) but degrades to "numpy" when no lane
+    in *this* batch is certified, since there would be nothing for the
+    kernel to do.  "auto" additionally requires the certified work to clear
+    `_JAX_AUTO_MIN_WORK` so small batches keep NumPy's lower fixed cost.
+    """
+    if backend not in ("numpy", "jax", "auto"):
+        raise ValueError(
+            f"backend must be 'numpy', 'jax', or 'auto', got {backend!r}")
+    if backend == "numpy":
+        return "numpy"
+    if not certify:
+        if backend == "jax":
+            raise ValueError(
+                "backend='jax' requires certify=True: the JAX fast path is "
+                "guard-free and only sound for lanes holding a static "
+                "fast-path certificate")
+        return "numpy"
+    if backend == "jax":
+        from .batchsim_jax import jax_available
+
+        if not jax_available():
+            from repro.collectives._compat import require_jax
+
+            require_jax("backend='jax' batch playback")  # raises ImportError
+        return "jax" if bool(certified.any()) else "numpy"
+    # auto: opt in only when jax exists and the certified work amortizes it
+    from .batchsim_jax import jax_available
+
+    if not jax_available() or not bool(certified.any()):
+        return "numpy"
+    work = float(C) * n * float(hops[certified].sum())
+    return "jax" if work >= _JAX_AUTO_MIN_WORK else "numpy"
+
+
 def batch_run(lanes: Sequence[BatchLane], cm: CostModel, *,
               chunks_per_msg: int = 32, allow_fallback: bool = True,
-              certify: bool = True) -> BatchFabricResult:
+              certify: bool = True, backend: str = "numpy") -> BatchFabricResult:
     """Play every lane's tape forward together (sparse-fabric semantics).
 
     All lanes must share the same world size n and sub-step count S (any mix
@@ -480,6 +549,12 @@ def batch_run(lanes: Sequence[BatchLane], cm: CostModel, *,
     certified the guards' per-step bookkeeping is skipped outright.  Timing
     output is bit-identical with ``certify=False`` — the certificate only
     decides whether the guards need to watch.
+
+    ``backend`` selects the playback engine for the certified lanes:
+    ``"numpy"`` (default), ``"jax"`` (XLA kernel, requires jax and
+    ``certify=True``), or ``"auto"`` (JAX when available and worthwhile).
+    Uncertified lanes always run the guarded NumPy path regardless of
+    backend; see the module docstring and docs/batch_engine.md.
     """
     lanes = tuple(lanes)
     if not lanes:
@@ -511,10 +586,40 @@ def batch_run(lanes: Sequence[BatchLane], cm: CostModel, *,
     else:
         certified = np.zeros(len(lanes), dtype=bool)
 
-    node_done, step_done, ok, _ = _play(
-        n=n, C=C, cm=cm, nb_step=nb_step, g_step=g_step, hops=hops,
-        boundary=boundary, changed=changed, delta_eff=delta_eff,
-        speed=speed, scale=scale, check_order=not bool(certified.all()))
+    backend = _resolve_backend(backend, certify=certify, certified=certified,
+                               n=n, C=C, hops=hops)
+    if backend == "jax":
+        # certified lanes -> guard-free XLA kernel; the rest keep the
+        # guarded NumPy playback (and below, its scalar-oracle fallback)
+        from .batchsim_jax import play_certified
+
+        B = len(lanes)
+        jidx = np.flatnonzero(certified)
+        uidx = np.flatnonzero(~certified)
+        node_done = np.empty((B, n))
+        step_done = np.empty((B, S))
+        ok = np.ones(B, dtype=bool)
+        nd_j, sd_j, _ = play_certified(
+            n=n, C=C, cm=cm, nb_step=nb_step[jidx], g_step=g_step[jidx],
+            hops=hops[jidx], changed=changed[jidx], delta_eff=delta_eff[jidx])
+        node_done[jidx] = nd_j
+        step_done[jidx] = sd_j
+        if uidx.size:
+            nd_u, sd_u, ok_u, _ = _play(
+                n=n, C=C, cm=cm, nb_step=nb_step[uidx], g_step=g_step[uidx],
+                hops=hops[uidx], boundary=boundary[uidx],
+                changed=changed[uidx], delta_eff=delta_eff[uidx],
+                speed=speed[uidx],
+                scale=scale[uidx] if scale is not None else None,
+                check_order=True)
+            node_done[uidx] = nd_u
+            step_done[uidx] = sd_u
+            ok[uidx] = ok_u
+    else:
+        node_done, step_done, ok, _ = _play(
+            n=n, C=C, cm=cm, nb_step=nb_step, g_step=g_step, hops=hops,
+            boundary=boundary, changed=changed, delta_eff=delta_eff,
+            speed=speed, scale=scale, check_order=not bool(certified.all()))
     ok |= certified  # certified lanes are exact by proof, not by observation
 
     completion = node_done.max(axis=1)
@@ -551,7 +656,7 @@ def batch_run(lanes: Sequence[BatchLane], cm: CostModel, *,
         completion=completion, node_done=node_done, step_done=step_done,
         chunks_moved=chunks_moved, reconfigs_paid=reconfigs_paid,
         delta_stall=delta_stall, fast_path=ok, certified=certified,
-        lanes=lanes)
+        lanes=lanes, backend=backend)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -734,13 +839,17 @@ def batch_run_trace(lanes: Sequence[TraceLane], cm: CostModel, *,
 
 def batch_completion_times(schedules: Sequence[Schedule], m: float,
                            cm: CostModel, *, overlap: float = 0.0,
-                           chunks_per_msg: int = 32) -> np.ndarray:
+                           chunks_per_msg: int = 32,
+                           backend: str = "numpy") -> np.ndarray:
     """Event-level completion time of every schedule in one batched call.
 
     The planner's ``fabric='ocs-sim'`` scoring primitive: all schedules share
     (n, S) — e.g. one request's full candidate set — and the same payload /
-    cost model / overlap credit.
+    cost model / overlap credit.  ``backend`` is forwarded to `batch_run`
+    (the planner passes ``"auto"`` so wide large-n candidate sets score on
+    the JAX engine when it is available).
     """
     lanes = [BatchLane(schedule=s, m_bytes=m, overlap=overlap)
              for s in schedules]
-    return batch_run(lanes, cm, chunks_per_msg=chunks_per_msg).completion
+    return batch_run(lanes, cm, chunks_per_msg=chunks_per_msg,
+                     backend=backend).completion

@@ -1,6 +1,11 @@
 import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
+# Drop any inherited device-count flag (e.g. the CI matrix leg's 8-device
+# XLA_FLAGS): the last occurrence wins in XLA, and the dry run needs 512.
+_inherited = " ".join(
+    tok for tok in os.environ.get("XLA_FLAGS", "").split()
+    if not tok.startswith("--xla_force_host_platform_device_count"))
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + _inherited).strip()
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 

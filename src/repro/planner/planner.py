@@ -15,7 +15,11 @@ Fabrics and scoring:
     reconfiguration stalls that the closed-form model cannot see.  The
     winner is the candidate the simulator ranks fastest, so it is never a
     schedule the simulator would rank worse than the analytic winner (which
-    is always in the candidate set).  ``predicted_time`` and the
+    is always in the candidate set).  The scoring call picks the JAX
+    ``jit``/``vmap`` engine automatically when jax is importable and the
+    candidate set is large enough to amortize it (``sim_backend="auto"``;
+    see docs/batch_engine.md), falling back to the NumPy engine otherwise —
+    scores are identical either way.  ``predicted_time`` and the
     alternatives' scores are simulated completions; ``breakdown`` stays the
     analytic sparse-delta decomposition for reporting.  Non-Bruck
     implementation candidates (the ring baseline) keep their analytic score
@@ -81,6 +85,12 @@ class Planner:
                  immutable `PlanResult`s, safe to share between callers).
     sim_chunks : chunks per message used by the ``ocs-sim`` event scoring
                  (the batch engine's MTU-like pipelining knob).
+    sim_backend: batch-engine backend for ``ocs-sim`` scoring —
+                 ``"auto"`` (default: the JAX ``jit``/``vmap`` engine when
+                 jax is importable and the candidate set is large enough to
+                 amortize it, NumPy otherwise), ``"numpy"``, or ``"jax"``.
+                 Scores are identical across backends (the JAX kernel is
+                 bit-compatible on certified lanes); only wall time changes.
     verify     : statically verify every freshly-planned result
                  (`repro.analysis.verify_plan`) *before* it enters the plan
                  cache — a corrupt plan raises `VerificationError` instead
@@ -94,11 +104,16 @@ class Planner:
     """
 
     def __init__(self, *, cache_size: int = 128, sim_chunks: int = 8,
-                 verify: bool = True):
+                 sim_backend: str = "auto", verify: bool = True):
         if cache_size < 0:
             raise ValueError(f"cache_size must be >= 0, got {cache_size}")
+        if sim_backend not in ("auto", "numpy", "jax"):
+            raise ValueError(
+                f"sim_backend must be 'auto', 'numpy', or 'jax', "
+                f"got {sim_backend!r}")
         self.cache_size = int(cache_size)
         self.sim_chunks = max(1, int(sim_chunks))
+        self.sim_backend = sim_backend
         self.verify = bool(verify)
         self._cache: collections.OrderedDict[str, PlanResult] = \
             collections.OrderedDict()
@@ -213,7 +228,8 @@ class Planner:
             return {}
         completions = batch_completion_times(
             [cands[i].schedule for i in idx], req.m_bytes, req.cost_model,
-            overlap=req.overlap, chunks_per_msg=self.sim_chunks)
+            overlap=req.overlap, chunks_per_msg=self.sim_chunks,
+            backend=self.sim_backend)
         return {i: float(t) for i, t in zip(idx, completions, strict=True)}
 
     def _plan_collective(self, req: PlanRequest) -> PlanResult:

@@ -9,9 +9,13 @@ import sys
 import tempfile
 
 N = int(sys.argv[1]) if len(sys.argv) > 1 else 8
+# Drop any inherited device-count flag (the CI matrix leg runs the suite
+# under 8 host devices; the last occurrence wins in XLA).
+_inherited = " ".join(
+    tok for tok in os.environ.get("XLA_FLAGS", "").split()
+    if not tok.startswith("--xla_force_host_platform_device_count"))
 os.environ["XLA_FLAGS"] = (
-    f"--xla_force_host_platform_device_count={N} "
-    + os.environ.get("XLA_FLAGS", ""))
+    f"--xla_force_host_platform_device_count={N} {_inherited}").strip()
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402

@@ -7,10 +7,14 @@ import os
 import sys
 
 N = int(sys.argv[1]) if len(sys.argv) > 1 else 8
+# Drop any inherited device-count flag (e.g. from the CI matrix leg that runs
+# the whole suite under 8 host devices): the last occurrence wins in XLA, and
+# this worker's N must control the mesh size.
+_inherited = " ".join(
+    tok for tok in os.environ.get("XLA_FLAGS", "").split()
+    if not tok.startswith("--xla_force_host_platform_device_count"))
 os.environ["XLA_FLAGS"] = (
-    f"--xla_force_host_platform_device_count={N} "
-    + os.environ.get("XLA_FLAGS", "")
-)
+    f"--xla_force_host_platform_device_count={N} {_inherited}").strip()
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402

@@ -1,0 +1,65 @@
+"""Tier-1 coverage of the docs gate (benchmarks/docs_gate.py).
+
+The CI docs job runs ``make docs-gate`` standalone; these tests run the
+same two checks in-process so a dead doc link or a rotten doc example
+fails the ordinary test suite too, plus unit checks on the gate's own
+parsing (a broken link checker that never finds anything would otherwise
+pass forever).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from benchmarks import docs_gate
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def test_no_dead_links_in_readme_and_docs():
+    assert docs_gate.check_links(ROOT) == []
+
+
+def test_link_checker_catches_dead_links_and_anchors(tmp_path):
+    docs = tmp_path / "docs"
+    docs.mkdir()
+    (tmp_path / "README.md").write_text(
+        "# Title\n\n## A Real Section\n\n"
+        "[ok](docs/a.md) [ok-anchor](#a-real-section)\n"
+        "[dead](docs/missing.md) [dead-anchor](#no-such-heading)\n"
+        "[dead-frag](docs/a.md#nope)\n"
+        "```\n[not-a-link-in-code](nowhere.md)\n```\n")
+    (docs / "a.md").write_text("# A\n\n## Kept Heading\n")
+    errors = docs_gate.check_links(str(tmp_path))
+    assert sorted(e.split(": ", 1)[1] for e in errors) == [
+        "dead anchor #no-such-heading",
+        "dead anchor docs/a.md#nope",
+        "dead link docs/missing.md",
+    ]
+
+
+def test_python_block_extraction_skips_bash(tmp_path):
+    doc = tmp_path / "d.md"
+    doc.write_text("pre\n```python\nx = 1\n```\n"
+                   "```bash\nexit 1\n```\n"
+                   "```python\ny = x + 1\n```\n")
+    blocks = docs_gate.python_blocks(str(doc))
+    assert [src for _, src in blocks] == ["x = 1\n", "y = x + 1\n"]
+    assert [ln for ln, _ in blocks] == [3, 9]
+
+
+def test_batch_engine_doc_examples_execute():
+    jax = pytest.importorskip("jax")  # noqa: F841 - doc blocks use the backend
+    assert docs_gate.run_doc_examples(ROOT) == []
+
+
+@pytest.mark.slow
+def test_docs_gate_cli_green():
+    pytest.importorskip("jax")
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.docs_gate", "--root", ROOT],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    assert "OK: docs gate passed" in proc.stdout
