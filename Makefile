@@ -5,7 +5,8 @@ PYTHONPATH := src
 COV_MIN ?= 84
 
 .PHONY: test test-fast bench bench-smoke plan-bench fabric-bench sim-bench \
-	trace-bench online-bench sweep coverage lint verify-gate docs-gate
+	trace-bench online-bench faults-bench sweep coverage lint verify-gate \
+	docs-gate
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -57,6 +58,13 @@ trace-bench:
 # BENCH_online.json.
 online-bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.online_bench --json BENCH_online.json
+
+# Fault injection + degraded-mode recovery over fault kind x n x delta x
+# failure time (gates: resume-from-snapshot <= restart-from-scratch on every
+# row, recovered result bit-identical to a clean reduced-world run);
+# recorded to BENCH_faults.json.
+faults-bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.faults_bench --json BENCH_faults.json
 
 # Full n x r x m sweep, recorded for the perf trajectory.
 sweep:

@@ -18,10 +18,10 @@ import argparse
 import json
 import os
 
-from benchmarks.check_regression import (SCHEMAS, check_fabric, check_online,
-                                         check_planner, check_row_coverage,
-                                         check_sim, check_trace,
-                                         detect_schema)
+from benchmarks.check_regression import (SCHEMAS, check_fabric, check_faults,
+                                         check_online, check_planner,
+                                         check_row_coverage, check_sim,
+                                         check_trace, detect_schema)
 
 
 def headline(schema: str, rows: list[dict]) -> str:
@@ -44,6 +44,11 @@ def headline(schema: str, rows: list[dict]) -> str:
         head = f"W>=2 regret {worst}x" if worst is not None else "storm only"
         return (f"{head}, {max(storm) / 1e3:.0f}k plans/s"
                 if storm else head)
+    if schema == "faults":
+        worst = max(r["recovery_ratio"] for r in rows)
+        return (f"worst recovery ratio {worst}x, "
+                f"{'all' if all(r['bit_identical'] for r in rows) else 'NOT all'}"
+                f" bit-identical")
     return f"{max(r['sparse_speedup'] for r in rows):.2f}x sparse"
 
 
@@ -71,7 +76,8 @@ def summarize_pair(name: str, baseline: str, fresh: str,
                  "trace": lambda: check_trace(base_rows, fresh_rows, 1e-6),
                  "fabric": lambda: check_fabric(base_rows, fresh_rows, 1e-6),
                  "online": lambda: check_online(base_rows, fresh_rows,
-                                                1e-6, 0.25)}
+                                                1e-6, 0.25),
+                 "faults": lambda: check_faults(base_rows, fresh_rows, 1e-6)}
         more, matched = check[schema]()
         errors += more
         head = headline(schema, fresh_rows)

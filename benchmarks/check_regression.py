@@ -33,6 +33,12 @@ The file schema is auto-detected from the row keys:
     match the baseline (times within ``--rel-tol``); the serving plans/sec
     is timing-noisy and only has to stay above ``--wall-frac`` of the
     committed hot-path throughput.
+  - faults rows (``recovery_ratio``, BENCH_faults.json): fault injection and
+    recovery re-planning are deterministic, so the committed-phase counts,
+    chunk ledger, and surviving world size must match the baseline exactly
+    and the recovery/restart totals within ``--rel-tol``; on top of the
+    baseline comparison, ``recovery_ratio <= 1`` and ``bit_identical`` are
+    re-asserted as absolute floors on every fresh row.
 
 Rows are matched on their identifying keys (n / r / delta / tier / trace).
 Row coverage is strict: a fresh row whose key the baseline does not know is
@@ -51,6 +57,7 @@ import sys
 
 #: schema name -> (detection key present in every row, identifying row keys)
 SCHEMAS = {
+    "faults": ("recovery_ratio", ("kind", "n", "delta", "fail_frac")),
     "planner": ("wall_speedup", ("n", "r")),
     "sim": ("batched_wall_s", ("tier", "n")),
     "trace": ("carryover_s", ("trace", "n", "delta")),
@@ -251,6 +258,41 @@ def check_online(base_rows: list[dict], fresh_rows: list[dict],
     return errors, matched
 
 
+def check_faults(base_rows: list[dict], fresh_rows: list[dict],
+                 rel_tol: float) -> tuple[list[str], int]:
+    errors, matched = [], 0
+    base = _index(base_rows, SCHEMAS["faults"][1])
+    for key, fresh in _index(fresh_rows, SCHEMAS["faults"][1]).items():
+        if key not in base:
+            continue
+        matched += 1
+        ref = base[key]
+        tag = (f"faults kind={key[0]} n={key[1]} delta={key[2]} "
+               f"frac={key[3]}")
+        for field in ("policy", "completed_phases", "committed_events",
+                      "new_n", "committed_chunks", "lost_chunks",
+                      "requeued_chunks", "mispredictions"):
+            if fresh[field] != ref[field]:
+                errors.append(f"{tag}: {field} {fresh[field]} != baseline "
+                              f"{ref[field]} (fault injection and recovery "
+                              f"re-planning are deterministic)")
+        for field in ("recovery_total_s", "restart_total_s",
+                      "recovery_ratio"):
+            drift = abs(fresh[field] - ref[field]) / max(abs(ref[field]), 1e-12)
+            if drift > rel_tol:
+                errors.append(f"{tag}: {field} {fresh[field]} drifted "
+                              f"{drift:.2e} from baseline {ref[field]} "
+                              f"(> {rel_tol})")
+        # absolute floors, independent of the committed baseline
+        if fresh["recovery_ratio"] > 1 + 1e-9:
+            errors.append(f"{tag}: recovery_ratio {fresh['recovery_ratio']} "
+                          f"> 1 — resume-from-snapshot lost to a restart")
+        if not fresh["bit_identical"]:
+            errors.append(f"{tag}: recovered result no longer bit-identical "
+                          f"to a clean run of the reduced world")
+    return errors, matched
+
+
 def detect_schema(rows: list[dict], label: str) -> str:
     """Schema of a result file, failing loudly when no known schema matches.
 
@@ -321,6 +363,8 @@ def main(argv=None) -> None:
     elif fresh_schema == "online":
         more, matched = check_online(base, fresh, args.rel_tol,
                                      args.wall_frac)
+    elif fresh_schema == "faults":
+        more, matched = check_faults(base, fresh, args.rel_tol)
     else:
         more, matched = check_fabric(base, fresh, args.rel_tol)
     errors += more

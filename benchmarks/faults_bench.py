@@ -1,0 +1,172 @@
+"""Fault-recovery benchmark: resume-from-snapshot vs restart-from-scratch.
+
+Grids `repro.workloads.run_with_recovery` over fault kind x n x delta x
+failure time on the mixed workload trace.  Each row injects one fault at
+``fail_frac`` of the clean run's completion, lets the engine surface the
+`DegradedState` (committed-prefix snapshot, surviving world, in-flight chunk
+fate), re-plans the remaining events at the surviving world size, and
+compares:
+
+  - ``recovery_total_s`` : resume clock + executed remaining-stream
+                           completion at n' (resume from the snapshot);
+  - ``restart_total_s``  : resume clock + the *whole* trace re-planned and
+                           re-run at n' (the no-recovery baseline).
+
+Delivery policy is exercised both ways: link-flap rows re-queue their
+in-flight chunks, every other kind drops them.
+
+Gates (exit 1 on violation; re-checked in CI against the committed baseline
+by `benchmarks.check_regression`):
+
+  - ``recovery_ratio <= 1`` on every row — resuming from the committed
+    prefix never loses to restarting the whole trace (equality only when
+    the fault struck before anything committed);
+  - ``bit_identical`` on every row — the recovered schedules and executed
+    completion exactly match a clean run of the reduced trace at n'
+    (the ``fault/replan`` verifier rule, re-derived here end to end);
+  - every row already passed the full ``fault/*`` verifier rules inside
+    `run_with_recovery(verify=True)` — a violation raises before any JSON
+    is written.
+
+Run via ``make faults-bench``; results land in BENCH_faults.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+KINDS = ("link-down", "link-flap", "node-leave", "node-join")
+NS = (12, 16)
+DELTAS = (10e-6, 1e-3)
+FAIL_FRACS = (0.25, 0.5, 0.75)
+CHUNKS_PER_MSG = 8
+
+
+def make_trace(n: int):
+    from repro.workloads import mixed_trace
+
+    return mixed_trace(n, moe_layers=1, train_steps=1, decode_steps=3)
+
+
+def recovery_for(kind: str, n: int, delta: float, fail_frac: float, *,
+                 verify: bool = True):
+    """One full fault-recovery cycle for a grid point.
+
+    Returns ``(RecoveryResult, FaultTimeline)``.  Also used by
+    `benchmarks.verify_gate.audit_faults` to re-derive the committed
+    baseline rows independently (with ``verify=False`` there, since the
+    gate runs the ``fault/*`` rules itself and reports the findings).
+    """
+    from repro.core import PAPER_DEFAULT, FabricSim
+    from repro.core.faults import FaultSpec, FaultTimeline
+    from repro.workloads import plan_trace, run_with_recovery
+
+    cm = PAPER_DEFAULT.replace(delta=delta)
+    trace = make_trace(n)
+    plan = plan_trace(trace, cm, mode="carryover")
+    clean = FabricSim(mode="sparse", chunks_per_msg=CHUNKS_PER_MSG).run_trace(
+        plan.fabric_phases(), cm)
+    fault_time = fail_frac * clean.completion
+    node = n if kind == "node-join" else n // 3
+    repair = 0.05 * clean.completion if kind == "link-flap" else 0.0
+    policy = "requeue" if kind == "link-flap" else "drop"
+    faults = FaultTimeline(n=n, faults=(
+        FaultSpec(kind=kind, time=fault_time, node=node, repair_s=repair),),
+        policy=policy)
+    faults.check_horizon(clean.completion)
+    rr = run_with_recovery(trace, cm, faults=faults,
+                           chunks_per_msg=CHUNKS_PER_MSG, verify=verify)
+    return rr, faults
+
+
+def bench_row(kind: str, n: int, delta: float, fail_frac: float) -> dict:
+    """One fault-recovery cycle -> one benchmark row."""
+    rr, faults = recovery_for(kind, n, delta, fail_frac)
+    ds = rr.degraded
+    return {
+        "trace": "mixed", "kind": kind, "n": n, "delta": delta,
+        "fail_frac": fail_frac, "policy": faults.policy,
+        "fault_time_s": faults.faults[0].time,
+        "completed_phases": ds.completed_phases,
+        "committed_events": len(rr.committed_events),
+        "new_n": ds.new_n,
+        "committed_chunks": ds.committed_chunks,
+        "lost_chunks": ds.lost_chunks,
+        "requeued_chunks": ds.requeued_chunks,
+        "recovery_total_s": rr.recovery_total,
+        "restart_total_s": rr.restart_total,
+        "recovery_ratio": round(rr.recovery_ratio, 6),
+        "bit_identical": rr.bit_identical,
+        "mispredictions": rr.stats.mispredictions,
+    }
+
+
+def bench_grid(kinds=KINDS, ns=NS, deltas=DELTAS,
+               fail_fracs=FAIL_FRACS) -> list[dict]:
+    return [bench_row(kind, n, delta, frac)
+            for kind in kinds for n in ns for delta in deltas
+            for frac in fail_fracs]
+
+
+def check_gates(rows: list[dict]) -> list[str]:
+    errors = []
+    for row in rows:
+        key = (f"kind={row['kind']} n={row['n']} delta={row['delta']} "
+               f"frac={row['fail_frac']}")
+        if row["recovery_ratio"] > 1 + 1e-9:
+            errors.append(
+                f"{key}: recovery ratio {row['recovery_ratio']} > 1 — "
+                f"resuming from the snapshot lost to a full restart")
+        if not row["bit_identical"]:
+            errors.append(
+                f"{key}: recovered result is not bit-identical to a clean "
+                f"run of the reduced trace at n'={row['new_n']}")
+    return errors
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--smoke", action="store_true",
+                    help="all four kinds at one mid-trace grid point (subset "
+                         "of the full grid so the committed baseline still "
+                         "covers every row)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        rows = bench_grid(ns=(12,), deltas=(1e-3,), fail_fracs=(0.5,))
+    else:
+        rows = bench_grid()
+    print("kind,n,delta,fail_frac,completed_phases,new_n,"
+          "recovery_total_s,restart_total_s,recovery_ratio,bit_identical")
+    for row in rows:
+        print(f"{row['kind']},{row['n']},{row['delta']},{row['fail_frac']},"
+              f"{row['completed_phases']},{row['new_n']},"
+              f"{row['recovery_total_s']:.6e},{row['restart_total_s']:.6e},"
+              f"{row['recovery_ratio']},{row['bit_identical']}")
+    errors = check_gates(rows)
+    if errors:
+        # gate first: never overwrite the committed baseline with violating data
+        for e in errors:
+            print(f"# FAIL: {e}", file=sys.stderr)
+        sys.exit(1)
+    if args.json:
+        out = {
+            "meta": {
+                "what": "fault-recovery cycle over kind x n x delta x "
+                        "failure time on the mixed trace: resume-from-"
+                        "snapshot vs restart-from-scratch totals, chunk "
+                        "fate, and bit-identity vs a clean reduced-world "
+                        "run (repro.workloads.recovery, BENCH_faults "
+                        "baseline)",
+                "chunks_per_msg": CHUNKS_PER_MSG,
+            },
+            "rows": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"# wrote {len(rows)} rows to {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,8 +19,11 @@ Usage:
     python -m benchmarks.verify_gate [--root DIR] [--max-pool N]
 
 Reads whichever of BENCH_planner.json / BENCH_trace.json /
-BENCH_online.json / BENCH_sim_scale.json exist under --root (default: the
-repository root, next to this package).
+BENCH_online.json / BENCH_sim_scale.json / BENCH_faults.json exist under
+--root (default: the repository root, next to this package).  The faults
+baseline is the one exception to the no-simulator rule: re-deriving each
+row's `DegradedState` requires replaying the faulted trace, after which the
+``fault/*`` rules audit the degraded state and recovery plan statically.
 """
 from __future__ import annotations
 
@@ -161,6 +164,34 @@ def audit_sim(rows: list[dict]) -> tuple[list[str], int, list[str]]:
     return findings, audited, certified_lines
 
 
+def audit_faults(rows: list[dict]) -> tuple[list[str], int]:
+    """Re-run every fault-recovery grid point and audit with fault/* rules.
+
+    `run_with_recovery` is invoked with ``verify=False`` — the gate runs
+    `verify_timeline` / `verify_degraded` / `verify_recovery` itself so a
+    violation is *reported* here rather than raised mid-derivation.
+    """
+    from benchmarks.faults_bench import CHUNKS_PER_MSG, recovery_for
+    from repro.analysis import (verify_degraded, verify_recovery,
+                                verify_timeline)
+
+    findings, audited = [], 0
+    for row in rows:
+        rr, faults = recovery_for(row["kind"], row["n"], row["delta"],
+                                  row["fail_frac"], verify=False)
+        audited += 1
+        found = (verify_timeline(faults)
+                 + verify_degraded(rr.degraded,
+                                   phases=rr.plan.fabric_phases(),
+                                   chunks_per_msg=CHUNKS_PER_MSG)
+                 + verify_recovery(rr.degraded, rr.recovery_plan,
+                                   clean_plan=rr.clean_plan))
+        findings += [f"faults kind={row['kind']} n={row['n']} "
+                     f"delta={row['delta']} frac={row['fail_frac']}: {v}"
+                     for v in found]
+    return findings, audited
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--root", default=os.path.join(
@@ -202,6 +233,15 @@ def main(argv=None) -> None:
               f"{len(found)} violations")
     else:
         print("# skip BENCH_sim_scale.json: not present")
+    rows = _load_rows(args.root, "BENCH_faults.json")
+    if rows:
+        found, audited = audit_faults(rows)
+        findings += found
+        total += audited
+        print(f"# BENCH_faults.json: {audited} recovery cycles audited, "
+              f"{len(found)} violations")
+    else:
+        print("# skip BENCH_faults.json: not present")
 
     if total == 0:
         print("# FAIL: no baselines found to audit", file=sys.stderr)

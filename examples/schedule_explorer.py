@@ -22,6 +22,18 @@ see repro/workloads/):
 
 plans the trace jointly (carryover) and prints the per-collective schedules,
 boundary reuse, and the amortization win over cold-fabric re-planning.
+
+Fault injection (add --faults to a --trace run):
+
+  PYTHONPATH=src python examples/schedule_explorer.py \
+      --trace mixed --n 48 --delta-us 1000 --faults spec.json
+
+loads a `repro.core.faults.FaultTimeline` JSON spec, replays the planned
+trace under it, and prints the degraded state (committed prefix, surviving
+world, chunk fate) plus the resume-from-snapshot vs restart-from-scratch
+comparison.  A spec whose fault times all fall at/after the clean run's
+completion is rejected up front (ValueError): such a timeline never takes
+effect and loading it is a mistake, not a degraded run.
 """
 import argparse
 
@@ -68,6 +80,37 @@ def explore_trace(args, cm):
         with open(args.save_plan, "w") as f:
             f.write(carry.to_json(indent=1))
         print(f"\nwrote trace plan to {args.save_plan}")
+    if args.faults:
+        explore_faults(args, cm, trace, carry)
+
+
+def explore_faults(args, cm, trace, carry):
+    from repro.core import FabricSim, FaultTimeline
+    from repro.workloads import run_with_recovery
+
+    with open(args.faults) as f:
+        faults = FaultTimeline.from_json(f.read())
+    clean = FabricSim(mode="sparse", chunks_per_msg=8).run_trace(
+        carry.fabric_phases(), cm)
+    # reject specs that never take effect before running anything
+    faults.check_horizon(clean.completion)
+    rr = run_with_recovery(trace, cm, faults=faults)
+    ds = rr.degraded
+    print(f"\n  fault: {ds.fault.kind} at node {ds.fault.node}, "
+          f"t={ds.fault.time * 1e3:.3f} ms (clean completion "
+          f"{clean.completion * 1e3:.3f} ms)")
+    print(f"    committed: {ds.completed_phases} phases / "
+          f"{len(rr.committed_events)} events; surviving world "
+          f"n={ds.n} -> n'={ds.new_n}")
+    print(f"    chunks: {ds.committed_chunks} committed, "
+          f"{ds.lost_chunks} lost, {ds.requeued_chunks} re-queued "
+          f"(policy={ds.policy})")
+    print(f"    re-plan: {len(rr.recovery_plan.phases)} phases at n'="
+          f"{ds.new_n}, bit-identical to clean reduced run: "
+          f"{rr.bit_identical}")
+    print(f"    resume from snapshot {rr.recovery_total * 1e3:10.3f} ms")
+    print(f"    restart from scratch {rr.restart_total * 1e3:10.3f} ms   "
+          f"recovery ratio {rr.recovery_ratio:.3f}x")
 
 
 def main():
@@ -101,7 +144,13 @@ def main():
                     choices=["moe", "train", "decode", "mixed"],
                     help="plan a whole workload trace (carryover vs cold vs "
                          "static) instead of a single collective")
+    ap.add_argument("--faults", default=None, metavar="SPEC.json",
+                    help="FaultTimeline JSON to inject into the --trace run "
+                         "(fault times must fall inside the clean run's "
+                         "horizon)")
     args = ap.parse_args()
+    if args.faults and not args.trace:
+        ap.error("--faults requires --trace (faults strike a running trace)")
 
     n, m = args.n, args.m_mb * MB
     cm = PAPER_DEFAULT.replace(delta=args.delta_us * 1e-6,

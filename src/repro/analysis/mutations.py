@@ -25,8 +25,9 @@ from repro.core.batchsim import FabricSnapshot, compile_tape
 from repro.core.cost_model import PAPER_DEFAULT
 from repro.core.schedules import Schedule, every_step_schedule, static_schedule
 
-from .verifier import (verify_plan, verify_schedule, verify_served_plan,
-                       verify_snapshot, verify_tape, verify_trace_plan,
+from .verifier import (verify_degraded, verify_plan, verify_recovery,
+                       verify_schedule, verify_served_plan, verify_snapshot,
+                       verify_tape, verify_timeline, verify_trace_plan,
                        verify_window_choice)
 from .violations import Violation
 
@@ -139,6 +140,36 @@ def _good_snapshot() -> FabricSnapshot:
                           port_free=(1.5,) * 8)
 
 
+@functools.lru_cache(maxsize=None)
+def _good_recovery():
+    """One real fault-recovery cycle (link-down halfway through a small
+    mixed trace at n=8) — source of the DegradedState / recovery-plan
+    fixtures the fault/* mutations corrupt."""
+    from repro.core.fabricsim import FabricSim
+    from repro.core.faults import FaultSpec, FaultTimeline
+    from repro.workloads.recovery import run_with_recovery
+    from repro.workloads.trace_planner import plan_trace
+    from repro.workloads.traces import mixed_trace
+
+    trace = mixed_trace(8, moe_layers=1, train_steps=1, decode_steps=2)
+    plan = plan_trace(trace, PAPER_DEFAULT, mode="carryover",
+                      planner=_planner())
+    clean = FabricSim(mode="sparse", chunks_per_msg=8).run_trace(
+        plan.fabric_phases(), PAPER_DEFAULT)
+    tl = FaultTimeline(n=8, faults=(
+        FaultSpec(kind="link-down", time=0.5 * clean.completion, node=3),))
+    return run_with_recovery(trace, PAPER_DEFAULT, faults=tl,
+                             planner=_planner(), verify=False)
+
+
+@functools.lru_cache(maxsize=None)
+def _good_timeline():
+    from repro.core.faults import FaultTimeline
+
+    ds = _good_recovery().degraded
+    return FaultTimeline(n=ds.n, faults=(ds.fault,))
+
+
 # --- the corruption catalogue -------------------------------------------------
 
 
@@ -239,6 +270,49 @@ def _build_mutations() -> tuple[Mutation, ...]:
         # a DP claiming this fits under cap=2 has overspent the trace budget
         return verify_window_choice(16, [cand], cap=2)
 
+    def fault_kind():
+        tl = _good_timeline()
+        meteor = _field_copy(tl.faults[0], kind="meteor-strike")
+        return verify_timeline(_field_copy(tl, faults=(meteor,)))
+
+    def fault_order():
+        from repro.core.faults import FaultSpec
+
+        tl = _good_timeline()
+        f = tl.faults[0]
+        earlier = FaultSpec(kind="node-leave", time=f.time / 2, node=1)
+        return verify_timeline(_field_copy(tl, faults=(f, earlier)))
+
+    def fault_mask():
+        ds = _good_recovery().degraded
+        return verify_degraded(_field_copy(ds,
+                                           survivors=tuple(range(ds.n))))
+
+    def fault_leak():
+        ds = _good_recovery().degraded
+        return verify_degraded(_field_copy(ds,
+                                           lost_chunks=ds.lost_chunks + 1))
+
+    def fault_conserve():
+        rr = _good_recovery()
+        ds = _field_copy(rr.degraded,
+                         committed_chunks=rr.degraded.committed_chunks + 1)
+        return verify_degraded(ds, phases=rr.plan.fabric_phases(),
+                               chunks_per_msg=8)
+
+    def fault_route():
+        rr = _good_recovery()
+        # the original full-trace plan still targets the pre-fault world:
+        # serving it post-fault routes traffic over the dead circuit
+        return verify_recovery(rr.degraded, rr.plan)
+
+    def fault_replan():
+        rr = _good_recovery()
+        # right world size, wrong schedules: the restart plan re-runs the
+        # whole trace, not the committed remainder
+        return verify_recovery(rr.degraded, rr.restart_plan,
+                               clean_plan=rr.clean_plan)
+
     def snap_shape():
         return verify_snapshot(_field_copy(
             _good_snapshot(), node_ready=_good_snapshot().node_ready[:-1]))
@@ -310,6 +384,21 @@ def _build_mutations() -> tuple[Mutation, ...]:
         Mutation("snapshot port arrays truncated", "snap/shape", snap_shape),
         Mutation("snapshot parked on invalid circuit", "snap/range",
                  snap_range),
+        # --- faults / degraded mode / recovery --------------------------------
+        Mutation("fault timeline with unknown kind", "fault/spec",
+                 fault_kind),
+        Mutation("fault timeline out of time order", "fault/order",
+                 fault_order),
+        Mutation("degraded survivors include the dead port", "fault/mask",
+                 fault_mask),
+        Mutation("degraded chunk ledger leaks in flight", "fault/conserve",
+                 fault_leak),
+        Mutation("degraded committed count drifts from tapes",
+                 "fault/conserve", fault_conserve),
+        Mutation("recovery plan routed over the dead circuit", "fault/route",
+                 fault_route),
+        Mutation("recovery schedules diverge from clean reference",
+                 "fault/replan", fault_replan),
     )
 
 

@@ -658,6 +658,209 @@ def verify_window_choice(n: int, chosen, *, init_spent: int = 0,
     return out
 
 
+# --- fault timelines / degraded state / recovery ------------------------------
+
+
+def verify_timeline(tl) -> list[Violation]:
+    """Structural validity of a `core.faults.FaultTimeline`, re-derived
+    independently of its constructor checks (a timeline deserialized or
+    field-copied past `__post_init__` must still be rejected here)."""
+    from repro.core.faults import DELIVERY_POLICIES, FAULT_KINDS
+
+    out: list[Violation] = []
+    loc = f"faults n={tl.n}"
+
+    def bad(rule: str, message: str, repro: str = ""):
+        out.append(Violation(rule=rule, location=loc, message=message,
+                             repro=repro))
+
+    if tl.n < 2:
+        bad("fault/spec", f"need at least 2 nodes, got n={tl.n}")
+    if tl.policy not in DELIVERY_POLICIES:
+        bad("fault/spec", f"delivery policy {tl.policy!r} is not one of "
+            f"{DELIVERY_POLICIES}")
+    if not tl.faults:
+        bad("fault/spec", "a fault timeline needs at least one fault")
+    for i, f in enumerate(tl.faults):
+        where = f" fault {i}"
+        if f.kind not in FAULT_KINDS:
+            bad("fault/spec", f"kind {f.kind!r} is not one of {FAULT_KINDS}",
+                repro=where)
+        if not (math.isfinite(f.time) and f.time >= 0):
+            bad("fault/spec", f"time {f.time} must be finite and >= 0",
+                repro=where)
+        if not (math.isfinite(f.repair_s) and f.repair_s >= 0):
+            bad("fault/spec", f"repair_s {f.repair_s} must be finite and "
+                f">= 0", repro=where)
+        if f.repair_s > 0 and f.kind != "link-flap":
+            bad("fault/spec", f"repair_s {f.repair_s} on a {f.kind!r} fault "
+                f"(only link-flap repairs)", repro=where)
+        if f.kind == "node-join":
+            if f.node != tl.n:
+                bad("fault/spec", f"node-join must join at index n={tl.n}, "
+                    f"got node={f.node}", repro=where)
+        elif not 0 <= f.node < tl.n:
+            bad("fault/spec", f"node {f.node} outside [0, {tl.n})",
+                repro=where)
+    for i, (a, b) in enumerate(zip(tl.faults, tl.faults[1:], strict=False)):
+        if b.time < a.time:
+            bad("fault/order", f"fault {i + 1} at t={b.time} precedes fault "
+                f"{i} at t={a.time}: timelines are time-sorted")
+    return out
+
+
+def verify_degraded(ds, phases=None, chunks_per_msg: int = 32
+                    ) -> list[Violation]:
+    """Consistency of a `core.faults.DegradedState` against its fault.
+
+    ``phases`` (the (schedule, m) pairs the faulted run played) enables the
+    chunk-conservation recount: the committed chunks are re-derived from the
+    committed phases' tapes — n * C * sum(segment hops) per phase — instead
+    of trusting the engine's counter.
+    """
+    from repro.core.faults import (ABRUPT_KINDS, DELIVERY_POLICIES,
+                                   world_after)
+
+    out: list[Violation] = []
+    loc = f"degraded n={ds.n} kind={ds.fault.kind}"
+
+    def bad(rule: str, message: str, repro: str = ""):
+        out.append(Violation(rule=rule, location=loc, message=message,
+                             repro=repro))
+
+    # fault/mask: surviving world and dead circuits re-derived from the kind
+    survivors, dead = world_after(ds.n, ds.fault)
+    if tuple(ds.survivors) != survivors:
+        bad("fault/mask", f"survivors {tuple(ds.survivors)} != re-derived "
+            f"{survivors} for a {ds.fault.kind} at node {ds.fault.node}")
+    if tuple(ds.dead_ports) != dead:
+        bad("fault/mask", f"dead_ports {tuple(ds.dead_ports)} != re-derived "
+            f"{dead}")
+    if set(ds.dead_ports) & set(ds.survivors):
+        bad("fault/mask", f"dead ports {tuple(ds.dead_ports)} overlap the "
+            f"surviving world: traffic would route over a dead circuit")
+    if ds.new_n < 2:
+        bad("fault/mask", f"surviving world has {ds.new_n} nodes; schedules "
+            f"need at least 2")
+    abrupt = ds.fault.kind in ABRUPT_KINDS
+    if abrupt and ds.aborted_phase != ds.completed_phases:
+        bad("fault/mask", f"abrupt {ds.fault.kind} must abort the phase "
+            f"after the committed prefix: aborted_phase={ds.aborted_phase} "
+            f"!= completed_phases={ds.completed_phases}")
+    if not abrupt and ds.aborted_phase is not None:
+        bad("fault/mask", f"graceful {ds.fault.kind} drains the in-flight "
+            f"phase, but aborted_phase={ds.aborted_phase}")
+    if ds.completed_phases < 0:
+        bad("fault/mask", f"completed_phases {ds.completed_phases} < 0")
+    if phases is not None and ds.completed_phases >= len(phases):
+        bad("fault/mask", f"completed_phases {ds.completed_phases} leaves no "
+            f"work in a {len(phases)}-phase trace: the fault never took "
+            f"effect")
+    if ds.completed_phases > 0 and ds.snapshot is None:
+        bad("fault/mask", f"{ds.completed_phases} committed phases but no "
+            f"committed-prefix snapshot")
+
+    # resume-clock re-derivation per kind
+    if ds.fault.kind == "link-down" and ds.resume_clock != ds.fault.time:
+        bad("fault/mask", f"link-down resumes at the fault time "
+            f"{ds.fault.time!r}, got {ds.resume_clock!r}")
+    if ds.fault.kind == "link-flap" \
+            and ds.resume_clock != ds.fault.time + ds.fault.repair_s:
+        bad("fault/mask", f"link-flap resumes at fault time + repair = "
+            f"{ds.fault.time + ds.fault.repair_s!r}, got {ds.resume_clock!r}")
+    if ds.snapshot is not None:
+        if not abrupt and not _close(ds.resume_clock, ds.snapshot.clock):
+            bad("fault/mask", f"graceful faults resume at the drained "
+                f"boundary's clock {ds.snapshot.clock!r}, got "
+                f"{ds.resume_clock!r}")
+        if ds.snapshot.clock > ds.resume_clock * (1 + REL_TOL) + REL_TOL:
+            bad("fault/mask", f"snapshot clock {ds.snapshot.clock!r} is past "
+                f"the resume clock {ds.resume_clock!r}: the committed prefix "
+                f"would not have drained before the fault")
+        out.extend(verify_snapshot(ds.snapshot))
+
+    # fault/conserve: the chunk ledger
+    if ds.policy not in DELIVERY_POLICIES:
+        bad("fault/conserve", f"delivery policy {ds.policy!r} is not one of "
+            f"{DELIVERY_POLICIES}")
+    for name in ("committed_chunks", "in_flight_chunks", "lost_chunks",
+                 "requeued_chunks"):
+        if getattr(ds, name) < 0:
+            bad("fault/conserve", f"{name} {getattr(ds, name)} < 0")
+    if ds.lost_chunks + ds.requeued_chunks != ds.in_flight_chunks:
+        bad("fault/conserve",
+            f"lost {ds.lost_chunks} + requeued {ds.requeued_chunks} != "
+            f"in-flight {ds.in_flight_chunks}: chunks leaked at the fault")
+    if ds.policy == "drop" and ds.requeued_chunks:
+        bad("fault/conserve", f"policy 'drop' re-queued "
+            f"{ds.requeued_chunks} chunks")
+    if ds.policy == "requeue" and ds.lost_chunks:
+        bad("fault/conserve", f"policy 'requeue' lost {ds.lost_chunks} "
+            f"chunks")
+    if not abrupt and ds.in_flight_chunks:
+        bad("fault/conserve", f"graceful {ds.fault.kind} drains the "
+            f"in-flight phase, but {ds.in_flight_chunks} chunks were in "
+            f"flight")
+    if phases is not None and ds.completed_phases <= len(phases):
+        C = max(1, int(chunks_per_msg))
+        want = sum(ds.n * C * sum(compile_tape(s).seg_hops)
+                   for s, _ in phases[:ds.completed_phases])
+        if ds.committed_chunks != want:
+            bad("fault/conserve",
+                f"committed_chunks {ds.committed_chunks} != {want} services "
+                f"recounted from the {ds.completed_phases} committed phases' "
+                f"tapes (n * C * segment hops)")
+    return out
+
+
+def verify_recovery(ds, recovery_plan, clean_plan=None) -> list[Violation]:
+    """Audit a degraded-mode recovery plan against its `DegradedState`.
+
+    ``fault/route``: the plan must target exactly the surviving world — no
+    schedule may route traffic over a dead circuit or a departed node.
+    ``fault/replan``: against ``clean_plan`` (the offline carryover plan of
+    the reduced trace), the recovery plan must be bit-identical — same
+    schedules, same total — so the recovered result matches a clean run of
+    the reduced world exactly.
+    """
+    out: list[Violation] = []
+    loc = f"recovery n={ds.n}->{ds.new_n} kind={ds.fault.kind}"
+
+    def bad(rule: str, message: str, repro: str = ""):
+        out.append(Violation(rule=rule, location=loc, message=message,
+                             repro=repro))
+
+    if set(ds.dead_ports) & set(ds.survivors):
+        bad("fault/route", f"dead ports {tuple(ds.dead_ports)} overlap the "
+            f"surviving world {tuple(ds.survivors)}")
+    if recovery_plan.trace.n != ds.new_n:
+        bad("fault/route",
+            f"recovery plan targets n={recovery_plan.trace.n}, the "
+            f"surviving world has {ds.new_n} nodes: traffic would be routed "
+            f"over the {'dead circuit' if ds.dead_ports else 'old world'}")
+    for i, p in enumerate(recovery_plan.phases):
+        if p.schedule.n != ds.new_n:
+            bad("fault/route", f"phase {i} schedule is for n={p.schedule.n} "
+                f"!= surviving {ds.new_n}")
+    out.extend(verify_trace_plan(recovery_plan))
+
+    if clean_plan is not None:
+        if clean_plan.trace.n != ds.new_n:
+            bad("fault/replan", f"clean reference plan targets "
+                f"n={clean_plan.trace.n} != surviving {ds.new_n}")
+        if recovery_plan.schedules() != clean_plan.schedules():
+            bad("fault/replan",
+                "recovery schedules differ from the offline carryover plan "
+                "of the reduced trace: the recovered result cannot be "
+                "bit-identical to a clean run at the reduced n")
+        elif recovery_plan.total_time != clean_plan.total_time:
+            bad("fault/replan",
+                f"identical schedules but total {recovery_plan.total_time!r}"
+                f" != clean {clean_plan.total_time!r}: the boundary ledger "
+                f"diverged")
+    return out
+
+
 # --- fabric snapshots ---------------------------------------------------------
 
 

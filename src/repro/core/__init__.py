@@ -16,6 +16,10 @@ from .cost_model import (CostModel, OCS_TECHNOLOGIES, PAPER_DEFAULT, TPU_V5E,
 from .fabricsim import (FabricResult, FabricSim, TraceFabricResult,
                         simulate_fabric, simulate_trace, straggler_speeds,
                         trace_boundary_changed)
+from .faults import (ABRUPT_KINDS, DELIVERY_POLICIES, FAULT_KINDS,
+                     DegradedState, FaultSpec, FaultTimeline, latest_snapshot,
+                     random_timeline, snapshot_to_tree, tree_to_snapshot,
+                     world_after)
 from .schedules import (Plan, Schedule, SegmentTables, ag_transmission_optimal,
                         ag_transmission_optimal_all, candidate_schedules,
                         changed_links, clear_schedule_caches, cstar_a2a,
@@ -47,6 +51,9 @@ __all__ = [
     "static_schedule",
     "FabricResult", "FabricSim", "TraceFabricResult", "simulate_fabric",
     "simulate_trace", "trace_boundary_changed", "straggler_speeds",
+    "ABRUPT_KINDS", "DELIVERY_POLICIES", "FAULT_KINDS", "DegradedState",
+    "FaultSpec", "FaultTimeline", "latest_snapshot", "random_timeline",
+    "snapshot_to_tree", "tree_to_snapshot", "world_after",
     "StepCost", "TimeBreakdown", "allreduce_time", "allreduce_time_overlap",
     "collective_time", "collective_time_overlap",
     "BlockedRing", "Topology", "ring", "subring_topology", "baselines",

@@ -70,13 +70,16 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Sequence
+from typing import TYPE_CHECKING, Sequence
 
 import numpy as np
 
 from .bruck import step_counts
 from .cost_model import CostModel
 from .schedules import Schedule
+
+if TYPE_CHECKING:  # faults imports us; only the annotation needs the type
+    from .faults import FaultTimeline
 
 
 def validate_rates(name: str, rates, n: int) -> list[float]:
@@ -277,6 +280,9 @@ class TraceLane:
              start at the snapshot's busy-until times and configured circuit
              instead of an idle fabric, and results report trace-cumulative
              accounting.
+    faults : optional `core.faults.FaultTimeline` — the lane is routed to
+             the scalar fault-injecting oracle (`FabricSim.run_trace`) and
+             its result carries a `DegradedState` when a fault takes effect.
     Other knobs are per-lane exactly as in `BatchLane`.
     """
 
@@ -286,6 +292,7 @@ class TraceLane:
     link_speed: tuple[float, ...] | None = None
     payload_scale: tuple[float, ...] | None = None
     initial: FabricSnapshot | None = None
+    faults: FaultTimeline | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "phases", validate_phases(self.phases))
@@ -293,6 +300,10 @@ class TraceLane:
         if self.initial is not None and self.initial.n != n:
             raise ValueError(
                 f"initial snapshot is for n={self.initial.n}, phases have "
+                f"n={n}")
+        if self.faults is not None and self.faults.n != n:
+            raise ValueError(
+                f"fault timeline is for n={self.faults.n}, phases have "
                 f"n={n}")
         if not 0.0 <= self.overlap <= 1.0:
             raise ValueError(f"overlap must be in [0, 1], got {self.overlap}")
@@ -674,6 +685,7 @@ class BatchTraceResult:
     certified: np.ndarray       # [B] bool (static fast-path certificate held)
     port_free: np.ndarray       # [B, n] final per-port busy-until
     lanes: tuple[TraceLane, ...]
+    degraded: tuple = ()        # [B] DegradedState | None (faulted lanes)
 
     def __len__(self) -> int:
         return len(self.lanes)
@@ -681,6 +693,11 @@ class BatchTraceResult:
     def snapshot(self, i: int) -> FabricSnapshot:
         """Lane i's resumable end-of-trace fabric state."""
         lane = self.lanes[i]
+        if self.degraded and self.degraded[i] is not None:
+            raise ValueError(
+                f"lane {i} ended degraded (a fault took effect); its "
+                f"resumable state is the committed-prefix snapshot at "
+                f"result({i}).degraded.snapshot")
         return FabricSnapshot(
             n=lane.n,
             link_offset=lane.phases[-1][0].link_offsets()[-1],
@@ -704,7 +721,8 @@ class BatchTraceResult:
             boundary_changed=trace_boundary_changed(
                 [sched for sched, _ in self.lanes[i].phases]),
             reconfigs_paid=int(self.reconfigs_paid[i]),
-            delta_stall=float(self.delta_stall[i]))
+            delta_stall=float(self.delta_stall[i]),
+            degraded=self.degraded[i] if self.degraded else None)
 
 
 def batch_run_trace(lanes: Sequence[TraceLane], cm: CostModel, *,
@@ -723,6 +741,12 @@ def batch_run_trace(lanes: Sequence[TraceLane], cm: CostModel, *,
     ``certify`` engages the static fast-path certifier exactly as in
     `batch_run` (snapshot-resumed lanes are never certified — the restored
     per-port state breaks the rotational symmetry the certificate needs).
+
+    Lanes carrying a `TraceLane.faults` timeline always route to the scalar
+    fault-injecting oracle (they are never certified and never fast-path —
+    the vectorized playback has no notion of a mid-trace world change) and
+    their `DegradedState` lands in ``BatchTraceResult.degraded``; such
+    lanes therefore require ``allow_fallback=True``.
     """
     lanes = tuple(lanes)
     if not lanes:
@@ -782,12 +806,20 @@ def batch_run_trace(lanes: Sequence[TraceLane], cm: CostModel, *,
             init_paid[b] = snap.reconfigs_paid
             init_stall[b] = snap.delta_stall
 
+    faulted = np.array([lane.faults is not None for lane in lanes])
+    if faulted.any() and not allow_fallback:
+        raise ValueError(
+            f"fault-injecting trace lanes {np.flatnonzero(faulted).tolist()} "
+            f"require allow_fallback=True: faulted lanes always route to "
+            f"the scalar oracle")
+
     if certify:
         from repro.analysis.certifier import certify_trace_batch  # no cycle
 
         certified = certify_trace_batch(lanes, cm)
     else:
         certified = np.zeros(B, dtype=bool)
+    certified &= ~faulted  # a certificate cannot cover a mid-trace fault
 
     node_done, step_done, ok, port_free = _play(
         n=n, C=C, cm=cm, nb_step=nb_step, g_step=g_step, hops=hops,
@@ -795,6 +827,7 @@ def batch_run_trace(lanes: Sequence[TraceLane], cm: CostModel, *,
         speed=speed, scale=scale, F0=F0, ready0=ready0, changed0=changed0,
         check_order=not bool(certified.all()))
     ok |= certified  # certified lanes are exact by proof, not by observation
+    ok &= ~faulted   # force faulted lanes through the scalar oracle
 
     completion = node_done.max(axis=1)
     phase_done = step_done[:, phase_last]
@@ -804,6 +837,7 @@ def batch_run_trace(lanes: Sequence[TraceLane], cm: CostModel, *,
     delta_stall = paid_run * delta_eff + init_stall
     chunks_moved = (n * C * hops.sum(axis=1) + init_chunks).astype(np.int64)
 
+    degraded_list: list = [None] * B
     if not ok.all():
         if not allow_fallback:
             raise RuntimeError(
@@ -820,7 +854,8 @@ def batch_run_trace(lanes: Sequence[TraceLane], cm: CostModel, *,
                 payload_scale=(list(lane.payload_scale)
                                if lane.payload_scale is not None else None))
             res = sim.run_trace(lane.phases, cm.replace(delta=float(delta[b])),
-                                initial=lane.initial, capture_state=True)
+                                initial=lane.initial, capture_state=True,
+                                faults=lane.faults)
             completion[b] = res.completion
             node_done[b] = res.node_done
             step_done[b] = res.step_done
@@ -828,13 +863,20 @@ def batch_run_trace(lanes: Sequence[TraceLane], cm: CostModel, *,
             chunks_moved[b] = res.chunks_moved
             reconfigs_paid[b] = res.reconfigs_paid
             delta_stall[b] = res.delta_stall
-            port_free[b] = res.final_state.port_free
+            degraded_list[b] = res.degraded
+            if res.final_state is not None:
+                port_free[b] = res.final_state.port_free
+            else:
+                # degraded before any boundary with no initial snapshot:
+                # nothing committed, no resumable port state
+                port_free[b] = np.inf
 
     return BatchTraceResult(
         completion=completion, node_done=node_done, step_done=step_done,
         phase_done=phase_done, chunks_moved=chunks_moved,
         reconfigs_paid=reconfigs_paid, delta_stall=delta_stall,
-        fast_path=ok, certified=certified, port_free=port_free, lanes=lanes)
+        fast_path=ok, certified=certified, port_free=port_free, lanes=lanes,
+        degraded=tuple(degraded_list))
 
 
 def batch_completion_times(schedules: Sequence[Schedule], m: float,

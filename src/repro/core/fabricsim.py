@@ -57,6 +57,8 @@ from .batchsim import (BatchLane, FabricSnapshot, TraceLane, batch_run,
                        batch_run_trace, compile_tape, validate_phases,
                        validate_rates)
 from .cost_model import CostModel
+from .faults import (ABRUPT_KINDS, DegradedState, FaultTimeline,
+                     snapshot_to_tree, world_after)
 from .schedules import Schedule, changed_links
 
 _MODES = ("sparse", "full-pause", "batched")
@@ -120,6 +122,16 @@ class TraceFabricResult:
     final_state      : resumable end-of-trace fabric state (populated only
                        when `run_trace` is called with ``capture_state=True``;
                        feed it back as ``initial`` to continue the trace).
+                       For a degraded run this is the committed-prefix
+                       snapshot (`degraded.snapshot`).
+    degraded         : `core.faults.DegradedState` when a fault timeline cut
+                       the run short: ``completion`` / ``node_done`` and the
+                       un-committed ``phase_done`` / ``step_done`` entries
+                       are inf, the accounting covers the committed prefix
+                       plus the in-flight chunks, and recovery
+                       (`repro.workloads.recovery`) consumes this state.
+                       None for a clean run (including one whose faults all
+                       land at/after trace completion).
     """
 
     completion: float
@@ -132,6 +144,7 @@ class TraceFabricResult:
     reconfigs_paid: int
     delta_stall: float
     final_state: FabricSnapshot | None = None
+    degraded: DegradedState | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,6 +158,7 @@ class _EngineOut:
     reconfigs_paid: int
     delta_stall: float
     port_free: tuple[float, ...]
+    cut_chunks: int = 0  # services started before the fault cutoff (if any)
 
 
 def trace_boundary_changed(schedules: Sequence[Schedule]) -> tuple[int, ...]:
@@ -215,7 +229,10 @@ class FabricSim:
 
     def run_trace(self, phases: Sequence[tuple[Schedule, float]],
                   cm: CostModel, *, initial: FabricSnapshot | None = None,
-                  capture_state: bool = False) -> TraceFabricResult:
+                  capture_state: bool = False,
+                  faults: FaultTimeline | None = None,
+                  checkpoint_dir: str | None = None,
+                  checkpoint_every: int = 1) -> TraceFabricResult:
         """Play back-to-back collectives on one fabric without resetting ports.
 
         ``phases`` is a sequence of (schedule, m_bytes) pairs sharing one
@@ -238,19 +255,49 @@ class FabricSim:
         collective boundary and replayed in pieces, which is what the online
         planner's re-plan-from-committed-prefix relies on.  Both require
         sparse/batched mode (full-pause is the stateless legacy baseline).
+
+        ``faults`` injects a `core.faults.FaultTimeline`: the earliest fault
+        that takes effect before the clean run drains cuts the run short and
+        the result carries a `DegradedState` (see `core.faults` for the
+        phase-granularity semantics; faults at/after completion are no-ops
+        and return the clean result).  ``checkpoint_dir`` writes an atomic
+        `FabricSnapshot` checkpoint via `repro.checkpoint.store` every
+        ``checkpoint_every`` collective boundaries, so recovery can resume
+        from the last committed boundary instead of t=0; the returned result
+        is equal to the uninterrupted run (the boundary-snapshot invariant).
+        The two are mutually exclusive in one call — checkpoint the clean
+        run, then replay the faulted one from the restored snapshot
+        (`repro.workloads.recovery` drives that loop).
         """
         phases = _validate_phases(phases)
         if self.mode == "full-pause":
-            if initial is not None or capture_state:
+            if (initial is not None or capture_state or faults is not None
+                    or checkpoint_dir is not None):
                 raise ValueError(
-                    "snapshot/restore requires mode='sparse' or 'batched': "
-                    "full-pause is the stateless legacy baseline (every "
-                    "collective restarts from a pre-established topology)")
+                    "snapshot/restore, fault injection and checkpointing "
+                    "require mode='sparse' or 'batched': full-pause is the "
+                    "stateless legacy baseline (every collective restarts "
+                    "from a pre-established topology)")
             return self._trace_full_pause(phases, cm)
-        if initial is not None and initial.n != phases[0][0].n:
+        n = phases[0][0].n
+        if initial is not None and initial.n != n:
             raise ValueError(
                 f"initial snapshot is for n={initial.n}, phases have "
-                f"n={phases[0][0].n}")
+                f"n={n}")
+        if faults is not None:
+            if checkpoint_dir is not None:
+                raise ValueError(
+                    "faults and checkpoint_dir are mutually exclusive in "
+                    "one call: checkpoint the clean run, then replay the "
+                    "faulted one from the restored snapshot "
+                    "(repro.workloads.recovery drives that loop)")
+            if faults.n != n:
+                raise ValueError(
+                    f"fault timeline is for n={faults.n}, phases have n={n}")
+        if checkpoint_dir is not None:
+            return self._trace_checkpointed(
+                phases, cm, checkpoint_dir, max(1, int(checkpoint_every)),
+                initial=initial, capture_state=capture_state)
         if self.mode == "batched":
             lane = TraceLane(
                 phases=phases, overlap=self.overlap,
@@ -258,13 +305,18 @@ class FabricSim:
                             if self.link_speed is not None else None),
                 payload_scale=(tuple(self.payload_scale)
                                if self.payload_scale is not None else None),
-                initial=initial)
+                initial=initial, faults=faults)
             batch = batch_run_trace(
                 [lane], cm, chunks_per_msg=self.chunks_per_msg)
             res = batch.result(0)
             if capture_state:
-                res = dataclasses.replace(res, final_state=batch.snapshot(0))
+                final = (res.degraded.snapshot if res.degraded is not None
+                         else batch.snapshot(0))
+                res = dataclasses.replace(res, final_state=final)
             return res
+        if faults is not None:
+            return self._trace_faulted(phases, cm, faults, initial=initial,
+                                       capture_state=capture_state)
         out = self._sparse_engine(phases, cm, initial=initial)
         last, k = [], 0
         for sched, _ in phases:
@@ -309,6 +361,119 @@ class FabricSim:
             node_done=(total,) * n, chunks_moved=chunks,
             boundary_changed=trace_boundary_changed([s for s, _ in phases]),
             reconfigs_paid=reconfigs, delta_stall=stall)
+
+    # --- fault injection and checkpointed playback ---------------------------
+
+    def _trace_faulted(self, phases, cm: CostModel, faults: FaultTimeline,
+                       *, initial, capture_state) -> TraceFabricResult:
+        """Scalar faulted playback: play the trace, find the earliest fault
+        that takes effect, and surface the committed prefix as a
+        `DegradedState` (phase-granularity semantics, see `core.faults`).
+
+        The clean prefix timings are reused verbatim from the clean run —
+        the sparse engine's per-port segment gate means prefix timings never
+        depend on suffix traffic, so the committed phases of a faulted run
+        are bit-identical to the same phases of the clean one."""
+        n = phases[0][0].n
+        P = len(phases)
+        clean = self.run_trace(phases, cm, initial=initial,
+                               capture_state=capture_state)
+        pick = None
+        for f in faults.faults:
+            if f.kind in ABRUPT_KINDS:
+                if f.time < clean.completion:
+                    done = sum(1 for t in clean.phase_done if t <= f.time)
+                    pick = (f, done, done)  # aborts the in-flight phase
+                    break
+            else:
+                # graceful: the in-flight phase drains; effect lands on the
+                # first collective boundary at/after the fault time
+                done = sum(1 for t in clean.phase_done if t < f.time) + 1
+                if done < P:
+                    pick = (f, done, None)
+                    break
+        if pick is None:
+            return clean  # no fault takes effect before the trace drains
+        fault, completed, aborted = pick
+
+        if fault.kind == "link-down":
+            resume = fault.time
+        elif fault.kind == "link-flap":
+            resume = fault.time + fault.repair_s
+        else:
+            resume = clean.phase_done[completed - 1]
+
+        if completed > 0:
+            snap = self.run_trace(phases[:completed], cm, initial=initial,
+                                  capture_state=True).final_state
+        else:
+            snap = initial
+        base = initial.chunks_moved if initial is not None else 0
+        committed = (snap.chunks_moved - base) if snap is not None else 0
+
+        in_flight = 0
+        if aborted is not None:
+            # abrupt: count every chunk service started strictly before the
+            # fault; the ones beyond the committed prefix were in flight
+            out = self._sparse_engine(phases, cm, initial=initial,
+                                      cutoff=fault.time)
+            in_flight = max(0, out.cut_chunks - committed)
+        survivors, dead = world_after(n, fault)
+        degraded = DegradedState(
+            fault=fault, policy=faults.policy, n=n, survivors=survivors,
+            dead_ports=dead, completed_phases=completed,
+            aborted_phase=aborted, resume_clock=resume, snapshot=snap,
+            committed_chunks=committed, in_flight_chunks=in_flight,
+            lost_chunks=in_flight if faults.policy == "drop" else 0,
+            requeued_chunks=in_flight if faults.policy == "requeue" else 0)
+
+        inf = float("inf")
+        kept = 0  # concatenated sub-steps belonging to committed phases
+        for sched, _ in phases[:completed]:
+            kept += compile_tape(sched).S
+        return TraceFabricResult(
+            completion=inf, mode=self.mode,
+            phase_done=(clean.phase_done[:completed]
+                        + (inf,) * (P - completed)),
+            step_done=(clean.step_done[:kept]
+                       + (inf,) * (len(clean.step_done) - kept)),
+            node_done=(inf,) * n,
+            chunks_moved=base + committed + in_flight,
+            boundary_changed=clean.boundary_changed,
+            reconfigs_paid=snap.reconfigs_paid if snap is not None else 0,
+            delta_stall=snap.delta_stall if snap is not None else 0.0,
+            final_state=snap if capture_state else None,
+            degraded=degraded)
+
+    def _trace_checkpointed(self, phases, cm: CostModel, directory: str,
+                            every: int, *, initial,
+                            capture_state) -> TraceFabricResult:
+        """Chunked playback with an atomic `FabricSnapshot` checkpoint
+        (`repro.checkpoint.store`) every ``every`` collective boundaries.
+        Equal to the uninterrupted run: each chunk resumes from the previous
+        chunk's captured snapshot, which the boundary-snapshot invariant
+        makes exact, and the timings are absolute so concatenation is the
+        full-run sequence."""
+        from repro.checkpoint import store  # deferred: store imports jax
+
+        phase_done: list[float] = []
+        step_done: list[float] = []
+        snap, res, done = initial, None, 0
+        while done < len(phases):
+            chunk = phases[done:done + every]
+            res = self.run_trace(chunk, cm, initial=snap, capture_state=True)
+            snap = res.final_state
+            phase_done.extend(res.phase_done)
+            step_done.extend(res.step_done)
+            done += len(chunk)
+            store.save(directory, done, snapshot_to_tree(snap))
+        return TraceFabricResult(
+            completion=res.completion, mode=self.mode,
+            phase_done=tuple(phase_done), step_done=tuple(step_done),
+            node_done=res.node_done, chunks_moved=res.chunks_moved,
+            boundary_changed=trace_boundary_changed([s for s, _ in phases]),
+            reconfigs_paid=res.reconfigs_paid, delta_stall=res.delta_stall,
+            final_state=snap if capture_state else None)
 
     # --- batched (vectorized tape playback) mode ----------------------------
 
@@ -381,7 +546,8 @@ class FabricSim:
 
     def _sparse_engine(self, phases: Sequence[tuple[Schedule, float]],
                        cm: CostModel,
-                       initial: FabricSnapshot | None = None) -> _EngineOut:
+                       initial: FabricSnapshot | None = None,
+                       cutoff: float | None = None) -> _EngineOut:
         """Asynchronous per-link event loop over one or more concatenated
         phases.  A single phase is exactly the pre-trace `run` semantics; for
         a trace the phases' segment lists are concatenated, so a collective
@@ -389,7 +555,11 @@ class FabricSim:
         swap only if the next used segment needs a different circuit).  With
         ``initial`` the ports resume from the snapshot's busy-until times and
         configured circuit, injections chain off the snapshot's per-node
-        ready times, and the accounting counters continue cumulatively."""
+        ready times, and the accounting counters continue cumulatively.
+        ``cutoff`` counts (without altering the timeline) the chunk services
+        whose start time precedes it — the fault injector's in-flight census
+        (strictly-before: a service starting exactly at the cutoff never
+        left its source port)."""
         n = phases[0][0].n
         tapes = [compile_tape(sched) for sched, _ in phases]
         offsets: list[int] = []
@@ -438,6 +608,7 @@ class FabricSim:
         recv_done = [[0.0] * S for _ in range(n)]
         step_done = [0.0] * S
         chunks_moved = 0
+        cut_chunks = 0
         reconfigs_paid = 0
         delta_stall = 0.0
         if initial is not None:
@@ -485,13 +656,15 @@ class FabricSim:
                 seq += 1
 
         def serve(port: int, now: float) -> None:
-            nonlocal chunks_moved, seq
+            nonlocal chunks_moved, cut_chunks, seq
             if not pend[port] or pend[port][0][0] != cfg_seg[port]:
                 return
             if free[port] > now:
                 return  # busy: the pending free event re-triggers us
             si, k, t_arr, _, u, c, j = heapq.heappop(pend[port])
             start = free[port] if free[port] > t_arr else t_arr
+            if cutoff is not None and start < cutoff:
+                cut_chunks += 1
             tx = chunk_bytes(u, k) * beta / speed[port]
             free[port] = start + tx
             served[port][si] += 1
@@ -542,7 +715,7 @@ class FabricSim:
             completion=max(node_done), step_done=tuple(step_done),
             node_done=node_done, chunks_moved=chunks_moved,
             reconfigs_paid=reconfigs_paid, delta_stall=delta_stall,
-            port_free=tuple(free))
+            port_free=tuple(free), cut_chunks=cut_chunks)
 
 
 def simulate_fabric(schedule: Schedule, m: float, cm: CostModel,

@@ -26,7 +26,13 @@ reuse argument one level:
                       (W = stream length recovers `plan_trace` exactly);
   - `serve`         — `PlanService` answers windowed plan requests through
                       a serving LRU (carryover state in the key) with
-                      `request_storm` measuring plans/sec and hit rate.
+                      `request_storm` measuring plans/sec and hit rate;
+  - `recovery`      — the failure → snapshot → re-plan → verify loop:
+                      `run_with_recovery` maps a `core.faults.DegradedState`
+                      back to whole events, re-plans the remainder at the
+                      surviving world size (bit-identical to the offline
+                      plan of the reduced trace), and measures resume-from-
+                      snapshot vs restart-from-scratch.
 
 Fabric execution of a planned trace lives in `core.fabricsim.FabricSim
 .run_trace` / `core.batchsim.batch_run_trace` (now with mid-trace
@@ -36,8 +42,10 @@ benchmarks/online_bench.py the online-vs-offline regret and serving
 throughput.
 """
 from .online_planner import OnlinePlanner, OnlineStats, run_online
-from .serve import (PlanService, ServeRequest, ServedPlan, StormResult,
-                    build_request_pool, request_storm)
+from .recovery import (RecoveryResult, reduced_trace, replan_after_fault,
+                       run_with_recovery, split_events)
+from .serve import (PlanService, ServeCacheInfo, ServeRequest, ServedPlan,
+                    StormResult, build_request_pool, request_storm)
 from .trace_planner import (PhaseCandidate, PhasePlan, TRACE_PLAN_MODES,
                             TracePlan, phase_candidates, plan_trace,
                             window_dp)
@@ -51,6 +59,8 @@ __all__ = [
     "PhaseCandidate", "PhasePlan", "TRACE_PLAN_MODES", "TracePlan",
     "phase_candidates", "plan_trace", "window_dp",
     "OnlinePlanner", "OnlineStats", "run_online",
-    "PlanService", "ServeRequest", "ServedPlan", "StormResult",
-    "build_request_pool", "request_storm",
+    "RecoveryResult", "reduced_trace", "replan_after_fault",
+    "run_with_recovery", "split_events",
+    "PlanService", "ServeCacheInfo", "ServeRequest", "ServedPlan",
+    "StormResult", "build_request_pool", "request_storm",
 ]

@@ -34,7 +34,7 @@ import json
 import random
 import time
 from collections import OrderedDict
-from typing import Sequence
+from typing import NamedTuple, Sequence
 
 from repro.core.cost_model import CostModel, PAPER_DEFAULT
 from repro.core.jsonio import require_keys
@@ -44,6 +44,23 @@ from .trace_planner import (TRACE_FABRICS, PhasePlan, phase_candidates,
                             window_dp)
 from .traces import (CollectiveEvent, decode_ag_trace, mixed_trace,
                      moe_a2a_trace)
+
+
+class ServeCacheInfo(NamedTuple):
+    """Serving-LRU counters, extended with the degraded-mode retry ledger.
+
+    hits / misses / size / capacity mirror `planner.PlanCacheInfo`;
+    retries counts cache-bypass re-plans after a `VerificationError`, and
+    retry_failures counts requests whose retry budget was exhausted (the
+    error then propagates to the caller).
+    """
+
+    hits: int
+    misses: int
+    retries: int
+    retry_failures: int
+    size: int
+    capacity: int
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,11 +161,20 @@ class PlanService:
                  or served — a corrupt window raises `VerificationError`
                  instead of becoming a production incident on every later
                  cache hit.  Hits return already-audited plans unchecked.
+    max_retries / retry_backoff_s : degraded-mode serving.  A window that
+                 fails its audit is re-planned up to ``max_retries`` times
+                 with the shared planner LRU cleared first (cache bypass —
+                 a poisoned candidate table would otherwise be replayed
+                 verbatim), sleeping ``retry_backoff_s * 2**attempt`` between
+                 tries; only an exhausted budget lets the
+                 `VerificationError` reach the caller.  The retry ledger is
+                 surfaced in `cache_info`.
     """
 
     def __init__(self, *, cm: CostModel = PAPER_DEFAULT, fabric: str = "ocs",
                  overlap: float = 0.0, cache_size: int = 512, planner=None,
-                 verify: bool = True):
+                 verify: bool = True, max_retries: int = 1,
+                 retry_backoff_s: float = 0.0):
         if fabric not in TRACE_FABRICS:
             raise ValueError(
                 f"fabric must be one of {TRACE_FABRICS}, got {fabric!r}")
@@ -156,6 +182,11 @@ class PlanService:
             raise ValueError(f"overlap={overlap} requires fabric='ocs-overlap'")
         if cache_size < 0:
             raise ValueError(f"cache_size must be >= 0, got {cache_size}")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        if retry_backoff_s < 0:
+            raise ValueError(
+                f"retry_backoff_s must be >= 0, got {retry_backoff_s}")
         if planner is None:
             from repro.planner import default_planner  # deferred: no cycle
 
@@ -164,9 +195,13 @@ class PlanService:
         self.cache_size = int(cache_size)
         self.planner = planner
         self.verify = bool(verify)
+        self.max_retries = int(max_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
         self._cache: OrderedDict[str, ServedPlan] = OrderedDict()
         self._hits = 0
         self._misses = 0
+        self._retries = 0
+        self._retry_failures = 0
 
     # --- cache ---------------------------------------------------------------
 
@@ -176,22 +211,24 @@ class PlanService:
         window, different inherited fabric state -> different entry)."""
         return json.dumps(req.to_dict(), sort_keys=True)
 
-    def cache_info(self):
-        from repro.planner.planner import PlanCacheInfo
-
-        return PlanCacheInfo(hits=self._hits, misses=self._misses,
-                             size=len(self._cache), capacity=self.cache_size)
+    def cache_info(self) -> ServeCacheInfo:
+        return ServeCacheInfo(hits=self._hits, misses=self._misses,
+                              retries=self._retries,
+                              retry_failures=self._retry_failures,
+                              size=len(self._cache), capacity=self.cache_size)
 
     def cache_clear(self) -> None:
         self._cache.clear()
         self._hits = 0
         self._misses = 0
+        self._retries = 0
+        self._retry_failures = 0
 
     # --- serving -------------------------------------------------------------
 
     def serve(self, req: ServeRequest) -> ServedPlan:
         if self.cache_size == 0:
-            return self._plan_window(req)
+            return self._plan_with_retry(req)
         key = self.request_key(req)
         hit = self._cache.get(key)
         if hit is not None:
@@ -199,7 +236,7 @@ class PlanService:
             self._cache.move_to_end(key)
             return hit
         self._misses += 1
-        plan = self._plan_window(req)
+        plan = self._plan_with_retry(req)
         self._cache[key] = plan
         while len(self._cache) > self.cache_size:
             self._cache.popitem(last=False)
@@ -207,6 +244,31 @@ class PlanService:
 
     def serve_batch(self, reqs: Sequence[ServeRequest]) -> tuple[ServedPlan, ...]:
         return tuple(self.serve(req) for req in reqs)
+
+    def _plan_with_retry(self, req: ServeRequest) -> ServedPlan:
+        """Degraded-mode miss path: bounded retry with cache bypass.
+
+        A `VerificationError` from the audit marks the freshly-planned
+        window corrupt; instead of failing the request outright the shared
+        planner LRU is cleared (the corrupt candidate tables must not be
+        replayed) and the window re-planned, up to ``max_retries`` times
+        with exponential backoff.  Only an exhausted budget re-raises.
+        """
+        from repro.analysis import VerificationError, clear_verifier_caches
+
+        for attempt in range(self.max_retries + 1):
+            try:
+                return self._plan_window(req)
+            except VerificationError:
+                if attempt == self.max_retries:
+                    self._retry_failures += 1
+                    raise
+                self._retries += 1
+                if self.retry_backoff_s > 0:
+                    time.sleep(self.retry_backoff_s * (2.0 ** attempt))
+                self.planner.cache_clear()
+                clear_verifier_caches()
+        raise AssertionError("unreachable: retry loop returns or raises")
 
     def _plan_window(self, req: ServeRequest) -> ServedPlan:
         """Cache-miss path: window DP warm-started at the request's init_g."""

@@ -378,6 +378,60 @@ def test_snapshot_restore_rejects_full_pause_and_mismatched_n():
                        port_free=(0.0,) * 3)
 
 
+@pytest.mark.parametrize("n", [8, 12])
+def test_faulted_lanes_match_scalar_degraded_run(n):
+    """Mid-trace fault lanes: the batched engine routes them to the scalar
+    oracle and surfaces the identical `DegradedState`; clean lanes in the
+    same batch are untouched."""
+    from repro.core import FaultSpec, FaultTimeline, TraceLane, batch_run_trace
+
+    rng = random.Random(9000 + n)
+    for delta in (1e-6, 1e-3):
+        cm = PAPER_DEFAULT.replace(delta=delta)
+        phases = random_phases(rng, n, 3)
+        chunks = rng.choice([1, 2, 4])
+        sim = FabricSim(chunks_per_msg=chunks, mode="sparse")
+        clean = sim.run_trace(phases, cm)
+        for kind, policy in (("link-down", "drop"), ("link-flap", "requeue"),
+                             ("node-leave", "drop"), ("node-join", "drop")):
+            node = n if kind == "node-join" else rng.randrange(n)
+            repair = 0.1 * clean.completion if kind == "link-flap" else 0.0
+            # abrupt kinds strike mid-run; graceful kinds drain the in-flight
+            # phase, so the fault must land before the *first* phase ends or
+            # a 3-phase trace may simply complete (no-op fault)
+            t_f = (0.5 * clean.completion
+                   if kind in ("link-down", "link-flap")
+                   else 0.5 * clean.phase_done[0])
+            tl = FaultTimeline(n=n, faults=(
+                FaultSpec(kind=kind, time=t_f, node=node,
+                          repair_s=repair),), policy=policy)
+            ref = sim.run_trace(phases, cm, faults=tl, capture_state=True)
+            assert ref.degraded is not None
+            batch = batch_run_trace(
+                [TraceLane(phases=phases),
+                 TraceLane(phases=phases, faults=tl)],
+                cm, chunks_per_msg=chunks)
+            assert batch.degraded[0] is None
+            assert batch.degraded[1] == ref.degraded
+            assert batch.completion[0] == pytest.approx(clean.completion,
+                                                        rel=REL_TOL)
+            got = batch.result(1)
+            assert got.degraded == ref.degraded
+            assert got.completion == ref.completion  # both inf: degraded
+            np.testing.assert_allclose(got.phase_done, ref.phase_done,
+                                       rtol=REL_TOL)
+            assert got.chunks_moved == ref.chunks_moved
+            # a degraded lane's resumable state lives on the DegradedState
+            with pytest.raises(ValueError, match="degraded"):
+                batch.snapshot(1)
+            assert_states_match(batch.degraded[1].snapshot,
+                                ref.degraded.snapshot)
+            # faulted lanes need the scalar fallback path
+            with pytest.raises(ValueError, match="fallback"):
+                batch_run_trace([TraceLane(phases=phases, faults=tl)], cm,
+                                chunks_per_msg=chunks, allow_fallback=False)
+
+
 def test_fresh_snapshot_resume_equals_cold_run():
     """Resuming from an all-idle snapshot is exactly a cold run with an
     extra entry swap only when the configured circuit differs."""

@@ -1,0 +1,420 @@
+"""Fault timelines, degraded-mode engine runs, and the recovery loop.
+
+Covers the `repro.core.faults` types (validation, strict JSON, horizon
+check, `world_after`), the per-kind `DegradedState` semantics surfaced by
+`FabricSim.run_trace(..., faults=...)` (committed prefix, chunk
+conservation, exact prefix snapshot), event-granularity recovery
+(`split_events` 'ar' atomicity, `run_with_recovery` resume-vs-restart +
+bit-identity for every fault kind), checkpointed playback through
+`repro.checkpoint.store`, and the explorer's out-of-horizon rejection.
+
+The hypothesis properties (timeline JSON round trip for any seeded
+timeline; recovery monotone in the failure time) follow the repo's
+mixed-file idiom: importorskip inside the test, seeded fallbacks elsewhere.
+"""
+import dataclasses
+import functools
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import verify_degraded, verify_timeline
+from repro.core import (ABRUPT_KINDS, FAULT_KINDS, PAPER_DEFAULT, FabricSim,
+                        FaultSpec, FaultTimeline, latest_snapshot,
+                        random_timeline, static_schedule, world_after)
+from repro.workloads import (CollectiveEvent, Trace, mixed_trace,
+                             reduced_trace, run_with_recovery, split_events)
+
+MB = 1024.0 ** 2
+CM = PAPER_DEFAULT.replace(delta=1e-3)
+CHUNKS = 4
+
+
+def simple_phases(n=12, k=3):
+    return tuple((static_schedule("a2a", n, 2), MB) for _ in range(k))
+
+
+def clean_run(phases, **kw):
+    return FabricSim(mode="sparse", chunks_per_msg=CHUNKS, **kw).run_trace(
+        phases, CM)
+
+
+def one_fault(n, kind, time, node=None, repair_s=0.0, policy="drop"):
+    node = (n if kind == "node-join" else n // 3) if node is None else node
+    return FaultTimeline(n=n, policy=policy, faults=(
+        FaultSpec(kind=kind, time=time, node=node, repair_s=repair_s),))
+
+
+# --- spec / timeline validation ------------------------------------------------
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultSpec(kind="meteor-strike", time=1.0, node=0)
+    with pytest.raises(ValueError, match="time"):
+        FaultSpec(kind="link-down", time=-1.0, node=0)
+    with pytest.raises(ValueError, match="time"):
+        FaultSpec(kind="link-down", time=float("nan"), node=0)
+    with pytest.raises(ValueError, match="node"):
+        FaultSpec(kind="link-down", time=1.0, node=-1)
+    with pytest.raises(ValueError, match="repair_s"):
+        FaultSpec(kind="link-down", time=1.0, node=0, repair_s=0.5)
+    with pytest.raises(ValueError, match="repair_s"):
+        FaultSpec(kind="link-flap", time=1.0, node=0, repair_s=-0.5)
+    # repair on a flap is the one legal use
+    f = FaultSpec(kind="link-flap", time=1.0, node=3, repair_s=0.5)
+    assert (f.time, f.node, f.repair_s) == (1.0, 3, 0.5)
+
+
+def test_timeline_validation():
+    spec = FaultSpec(kind="link-down", time=1.0, node=0)
+    with pytest.raises(ValueError, match="at least 2 nodes"):
+        FaultTimeline(n=1, faults=(spec,))
+    with pytest.raises(ValueError, match="policy"):
+        FaultTimeline(n=8, faults=(spec,), policy="teleport")
+    with pytest.raises(ValueError, match="at least one fault"):
+        FaultTimeline(n=8, faults=())
+    with pytest.raises(ValueError, match="sorted"):
+        FaultTimeline(n=8, faults=(
+            FaultSpec(kind="link-down", time=2.0, node=0),
+            FaultSpec(kind="link-down", time=1.0, node=1)))
+    with pytest.raises(ValueError, match="outside"):
+        FaultTimeline(n=8, faults=(
+            FaultSpec(kind="link-down", time=1.0, node=8),))
+    with pytest.raises(ValueError, match="node-join joins at index"):
+        FaultTimeline(n=8, faults=(
+            FaultSpec(kind="node-join", time=1.0, node=3),))
+    # a valid timeline passes the verifier's fault/spec + fault/order rules
+    tl = one_fault(8, "node-join", 1.0)
+    assert verify_timeline(tl) == []
+
+
+def test_timeline_json_strict_round_trip():
+    tl = FaultTimeline(n=8, policy="requeue", faults=(
+        FaultSpec(kind="link-flap", time=0.5, node=2, repair_s=0.1),
+        FaultSpec(kind="node-leave", time=0.75, node=5)))
+    assert FaultTimeline.from_json(tl.to_json()) == tl
+    d = tl.to_dict()
+    d["surprise"] = 1
+    with pytest.raises(ValueError, match="unknown field"):
+        FaultTimeline.from_dict(d)
+    with pytest.raises(ValueError, match="missing required"):
+        FaultTimeline.from_dict({"n": 8})
+    bad = tl.to_dict()
+    bad["faults"][0]["blast_radius"] = 3
+    with pytest.raises(ValueError, match="unknown field"):
+        FaultTimeline.from_dict(bad)
+
+
+def test_timeline_json_round_trip_property():
+    hypothesis = pytest.importorskip("hypothesis")  # noqa: F841
+    from hypothesis import given, settings  # noqa: E402
+    from hypothesis import strategies as st  # noqa: E402
+
+    @settings(max_examples=50, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16), n=st.integers(2, 64),
+           count=st.integers(1, 4),
+           policy=st.sampled_from(["drop", "requeue"]))
+    def inner(seed, n, count, policy):
+        tl = random_timeline(n, horizon_s=2.5, seed=seed, count=count,
+                             policy=policy)
+        again = FaultTimeline.from_json(tl.to_json())
+        assert again == tl
+        # and the wire format itself is stable (dict -> json -> dict)
+        assert json.loads(again.to_json()) == json.loads(tl.to_json())
+        assert verify_timeline(tl) == []
+
+    inner()
+
+
+def test_check_horizon():
+    tl = one_fault(8, "link-down", 1.0)
+    assert tl.check_horizon(2.0) is tl
+    with pytest.raises(ValueError, match="horizon"):
+        tl.check_horizon(1.0)  # at the horizon is already a no-op
+    with pytest.raises(ValueError, match="horizon"):
+        tl.check_horizon(0.5)
+
+
+def test_world_after_per_kind():
+    down = FaultSpec(kind="link-down", time=1.0, node=3)
+    assert world_after(8, down) == ((0, 1, 2, 4, 5, 6, 7), (3,))
+    leave = FaultSpec(kind="node-leave", time=1.0, node=3)
+    assert world_after(8, leave) == ((0, 1, 2, 4, 5, 6, 7), ())
+    join = FaultSpec(kind="node-join", time=1.0, node=8)
+    assert world_after(8, join) == (tuple(range(9)), ())
+    flap = FaultSpec(kind="link-flap", time=1.0, node=3, repair_s=0.2)
+    assert world_after(8, flap) == (tuple(range(8)), ())
+
+
+# --- per-kind DegradedState semantics ------------------------------------------
+
+
+def test_abrupt_fault_aborts_in_flight_phase():
+    n, phases = 12, simple_phases()
+    clean = clean_run(phases)
+    # strike mid-second-phase: phase 0 committed, phase 1 aborted
+    t_f = 0.5 * (clean.phase_done[0] + clean.phase_done[1])
+    for policy in ("drop", "requeue"):
+        tl = one_fault(n, "link-down", t_f, node=3, policy=policy)
+        res = FabricSim(mode="sparse", chunks_per_msg=CHUNKS).run_trace(
+            phases, CM, faults=tl, capture_state=True)
+        ds = res.degraded
+        assert ds is not None and ds.completed_phases == 1
+        assert ds.aborted_phase == 1
+        assert ds.resume_clock == t_f
+        assert ds.survivors == tuple(i for i in range(n) if i != 3)
+        assert ds.dead_ports == (3,) and ds.new_n == n - 1
+        assert ds.dead_port_mask()[3] and sum(ds.dead_port_mask()) == 1
+        # chunk ledger: the in-flight split follows the delivery policy
+        assert ds.in_flight_chunks > 0
+        assert ds.lost_chunks + ds.requeued_chunks == ds.in_flight_chunks
+        if policy == "drop":
+            assert ds.requeued_chunks == 0
+        else:
+            assert ds.lost_chunks == 0
+        assert verify_degraded(ds, phases=phases,
+                               chunks_per_msg=CHUNKS) == []
+
+
+def test_link_flap_keeps_world_and_delays_resume():
+    n, phases = 12, simple_phases()
+    clean = clean_run(phases)
+    t_f, repair = 0.5 * clean.completion, 0.25 * clean.completion
+    tl = one_fault(n, "link-flap", t_f, node=5, repair_s=repair,
+                   policy="requeue")
+    ds = FabricSim(mode="sparse", chunks_per_msg=CHUNKS).run_trace(
+        phases, CM, faults=tl, capture_state=True).degraded
+    assert ds.new_n == n and ds.survivors == tuple(range(n))
+    assert ds.dead_ports == ()
+    assert ds.resume_clock == t_f + repair
+    assert ds.lost_chunks == 0  # requeue policy
+    assert verify_degraded(ds, phases=phases, chunks_per_msg=CHUNKS) == []
+
+
+@pytest.mark.parametrize("kind,dn", [("node-leave", -1), ("node-join", +1)])
+def test_graceful_fault_drains_at_boundary(kind, dn):
+    n, phases = 12, simple_phases()
+    clean = clean_run(phases)
+    t_f = 0.5 * clean.phase_done[0]  # mid-first-phase: it drains, then stop
+    tl = one_fault(n, kind, t_f)
+    ds = FabricSim(mode="sparse", chunks_per_msg=CHUNKS).run_trace(
+        phases, CM, faults=tl, capture_state=True).degraded
+    assert ds.completed_phases == 1 and ds.aborted_phase is None
+    assert ds.new_n == n + dn and ds.dead_ports == ()
+    # nothing in flight: the boundary is clean, resume at its clock
+    assert ds.in_flight_chunks == ds.lost_chunks == ds.requeued_chunks == 0
+    assert ds.resume_clock == clean.phase_done[0] == ds.snapshot.clock
+    assert verify_degraded(ds, phases=phases, chunks_per_msg=CHUNKS) == []
+
+
+def test_committed_prefix_snapshot_is_exact():
+    n, phases = 12, simple_phases(k=4)
+    clean = clean_run(phases)
+    t_f = 0.5 * (clean.phase_done[1] + clean.phase_done[2])
+    tl = one_fault(n, "link-down", t_f, node=2)
+    ds = FabricSim(mode="sparse", chunks_per_msg=CHUNKS).run_trace(
+        phases, CM, faults=tl, capture_state=True).degraded
+    assert ds.completed_phases == 2
+    prefix = FabricSim(mode="sparse", chunks_per_msg=CHUNKS).run_trace(
+        phases[:2], CM, capture_state=True).final_state
+    assert ds.snapshot == prefix  # bit-exact, not approximately equal
+
+
+def test_fault_after_completion_is_a_noop():
+    n, phases = 12, simple_phases()
+    clean = clean_run(phases)
+    tl = one_fault(n, "link-down", 2.0 * clean.completion)
+    res = FabricSim(mode="sparse", chunks_per_msg=CHUNKS).run_trace(
+        phases, CM, faults=tl)
+    assert res.degraded is None
+    assert res.completion == clean.completion
+    assert res.phase_done == clean.phase_done
+
+
+# --- event-granularity recovery ------------------------------------------------
+
+
+def test_split_events_ar_atomicity():
+    events = (CollectiveEvent(kind="a2a", m_bytes=MB),
+              CollectiveEvent(kind="ar", m_bytes=MB),
+              CollectiveEvent(kind="ag", m_bytes=MB))
+    trace = Trace(name="t", n=8, events=events)
+    # phase widths: a2a=1, ar=2 (rs+ag), ag=1 -> 4 phases total
+    committed, remaining = split_events(trace, 1)
+    assert committed == events[:1] and remaining == events[1:]
+    # half-committed AllReduce stays in `remaining` and re-runs in full
+    committed, remaining = split_events(trace, 2)
+    assert committed == events[:1] and remaining == events[1:]
+    committed, remaining = split_events(trace, 3)
+    assert committed == events[:2] and remaining == events[2:]
+    committed, remaining = split_events(trace, 4)
+    assert committed == events and remaining == ()
+    with pytest.raises(ValueError, match=">= 0"):
+        split_events(trace, -1)
+    with pytest.raises(ValueError, match="exceeds"):
+        split_events(trace, 5)
+
+
+def test_reduced_trace_retargets_surviving_world():
+    trace = mixed_trace(8, moe_layers=1, train_steps=1, decode_steps=2)
+    clean = clean_run(_plan(trace).fabric_phases())
+    tl = one_fault(8, "link-down", 0.5 * clean.completion)
+    ds = FabricSim(mode="sparse", chunks_per_msg=CHUNKS).run_trace(
+        _plan(trace).fabric_phases(), CM, faults=tl,
+        capture_state=True).degraded
+    reduced = reduced_trace(trace, ds)
+    assert reduced.n == 7 and reduced.r == trace.r
+    committed, remaining = split_events(trace, ds.completed_phases)
+    assert reduced.events == remaining
+    # a fully-committed trace has nothing to recover
+    done = dataclasses.replace(ds, completed_phases=sum(
+        2 if e.kind == "ar" else 1 for e in trace.events))
+    with pytest.raises(ValueError, match="nothing left to recover"):
+        reduced_trace(trace, done)
+
+
+@functools.lru_cache(maxsize=None)
+def _plan(trace):
+    from repro.workloads import plan_trace
+    return plan_trace(trace, CM, mode="carryover")
+
+
+@pytest.mark.parametrize("kind", FAULT_KINDS)
+def test_run_with_recovery_full_cycle(kind):
+    trace = mixed_trace(8, moe_layers=1, train_steps=1, decode_steps=2)
+    clean = clean_run(_plan(trace).fabric_phases())
+    # abrupt kinds strike mid-run; graceful kinds must land inside the first
+    # phase (later they can legally drain the whole trace -> no-op)
+    t_f = (0.5 * clean.completion if kind in ABRUPT_KINDS
+           else 0.5 * clean.phase_done[0])
+    tl = one_fault(8, kind, t_f,
+                   repair_s=0.05 * clean.completion
+                   if kind == "link-flap" else 0.0,
+                   policy="requeue" if kind == "link-flap" else "drop")
+    rr = run_with_recovery(trace, CM, faults=tl, chunks_per_msg=CHUNKS)
+    ds = rr.degraded
+    assert ds.fault.kind == kind
+    assert rr.recovery_plan.trace.n == ds.new_n
+    # resuming from the snapshot never loses to restarting from scratch
+    assert rr.recovery_ratio <= 1 + 1e-9
+    assert rr.recovery_total <= rr.restart_total * (1 + 1e-9)
+    # the re-plan is bit-identical to a clean reduced-world carryover plan
+    assert rr.bit_identical
+    assert rr.recovery_plan.schedules() == rr.clean_plan.schedules()
+    # every event beyond the committed prefix was a misprediction
+    assert rr.stats.mispredictions == len(trace) - len(rr.committed_events)
+    assert rr.stats.replans >= 1
+
+
+def test_run_with_recovery_rejects_noop_timeline():
+    trace = mixed_trace(8, moe_layers=1, train_steps=1, decode_steps=2)
+    tl = one_fault(8, "link-down", 1e6)
+    with pytest.raises(ValueError, match="check_horizon"):
+        run_with_recovery(trace, CM, faults=tl, chunks_per_msg=CHUNKS)
+
+
+def test_recovery_monotone_in_failure_time_property():
+    hypothesis = pytest.importorskip("hypothesis")  # noqa: F841
+    from hypothesis import given, settings  # noqa: E402
+    from hypothesis import strategies as st  # noqa: E402
+
+    trace = mixed_trace(8, moe_layers=1, train_steps=1, decode_steps=2)
+    clean = clean_run(_plan(trace).fabric_phases())
+
+    @functools.lru_cache(maxsize=None)
+    def recover(frac):
+        tl = one_fault(8, "link-down", frac * clean.completion, node=3)
+        return run_with_recovery(trace, CM, faults=tl,
+                                 chunks_per_msg=CHUNKS)
+
+    fracs = st.sampled_from([0.15, 0.35, 0.55, 0.75, 0.95])
+
+    @settings(max_examples=10, deadline=None)
+    @given(a=fracs, b=fracs)
+    def inner(a, b):
+        lo, hi = recover(min(a, b)), recover(max(a, b))
+        # a later fault can only commit more, never less
+        assert hi.degraded.completed_phases >= lo.degraded.completed_phases
+        # and the remaining work (executed past the resume clock) shrinks
+        assert (hi.recovery_total - hi.degraded.resume_clock
+                <= (lo.recovery_total - lo.degraded.resume_clock) * (1 + 1e-9))
+        for rr in (lo, hi):
+            assert rr.recovery_ratio <= 1 + 1e-9 and rr.bit_identical
+
+    inner()
+
+
+# --- checkpointed playback (repro.checkpoint.store) ----------------------------
+
+
+def test_checkpointed_trace_equals_straight_run(tmp_path):
+    from repro.checkpoint import store
+
+    phases = simple_phases(k=4)
+    straight = FabricSim(mode="sparse", chunks_per_msg=CHUNKS).run_trace(
+        phases, CM, capture_state=True)
+    d = str(tmp_path / "ckpt")
+    chk = FabricSim(mode="sparse", chunks_per_msg=CHUNKS).run_trace(
+        phases, CM, capture_state=True, checkpoint_dir=d, checkpoint_every=2)
+    assert chk.completion == straight.completion
+    assert chk.phase_done == straight.phase_done
+    assert chk.chunks_moved == straight.chunks_moved
+    assert chk.final_state == straight.final_state
+    # every=2 over 4 phases -> checkpoints at boundaries 2 and 4
+    assert store.latest_step(d) == 4
+    assert latest_snapshot(d) == straight.final_state
+
+
+def test_checkpoint_atomicity_and_gc(tmp_path):
+    from repro.checkpoint import garbage_collect, latest_step, restore
+
+    phases = simple_phases(k=4)
+    d = str(tmp_path / "ckpt")
+    FabricSim(mode="sparse", chunks_per_msg=CHUNKS).run_trace(
+        phases, CM, checkpoint_dir=d, checkpoint_every=1)
+    assert latest_step(d) == 4
+    garbage_collect(d, keep=2)
+    assert latest_step(d) == 4
+    restore(d, 4)  # survivors restore fine
+    with pytest.raises(FileNotFoundError):
+        restore(d, 1)  # collected
+    assert latest_snapshot(str(tmp_path / "empty")) is None
+
+
+def test_checkpoint_exclusions():
+    phases = simple_phases()
+    tl = one_fault(12, "link-down", 1.0)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        FabricSim(mode="sparse").run_trace(phases, CM, faults=tl,
+                                           checkpoint_dir="/tmp/nope")
+    with pytest.raises(ValueError, match="full-pause"):
+        FabricSim(mode="full-pause").run_trace(phases, CM,
+                                               checkpoint_dir="/tmp/nope")
+    with pytest.raises(ValueError, match="n=12"):
+        FabricSim(mode="sparse").run_trace(simple_phases(n=8), CM, faults=tl)
+
+
+# --- explorer front-end: out-of-horizon specs are rejected ---------------------
+
+
+def test_explorer_rejects_out_of_horizon_faults(tmp_path):
+    root = Path(__file__).resolve().parents[1]
+    spec = tmp_path / "late.json"
+    spec.write_text(one_fault(8, "link-down", 99.0).to_json())
+    env = dict(os.environ, PYTHONPATH=str(root / "src"))
+    proc = subprocess.run(
+        [sys.executable, str(root / "examples" / "schedule_explorer.py"),
+         "--trace", "mixed", "--n", "8", "--faults", str(spec)],
+        capture_output=True, text=True, env=env)
+    assert proc.returncode != 0
+    assert "horizon" in proc.stderr
+    # --faults without --trace is an argparse error, not a crash
+    proc = subprocess.run(
+        [sys.executable, str(root / "examples" / "schedule_explorer.py"),
+         "--faults", str(spec)], capture_output=True, text=True, env=env)
+    assert proc.returncode == 2 and "--trace" in proc.stderr

@@ -97,6 +97,92 @@ def test_cache_key_includes_carryover_state():
     assert inherited.total_time >= fresh.total_time
 
 
+# --- degraded-mode serving: bounded retry with cache bypass -------------------
+
+
+def test_retry_recovers_from_transient_verification_failure(monkeypatch):
+    """A window that fails its audit once is re-planned (planner LRU
+    cleared first) and served + cached; the retry shows up in cache_info."""
+    from repro.analysis import Violation, raise_on_violations
+
+    service = PlanService(cm=CM, cache_size=4, max_retries=1)
+    req = ServeRequest(events=_events(), n=12)
+    real = PlanService._plan_window
+    calls = {"n": 0}
+
+    def flaky(self, r):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise_on_violations(
+                [Violation(rule="serve/entry", location="test",
+                           message="injected corruption", repro="")],
+                context="transient")
+        return real(self, r)
+
+    monkeypatch.setattr(PlanService, "_plan_window", flaky)
+    plan = service.serve(req)
+    info = service.cache_info()
+    assert (info.hits, info.misses, info.retries, info.retry_failures) == \
+        (0, 1, 1, 0)
+    assert info.size == 1 and calls["n"] == 2
+    # the retried plan was cached: a repeat is a pure hit
+    assert service.serve(req) is plan
+    assert service.cache_info().hits == 1 and calls["n"] == 2
+    service.cache_clear()
+    info = service.cache_info()
+    assert (info.retries, info.retry_failures) == (0, 0)
+
+
+def test_retry_budget_exhaustion_reraises(monkeypatch):
+    """A persistently-corrupt window exhausts the budget: the error
+    propagates, the failure is counted, nothing is cached, and the backoff
+    sleeps once per retry."""
+    from repro.analysis import (VerificationError, Violation,
+                                raise_on_violations)
+
+    service = PlanService(cm=CM, cache_size=4, max_retries=2,
+                          retry_backoff_s=0.001)
+    naps = []
+    monkeypatch.setattr("repro.workloads.serve.time.sleep", naps.append)
+
+    def dead(self, r):
+        raise_on_violations(
+            [Violation(rule="serve/final", location="test",
+                       message="persistent corruption", repro="")],
+            context="persistent")
+
+    monkeypatch.setattr(PlanService, "_plan_window", dead)
+    with pytest.raises(VerificationError, match="persistent"):
+        service.serve(ServeRequest(events=_events(), n=12))
+    info = service.cache_info()
+    assert (info.misses, info.retries, info.retry_failures) == (1, 2, 1)
+    assert info.size == 0  # the corrupt window never entered the LRU
+    assert naps == [0.001, 0.002]  # exponential backoff per retry
+
+
+def test_retry_zero_budget_and_validation(monkeypatch):
+    from repro.analysis import (VerificationError, Violation,
+                                raise_on_violations)
+
+    with pytest.raises(ValueError, match="max_retries"):
+        PlanService(cm=CM, max_retries=-1)
+    with pytest.raises(ValueError, match="retry_backoff_s"):
+        PlanService(cm=CM, retry_backoff_s=-0.1)
+
+    service = PlanService(cm=CM, max_retries=0)
+
+    def dead(self, r):
+        raise_on_violations(
+            [Violation(rule="serve/final", location="test",
+                       message="injected", repro="")], context="no budget")
+
+    monkeypatch.setattr(PlanService, "_plan_window", dead)
+    with pytest.raises(VerificationError):
+        service.serve(ServeRequest(events=_events(), n=12))
+    info = service.cache_info()
+    assert (info.retries, info.retry_failures) == (0, 1)
+
+
 # --- storm driver -------------------------------------------------------------
 
 
