@@ -5,8 +5,8 @@ PYTHONPATH := src
 COV_MIN ?= 84
 
 .PHONY: test test-fast bench bench-smoke plan-bench fabric-bench sim-bench \
-	trace-bench online-bench faults-bench sweep coverage lint verify-gate \
-	docs-gate
+	trace-bench online-bench faults-bench tenancy-bench sweep coverage \
+	lint verify-gate docs-gate
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -65,6 +65,14 @@ online-bench:
 # recorded to BENCH_faults.json.
 faults-bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.faults_bench --json BENCH_faults.json
+
+# Multi-tenant fabric sharing: port-partitioned and time-sliced shared
+# planning vs naive serialization over K x n x delta x sharing mode (gates:
+# shared <= serialized on both metrics everywhere, per-tenant isolation
+# within its structural bound, perfect port-partition isolation); recorded
+# to BENCH_tenancy.json.
+tenancy-bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.tenancy_bench --json BENCH_tenancy.json
 
 # Full n x r x m sweep, recorded for the perf trajectory.
 sweep:

@@ -21,7 +21,8 @@ import os
 from benchmarks.check_regression import (SCHEMAS, check_fabric, check_faults,
                                          check_online, check_planner,
                                          check_row_coverage, check_sim,
-                                         check_trace, detect_schema)
+                                         check_tenancy, check_trace,
+                                         detect_schema)
 
 
 def headline(schema: str, rows: list[dict]) -> str:
@@ -44,6 +45,10 @@ def headline(schema: str, rows: list[dict]) -> str:
         head = f"W>=2 regret {worst}x" if worst is not None else "storm only"
         return (f"{head}, {max(storm) / 1e3:.0f}k plans/s"
                 if storm else head)
+    if schema == "tenancy":
+        best = max(r["win_vs_serialized"] for r in rows)
+        worst_iso = max(iso for r in rows for iso in r["isolation"].values())
+        return f"{best:.1f}x vs serialized, worst isolation {worst_iso:.2f}"
     if schema == "faults":
         worst = max(r["recovery_ratio"] for r in rows)
         return (f"worst recovery ratio {worst}x, "
@@ -77,7 +82,8 @@ def summarize_pair(name: str, baseline: str, fresh: str,
                  "fabric": lambda: check_fabric(base_rows, fresh_rows, 1e-6),
                  "online": lambda: check_online(base_rows, fresh_rows,
                                                 1e-6, 0.25),
-                 "faults": lambda: check_faults(base_rows, fresh_rows, 1e-6)}
+                 "faults": lambda: check_faults(base_rows, fresh_rows, 1e-6),
+                 "tenancy": lambda: check_tenancy(base_rows, fresh_rows, 1e-6)}
         more, matched = check[schema]()
         errors += more
         head = headline(schema, fresh_rows)

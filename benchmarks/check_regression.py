@@ -33,6 +33,13 @@ The file schema is auto-detected from the row keys:
     match the baseline (times within ``--rel-tol``); the serving plans/sec
     is timing-noisy and only has to stay above ``--wall-frac`` of the
     committed hot-path throughput.
+  - tenancy rows (``shared_s``, BENCH_tenancy.json): shared planning is
+    deterministic, so phase counts and isolation ratios must match the
+    baseline (ratios within ``--rel-tol``) and the shared/serialized totals
+    within ``--rel-tol``; on top of the baseline comparison,
+    ``shared <= serialized`` (both metrics), per-tenant
+    ``isolation <= isolation_bound``, and perfect port-partition isolation
+    are re-asserted as absolute floors on every fresh row.
   - faults rows (``recovery_ratio``, BENCH_faults.json): fault injection and
     recovery re-planning are deterministic, so the committed-phase counts,
     chunk ledger, and surviving world size must match the baseline exactly
@@ -61,6 +68,7 @@ SCHEMAS = {
     "planner": ("wall_speedup", ("n", "r")),
     "sim": ("batched_wall_s", ("tier", "n")),
     "trace": ("carryover_s", ("trace", "n", "delta")),
+    "tenancy": ("shared_s", ("sharing", "K", "n", "delta")),
     "fabric": ("event_analytic_ratio", ("n", "r", "delta")),
     "online": ("window", ("trace", "n", "delta", "window")),
 }
@@ -258,6 +266,57 @@ def check_online(base_rows: list[dict], fresh_rows: list[dict],
     return errors, matched
 
 
+def check_tenancy(base_rows: list[dict], fresh_rows: list[dict],
+                  rel_tol: float) -> tuple[list[str], int]:
+    errors, matched = [], 0
+    base = _index(base_rows, SCHEMAS["tenancy"][1])
+    for key, fresh in _index(fresh_rows, SCHEMAS["tenancy"][1]).items():
+        if key not in base:
+            continue
+        matched += 1
+        ref = base[key]
+        tag = (f"tenancy sharing={key[0]} K={key[1]} n={key[2]} "
+               f"delta={key[3]}")
+        if fresh["phases"] != ref["phases"]:
+            errors.append(f"{tag}: phases {fresh['phases']} != baseline "
+                          f"{ref['phases']} (shared planning is "
+                          f"deterministic)")
+        for field in ("shared_s", "weighted_s", "serialized_s",
+                      "serialized_weighted_s", "win_vs_serialized",
+                      "weighted_win"):
+            drift = abs(fresh[field] - ref[field]) / max(abs(ref[field]), 1e-12)
+            if drift > rel_tol:
+                errors.append(f"{tag}: {field} {fresh[field]} drifted "
+                              f"{drift:.2e} from baseline {ref[field]} "
+                              f"(> {rel_tol})")
+        for name, iso in fresh["isolation"].items():
+            ref_iso = ref["isolation"].get(name)
+            if ref_iso is None:
+                errors.append(f"{tag}: tenant {name} not in the baseline "
+                              f"row (tenant mix is deterministic)")
+                continue
+            if abs(iso - ref_iso) / max(abs(ref_iso), 1e-12) > rel_tol:
+                errors.append(f"{tag}: tenant {name} isolation {iso} "
+                              f"drifted from baseline {ref_iso}")
+        # absolute floors, independent of the committed baseline
+        if fresh["shared_s"] > fresh["serialized_s"] * (1 + 1e-9):
+            errors.append(f"{tag}: shared makespan {fresh['shared_s']} > "
+                          f"serialized {fresh['serialized_s']}")
+        if fresh["weighted_s"] > fresh["serialized_weighted_s"] * (1 + 1e-9):
+            errors.append(f"{tag}: shared weighted completion "
+                          f"{fresh['weighted_s']} > serialized "
+                          f"{fresh['serialized_weighted_s']}")
+        for name, iso in fresh["isolation"].items():
+            bound = fresh["isolation_bound"][name]
+            if iso > bound * (1 + 1e-9):
+                errors.append(f"{tag}: tenant {name} isolation {iso} "
+                              f"exceeds its bound {bound}")
+            if key[0] == "port-partition" and abs(iso - 1.0) > 1e-9:
+                errors.append(f"{tag}: port-partitioned tenant {name} not "
+                              f"perfectly isolated (ratio {iso})")
+    return errors, matched
+
+
 def check_faults(base_rows: list[dict], fresh_rows: list[dict],
                  rel_tol: float) -> tuple[list[str], int]:
     errors, matched = [], 0
@@ -363,6 +422,8 @@ def main(argv=None) -> None:
     elif fresh_schema == "online":
         more, matched = check_online(base, fresh, args.rel_tol,
                                      args.wall_frac)
+    elif fresh_schema == "tenancy":
+        more, matched = check_tenancy(base, fresh, args.rel_tol)
     elif fresh_schema == "faults":
         more, matched = check_faults(base, fresh, args.rel_tol)
     else:

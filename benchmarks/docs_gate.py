@@ -11,6 +11,12 @@ Two checks keep the documentation honest:
    (doctest-style: the doc is effectively a script split by prose).  A
    block that raises fails the gate, so the examples cannot rot.  `bash`
    blocks are never executed — large-n / CLI examples belong there.
+3. **Typed-enum call sites** — no first-party call site under src/ may
+   pass a bare string constant as a ``fabric=`` or ``sharing=`` keyword
+   argument (AST walk, not grep: docstrings and error messages are fine).
+   Bare strings still coerce at runtime with a `DeprecationWarning`, but
+   new first-party code must use `repro.planner.FabricKind` /
+   `repro.planner.SharingMode` so the deprecation can actually land.
 
 Usage:
 
@@ -21,6 +27,7 @@ Exit 1 on any dead link or failing example.
 from __future__ import annotations
 
 import argparse
+import ast
 import os
 import re
 import sys
@@ -127,6 +134,37 @@ def run_doc_examples(root: str) -> list[str]:
     return errors
 
 
+# keyword arguments that take a _CoercibleStrEnum; bare string constants at
+# first-party call sites defeat the typed API the shim is deprecating toward
+_ENUM_KWARGS = {"fabric": "repro.planner.FabricKind",
+                "sharing": "repro.planner.SharingMode"}
+
+
+def check_enum_kwargs(root: str) -> list[str]:
+    """Flag bare string constants passed as fabric=/sharing= under src/."""
+    errors: list[str] = []
+    for dirpath, _, files in os.walk(os.path.join(root, "src")):
+        for fname in sorted(files):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, root)
+            with open(path, encoding="utf-8") as f:
+                tree = ast.parse(f.read(), filename=rel)
+            for node in ast.walk(tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                for kw in node.keywords:
+                    if (kw.arg in _ENUM_KWARGS
+                            and isinstance(kw.value, ast.Constant)
+                            and isinstance(kw.value.value, str)):
+                        errors.append(
+                            f"{rel}:{kw.value.lineno}: bare string "
+                            f"{kw.value.value!r} passed as {kw.arg}= "
+                            f"(use {_ENUM_KWARGS[kw.arg]})")
+    return errors
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--root", default=os.path.join(
@@ -139,6 +177,10 @@ def main(argv=None) -> None:
     print(f"# link check: {len(_doc_files(root))} files, "
           f"{len(errors)} dead links")
     errors += run_doc_examples(root)
+    enum_errors = check_enum_kwargs(root)
+    print(f"# enum call-site check: {len(enum_errors)} bare fabric/sharing "
+          f"strings under src/")
+    errors += enum_errors
 
     if errors:
         for e in errors:

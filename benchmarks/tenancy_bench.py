@@ -1,0 +1,178 @@
+"""Multi-tenant fabric sharing benchmark: shared planning vs serialization.
+
+Grids K (tenant count) x n x delta x sharing mode and, at each point, plans
+the tenant mix two ways through `repro.workloads.tenancy.plan_shared`:
+
+  - ``time-slice``     : K full-fabric tenants interleave whole collectives;
+                         hand-offs are carryover boundaries priced sparsely
+                         on the circuits that actually change, the joint DP
+                         allocates per-tenant and global reconfiguration
+                         budgets and minimizes weighted completion time;
+  - ``port-partition`` : K tenants own disjoint contiguous port subsets
+                         sized to their worlds and run concurrently with
+                         isolation ratio exactly 1.0.
+
+Every row records the naive-serialization baseline (each tenant planned
+independently, played back-to-back with a full-fabric swap per hand-off) on
+both metrics, plus the per-tenant measured isolation ratio and its
+structural bound.  Time-sliced rows also play the chosen interleaving
+through the sparse event-level fabric engine.
+
+Gates (exit 1 on violation; re-checked in CI against the committed baseline
+by `benchmarks.check_regression`, and every row's embedded shared plan is
+re-verified by `benchmarks.verify_gate`):
+
+  - shared completion <= naive serialization on every row, both sharing
+    modes and both metrics (makespan and weighted completion);
+  - every tenant's measured isolation ratio is within its structural bound
+    ``serialized / alone`` on every row;
+  - port-partitioned rows isolate perfectly (ratio 1.0 per tenant).
+
+Run via ``make tenancy-bench``; results land in BENCH_tenancy.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+DELTAS = (10e-6, 1e-3, 15e-3)
+MODES = ("time-slice", "port-partition")
+KS = (2, 3)
+
+
+def make_tenants(K: int, n: int, sharing: str, seed: int = 0):
+    """A deterministic K-tenant mix of heterogeneous workloads.
+
+    Time-sliced tenants all span the full fabric; port-partitioned tenants
+    split it into K equal contiguous shares.
+    """
+    from repro.workloads import (TenantSpec, decode_ag_trace, mixed_trace,
+                                 moe_a2a_trace)
+
+    world = n if sharing == "time-slice" else n // K
+    gens = (
+        lambda w, s: mixed_trace(w, seed=s),
+        lambda w, s: decode_ag_trace(w, decode_steps=4, seed=s, jitter=0.25),
+        lambda w, s: moe_a2a_trace(w, layers=2, seed=s),
+    )
+    weights = (2.0, 1.0, 1.5)
+    share = None if sharing == "time-slice" else 1.0 / K
+    return tuple(
+        TenantSpec(name=f"job-{i}", trace=gens[i % len(gens)](world, seed + i),
+                   weight=weights[i % len(weights)], port_share=share)
+        for i in range(K))
+
+
+def bench_grid(ks=KS, ns=(16, 48), deltas=DELTAS, modes=MODES,
+               chunks: int = 4) -> list[dict]:
+    from repro.core import PAPER_DEFAULT, FabricSim
+    from repro.workloads import SharedFabricRequest, plan_shared
+
+    rows = []
+    for sharing in modes:
+        for K in ks:
+            for n in ns:
+                if sharing == "port-partition" and n % K:
+                    continue
+                tenants = make_tenants(K, n, sharing)
+                for delta in deltas:
+                    cm = PAPER_DEFAULT.replace(delta=delta)
+                    req = SharedFabricRequest(
+                        tenants=tenants, n=n, cost_model=cm, sharing=sharing)
+                    sp = plan_shared(req)
+                    exec_s = None
+                    if sharing == "time-slice":
+                        sim = FabricSim(chunks_per_msg=chunks, mode="sparse")
+                        exec_s = sim.run_trace(sp.fabric_phases(),
+                                               cm).completion
+                    rows.append({
+                        "sharing": sharing, "K": K, "n": n, "delta": delta,
+                        "phases": len(sp.phases),
+                        "shared_s": sp.makespan_s,
+                        "weighted_s": sp.weighted_completion_s,
+                        "serialized_s": sp.serialized_s,
+                        "serialized_weighted_s": sp.serialized_weighted_s,
+                        "win_vs_serialized": round(
+                            sp.serialized_s / sp.makespan_s, 6),
+                        "weighted_win": round(
+                            sp.serialized_weighted_s
+                            / sp.weighted_completion_s, 6),
+                        "isolation": {t.name: round(t.isolation, 6)
+                                      for t in sp.tenants},
+                        "isolation_bound": {
+                            t.name: round(t.isolation_bound, 6)
+                            for t in sp.tenants},
+                        "exec_sparse_s": exec_s,
+                        # the full artifact, re-verified by verify_gate
+                        "shared_plan": sp.to_dict(),
+                    })
+    return rows
+
+
+def check_gates(rows: list[dict]) -> list[str]:
+    errors = []
+    tol = 1 + 1e-9
+    for row in rows:
+        key = (f"sharing={row['sharing']} K={row['K']} n={row['n']} "
+               f"delta={row['delta']}")
+        if row["shared_s"] > row["serialized_s"] * tol:
+            errors.append(f"{key}: shared makespan {row['shared_s']} > "
+                          f"serialized {row['serialized_s']}")
+        if row["weighted_s"] > row["serialized_weighted_s"] * tol:
+            errors.append(f"{key}: shared weighted completion "
+                          f"{row['weighted_s']} > serialized "
+                          f"{row['serialized_weighted_s']}")
+        for name, iso in row["isolation"].items():
+            bound = row["isolation_bound"][name]
+            if iso > bound * tol:
+                errors.append(f"{key}: tenant {name} isolation {iso} "
+                              f"exceeds its bound {bound}")
+            if row["sharing"] == "port-partition" and abs(iso - 1.0) > 1e-9:
+                errors.append(f"{key}: port-partitioned tenant {name} is "
+                              f"not perfectly isolated (ratio {iso})")
+    return errors
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small grid for CI (subset of the full grid so the "
+                         "committed baseline still covers every row)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        rows = bench_grid(ks=(2,), ns=(16,), deltas=(10e-6, 15e-3))
+    else:
+        rows = bench_grid()
+    print("sharing,K,n,delta,phases,shared_s,serialized_s,win,weighted_win,"
+          "max_isolation")
+    for row in rows:
+        print(f"{row['sharing']},{row['K']},{row['n']},{row['delta']},"
+              f"{row['phases']},{row['shared_s']:.6e},"
+              f"{row['serialized_s']:.6e},{row['win_vs_serialized']},"
+              f"{row['weighted_win']},"
+              f"{max(row['isolation'].values()):.4f}")
+    errors = check_gates(rows)
+    if errors:
+        # gate first: never overwrite the committed baseline with violating data
+        for e in errors:
+            print(f"# FAIL: {e}", file=sys.stderr)
+        sys.exit(1)
+    if args.json:
+        out = {
+            "meta": {
+                "what": "multi-tenant fabric sharing: port-partitioned and "
+                        "time-sliced shared planning vs naive serialization "
+                        "over K x n x delta x sharing mode "
+                        "(repro.workloads.tenancy, BENCH_tenancy baseline)",
+            },
+            "rows": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"# wrote {len(rows)} rows to {args.json}")
+
+
+if __name__ == "__main__":
+    main()

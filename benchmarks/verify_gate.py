@@ -19,8 +19,10 @@ Usage:
     python -m benchmarks.verify_gate [--root DIR] [--max-pool N]
 
 Reads whichever of BENCH_planner.json / BENCH_trace.json /
-BENCH_online.json / BENCH_sim_scale.json / BENCH_faults.json exist under
---root (default: the repository root, next to this package).  The faults
+BENCH_online.json / BENCH_sim_scale.json / BENCH_faults.json /
+BENCH_tenancy.json exist under --root (default: the repository root, next
+to this package).  Tenancy rows embed the full shared plan artifact, which
+is round-tripped and audited by the ``tenant/*`` rules.  The faults
 baseline is the one exception to the no-simulator rule: re-deriving each
 row's `DegradedState` requires replaying the faulted trace, after which the
 ``fault/*`` rules audit the degraded state and recovery plan statically.
@@ -192,6 +194,27 @@ def audit_faults(rows: list[dict]) -> tuple[list[str], int]:
     return findings, audited
 
 
+def audit_tenancy(rows: list[dict]) -> tuple[list[str], int]:
+    """Round-trip every row's embedded shared plan and audit tenant/* rules.
+
+    The bench commits the full ``SharedPlan.to_dict()`` artifact per row, so
+    the gate needs no re-planning: deserialize and hand it to
+    `verify_shared_plan`, which re-derives hand-off pricing, budgets,
+    completions, and the isolation bounds from the embedded request.
+    """
+    from repro.analysis import verify_shared_plan
+    from repro.workloads import SharedPlan
+
+    findings, audited = [], 0
+    for row in rows:
+        sp = SharedPlan.from_dict(row["shared_plan"])
+        audited += 1
+        findings += [f"tenancy sharing={row['sharing']} K={row['K']} "
+                     f"n={row['n']} delta={row['delta']}: {v}"
+                     for v in verify_shared_plan(sp)]
+    return findings, audited
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--root", default=os.path.join(
@@ -242,6 +265,15 @@ def main(argv=None) -> None:
               f"{len(found)} violations")
     else:
         print("# skip BENCH_faults.json: not present")
+    rows = _load_rows(args.root, "BENCH_tenancy.json")
+    if rows:
+        found, audited = audit_tenancy(rows)
+        findings += found
+        total += audited
+        print(f"# BENCH_tenancy.json: {audited} shared plans audited, "
+              f"{len(found)} violations")
+    else:
+        print("# skip BENCH_tenancy.json: not present")
 
     if total == 0:
         print("# FAIL: no baselines found to audit", file=sys.stderr)

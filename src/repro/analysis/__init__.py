@@ -18,14 +18,16 @@ from .certifier import (certify_batch, certify_lane, certify_trace_batch,
                         partition_backends)
 from .verifier import (clear_verifier_caches, verify_degraded, verify_plan,
                        verify_recovery, verify_schedule, verify_served_plan,
-                       verify_snapshot, verify_tape, verify_timeline,
-                       verify_trace_plan, verify_window_choice)
+                       verify_shared_plan, verify_snapshot, verify_tape,
+                       verify_timeline, verify_trace_plan,
+                       verify_window_choice)
 from .violations import VerificationError, Violation, raise_on_violations
 
 __all__ = [
     "Violation", "VerificationError", "raise_on_violations",
     "verify_schedule", "verify_tape", "verify_plan", "verify_trace_plan",
-    "verify_served_plan", "verify_window_choice", "verify_snapshot",
+    "verify_served_plan", "verify_shared_plan", "verify_window_choice",
+    "verify_snapshot",
     "verify_timeline", "verify_degraded", "verify_recovery",
     "clear_verifier_caches",
     "certify_lane", "certify_trace_lane", "certify_batch",

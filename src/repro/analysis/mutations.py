@@ -26,8 +26,9 @@ from repro.core.cost_model import PAPER_DEFAULT
 from repro.core.schedules import Schedule, every_step_schedule, static_schedule
 
 from .verifier import (verify_degraded, verify_plan, verify_recovery,
-                       verify_schedule, verify_served_plan, verify_snapshot,
-                       verify_tape, verify_timeline, verify_trace_plan,
+                       verify_schedule, verify_served_plan,
+                       verify_shared_plan, verify_snapshot, verify_tape,
+                       verify_timeline, verify_trace_plan,
                        verify_window_choice)
 from .violations import Violation
 
@@ -132,6 +133,41 @@ def _good_window_choice():
     cands = phase_candidates("a2a", 16, 2, MB, PAPER_DEFAULT, "ocs", 0.0,
                              _planner())
     return tuple(window_dp(16, [cands, cands], PAPER_DEFAULT, init_g=1))
+
+
+@functools.lru_cache(maxsize=None)
+def _good_shared_plan():
+    """One real time-sliced shared plan (K=2 tenants on one 16-port fabric)."""
+    from repro.workloads.tenancy import (SharedFabricRequest, TenantSpec,
+                                         plan_shared)
+    from repro.workloads.traces import CollectiveEvent, Trace
+
+    ta = Trace(name="mut-a", n=16, events=(
+        CollectiveEvent(kind="a2a", m_bytes=MB, tag="t0"),
+        CollectiveEvent(kind="ag", m_bytes=MB / 2, tag="t1")))
+    tb = Trace(name="mut-b", n=16, events=(
+        CollectiveEvent(kind="ag", m_bytes=MB / 4, tag="t0"),))
+    return plan_shared(SharedFabricRequest(
+        tenants=(TenantSpec("a", ta, weight=2.0), TenantSpec("b", tb)),
+        n=16, cost_model=PAPER_DEFAULT), planner=_planner())
+
+
+@functools.lru_cache(maxsize=None)
+def _good_partition_plan():
+    """One real port-partitioned shared plan (8 + 4 ports of 16)."""
+    from repro.workloads.tenancy import (SharedFabricRequest, TenantSpec,
+                                         plan_shared)
+    from repro.core.jsonio import SharingMode
+    from repro.workloads.traces import CollectiveEvent, Trace
+
+    tc = Trace(name="mut-c", n=8, events=(
+        CollectiveEvent(kind="a2a", m_bytes=MB, tag="t0"),))
+    td = Trace(name="mut-d", n=4, events=(
+        CollectiveEvent(kind="ag", m_bytes=MB / 2, tag="t0"),))
+    return plan_shared(SharedFabricRequest(
+        tenants=(TenantSpec("c", tc), TenantSpec("d", td)),
+        n=16, cost_model=PAPER_DEFAULT,
+        sharing=SharingMode.PORT_PARTITION), planner=_planner())
 
 
 @functools.lru_cache(maxsize=None)
@@ -313,6 +349,37 @@ def _build_mutations() -> tuple[Mutation, ...]:
         return verify_recovery(rr.degraded, rr.restart_plan,
                                clean_plan=rr.clean_plan)
 
+    def tenant_ports():
+        sp = _good_partition_plan()
+        t0 = _field_copy(sp.tenants[0], ports=(2, 10))
+        return verify_shared_plan(_field_copy(sp, tenants=(t0,
+                                                           sp.tenants[1])))
+
+    def tenant_route():
+        sp = _good_partition_plan()
+        # hand tenant 'c' (8 ports) tenant 'd''s 4-node plan: its schedules
+        # cannot span the partition it owns
+        t0 = _field_copy(sp.tenants[0], plan=sp.tenants[1].plan)
+        return verify_shared_plan(_field_copy(sp, tenants=(t0,
+                                                           sp.tenants[1])))
+
+    def tenant_order():
+        sp = _good_shared_plan()
+        return verify_shared_plan(_field_copy(sp, phases=sp.phases[:-1],
+                                              order=sp.order[:-1]))
+
+    def tenant_budget():
+        sp = _good_shared_plan()
+        victim = next(t for t in sp.tenants if t.paid_reconfigs > 0)
+        bad = tuple(_field_copy(t, paid_reconfigs=t.paid_reconfigs - 1)
+                    if t.name == victim.name else t for t in sp.tenants)
+        return verify_shared_plan(_field_copy(sp, tenants=bad))
+
+    def tenant_isolation():
+        sp = _good_shared_plan()
+        return verify_shared_plan(
+            _field_copy(sp, serialized_s=sp.makespan_s / 2))
+
     def snap_shape():
         return verify_snapshot(_field_copy(
             _good_snapshot(), node_ready=_good_snapshot().node_ready[:-1]))
@@ -380,6 +447,17 @@ def _build_mutations() -> tuple[Mutation, ...]:
                  window_paid),
         Mutation("window DP overspends the trace-wide cap", "window/cap",
                  window_cap),
+        # --- multi-tenant shared plans ----------------------------------------
+        Mutation("shared partition port ranges overlap", "tenant/ports",
+                 tenant_ports),
+        Mutation("shared partition schedule spans foreign ports",
+                 "tenant/route", tenant_route),
+        Mutation("shared interleaving drops a tenant phase", "tenant/order",
+                 tenant_order),
+        Mutation("shared paid-reconfig ledger understated", "tenant/budget",
+                 tenant_budget),
+        Mutation("shared makespan above serialized baseline",
+                 "tenant/isolation", tenant_isolation),
         # --- fabric snapshots -------------------------------------------------
         Mutation("snapshot port arrays truncated", "snap/shape", snap_shape),
         Mutation("snapshot parked on invalid circuit", "snap/range",

@@ -620,6 +620,190 @@ def verify_served_plan(sp, cm: "CostModel", overlap: float = 0.0
     return out
 
 
+def verify_shared_plan(sp) -> list[Violation]:
+    """Every multi-tenant rule on one `workloads.tenancy.SharedPlan`.
+
+    The request embedded in the plan carries the cost model, so the whole
+    ledger re-derives from the artifact alone:
+
+      tenant/ports     : port partitions are in-range, correctly sized, and
+                         pairwise disjoint (and within each tenant's
+                         declared port share).
+      tenant/route     : a partitioned tenant's schedules are sized to its
+                         own sub-fabric — no circuit can reach another
+                         tenant's ports.
+      tenant/order     : the time-sliced interleaving preserves each
+                         tenant's own event order and covers its trace
+                         exactly; completions re-derived from prefix sums.
+      tenant/budget    : per-tenant (and global) intra-collective
+                         reconfiguration stall re-summed against the caps.
+      tenant/isolation : measured isolation ratio consistent with the
+                         completion ledger and within the structural bound;
+                         shared completion never above the serialized
+                         baseline (both metrics).
+    """
+    out: list[Violation] = []
+    req = sp.request
+    cm, n, overlap = req.cost_model, req.n, req.overlap
+    loc = f"shared {str(req.sharing)} K={len(req.tenants)} n={n}"
+
+    def bad(rule: str, message: str, repro: str = ""):
+        out.append(Violation(rule=rule, location=loc, message=message,
+                             repro=repro))
+
+    specs = {t.name: t for t in req.tenants}
+    plans = {t.name: t for t in sp.tenants}
+    if set(specs) != set(plans):
+        bad("tenant/order", f"tenant plans {sorted(plans)} != requested "
+            f"tenants {sorted(specs)}")
+        return out
+    budgets = req.resolved_budgets()
+
+    if str(req.sharing) == "port-partition":
+        taken: list[tuple[int, int, str]] = []
+        for t in sp.tenants:
+            spec = specs[t.name]
+            where = f"{loc} tenant {t.name!r}"
+            if t.ports is None or t.plan is None:
+                bad("tenant/ports", f"tenant {t.name!r} has no port range "
+                    f"or plan under port partitioning")
+                continue
+            lo, hi = t.ports
+            if not (0 <= lo < hi <= n):
+                bad("tenant/ports", f"tenant {t.name!r} range [{lo}, {hi}) "
+                    f"is outside the fabric's [0, {n})")
+            if hi - lo != spec.trace.n:
+                bad("tenant/ports", f"tenant {t.name!r} owns {hi - lo} "
+                    f"ports but its world is {spec.trace.n}")
+            if spec.port_share is not None \
+                    and hi - lo > spec.port_share * n + 1e-12:
+                bad("tenant/ports", f"tenant {t.name!r} owns {hi - lo} "
+                    f"ports > its share {spec.port_share} of n={n}")
+            for lo2, hi2, other in taken:
+                if lo < hi2 and lo2 < hi:
+                    bad("tenant/ports", f"tenant {t.name!r} range "
+                        f"[{lo}, {hi}) overlaps {other!r} [{lo2}, {hi2})")
+            taken.append((lo, hi, t.name))
+            # tenant/route: every schedule must be sized to the tenant's own
+            # sub-fabric — a wider schedule would route across the partition
+            for i, p in enumerate(t.plan.phases):
+                if p.schedule.n != hi - lo:
+                    bad("tenant/route",
+                        f"tenant {t.name!r} phase {i} schedule spans "
+                        f"n={p.schedule.n} != its {hi - lo}-port partition")
+            out.extend(verify_trace_plan(t.plan, cm))
+            if not _close(t.completion_s, t.plan.total_time):
+                bad("tenant/order", f"tenant {t.name!r} completion "
+                    f"{t.completion_s!r} != its plan's total "
+                    f"{t.plan.total_time!r}  [{where}]")
+    else:
+        # tenant/order: per-tenant phase subsequences re-matched against
+        # the traces, completions re-derived from the prefix-sum ledger
+        seen = {name: 0 for name in specs}
+        prefix, last_done = 0.0, {name: 0.0 for name in specs}
+        g = None
+        for i, ph in enumerate(sp.phases):
+            if ph.tenant not in specs:
+                bad("tenant/order", f"phase {i} owned by unknown tenant "
+                    f"{ph.tenant!r}")
+                continue
+            expected = specs[ph.tenant].trace.phases()
+            j = seen[ph.tenant]
+            if j >= len(expected):
+                bad("tenant/order", f"phase {i} is tenant {ph.tenant!r}'s "
+                    f"{j + 1}th phase; its trace has only {len(expected)}")
+            else:
+                kind, m, tag = expected[j]
+                if (ph.plan.kind, ph.plan.m_bytes, ph.plan.tag) \
+                        != (kind, m, tag):
+                    bad("tenant/order", f"phase {i} planned "
+                        f"({ph.plan.kind!r}, m={ph.plan.m_bytes}, "
+                        f"{ph.plan.tag!r}) != tenant {ph.tenant!r}'s next "
+                        f"event ({kind!r}, m={m}, {tag!r})")
+            seen[ph.tenant] = j + 1
+            want_changed = (0 if g is None else
+                            changed_links(n, g,
+                                          _first_last_g(ph.plan.schedule)[0]))
+            if ph.boundary_changed != want_changed:
+                bad("tenant/order", f"phase {i} hand-off claims "
+                    f"{ph.boundary_changed} changed circuits, re-derived "
+                    f"{want_changed}")
+            want_cost = (cm.delta_sparse(want_changed, overlap)
+                         if g is not None else 0.0)
+            if not _close(ph.boundary_cost, want_cost):
+                bad("tenant/order", f"phase {i} hand-off cost "
+                    f"{ph.boundary_cost!r} != delta_sparse"
+                    f"({want_changed}) = {want_cost!r}")
+            g = _first_last_g(ph.plan.schedule)[1]
+            prefix += ph.boundary_cost + ph.plan.time
+            last_done[ph.tenant] = prefix
+        for name, cnt in seen.items():
+            want = len(specs[name].trace.phases())
+            if cnt != want:
+                bad("tenant/order", f"tenant {name!r} got {cnt} phases, "
+                    f"its trace flattens to {want}")
+        for t in sp.tenants:
+            if not _close(t.completion_s, last_done[t.name]):
+                bad("tenant/order", f"tenant {t.name!r} completion "
+                    f"{t.completion_s!r} != re-derived prefix sum "
+                    f"{last_done[t.name]!r}")
+        if not _close(sp.makespan_s, prefix):
+            bad("tenant/order", f"makespan {sp.makespan_s!r} != re-summed "
+                f"phases + hand-offs = {prefix!r}")
+
+    # tenant/budget: the stall ledgers re-summed against per-tenant caps and
+    # the global cap (same arithmetic slack as trace/budget)
+    unit = cm.delta_sparse(n, overlap)
+    total_paid = 0
+    for t in sp.tenants:
+        if str(req.sharing) == "port-partition" and t.plan is not None:
+            paid = sum(_paid_reconfigs(p.schedule) for p in t.plan.phases)
+            t_unit = cm.delta_sparse(specs[t.name].trace.n, overlap)
+        else:
+            paid = sum(_paid_reconfigs(ph.plan.schedule)
+                       for ph in sp.phases if ph.tenant == t.name)
+            t_unit = unit
+        total_paid += paid
+        if t.paid_reconfigs != paid:
+            bad("tenant/budget", f"tenant {t.name!r} claims "
+                f"{t.paid_reconfigs} paid reconfigurations, re-derived "
+                f"{paid}")
+        budget = budgets.get(t.name)
+        if budget is not None and t_unit > 0 \
+                and paid * t_unit > budget * (1 + REL_TOL) + t_unit * 1e-9:
+            bad("tenant/budget", f"tenant {t.name!r} spends "
+                f"{paid * t_unit!r} s of intra-collective stall > its "
+                f"budget {budget!r} s")
+    if req.delta_budget is not None and unit > 0 \
+            and total_paid * unit > req.delta_budget * (1 + REL_TOL) \
+            + unit * 1e-9:
+        bad("tenant/budget", f"fleet spends {total_paid * unit!r} s > the "
+            f"global budget {req.delta_budget!r} s")
+
+    # tenant/isolation: the measured ratios and the structural bound
+    weighted = sum(t.weight * t.completion_s for t in sp.tenants)
+    if not _close(sp.weighted_completion_s, weighted):
+        bad("tenant/isolation", f"weighted completion "
+            f"{sp.weighted_completion_s!r} != re-summed {weighted!r}")
+    if sp.makespan_s > sp.serialized_s * (1 + REL_TOL):
+        bad("tenant/isolation", f"shared makespan {sp.makespan_s!r} > "
+            f"serialized baseline {sp.serialized_s!r}")
+    if sp.weighted_completion_s > sp.serialized_weighted_s * (1 + REL_TOL):
+        bad("tenant/isolation", f"shared weighted completion "
+            f"{sp.weighted_completion_s!r} > serialized "
+            f"{sp.serialized_weighted_s!r}")
+    for t in sp.tenants:
+        if t.alone_s > 0 and not _close(t.isolation,
+                                        t.completion_s / t.alone_s):
+            bad("tenant/isolation", f"tenant {t.name!r} isolation "
+                f"{t.isolation!r} != completion/alone = "
+                f"{t.completion_s / t.alone_s!r}")
+        if t.isolation > t.isolation_bound * (1 + REL_TOL):
+            bad("tenant/isolation", f"tenant {t.name!r} isolation "
+                f"{t.isolation!r} exceeds its bound {t.isolation_bound!r}")
+    return out
+
+
 def verify_window_choice(n: int, chosen, *, init_spent: int = 0,
                          cap: int | None = None,
                          label: str = "window") -> list[Violation]:

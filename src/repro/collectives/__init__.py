@@ -19,7 +19,7 @@ __all__ = [
     "bridge_all_reduce", "bruck_all_reduce", "ring_all_gather",
     "ring_all_reduce", "ring_reduce_scatter",
     "compressed_all_reduce", "make_error_feedback_state",
-    "CollectivePlan", "plan_gradient_sync",
+    "CollectivePlan", "gradient_sync_plan", "plan_gradient_sync",
 ]
 
 if HAS_JAX:
@@ -29,7 +29,8 @@ if HAS_JAX:
     from .bruck_a2a import bruck_all_to_all
     from .bruck_rs_ag import bruck_all_gather, bruck_reduce_scatter
     from .compression import compressed_all_reduce, make_error_feedback_state
-    from .schedule_bridge import CollectivePlan, plan_gradient_sync
+    from .schedule_bridge import (CollectivePlan, gradient_sync_plan,
+                                  plan_gradient_sync)
 else:  # pragma: no cover - exercised on jax-less installs (subprocess test)
     def __getattr__(name):
         if name in __all__:

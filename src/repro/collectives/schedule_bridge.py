@@ -1,10 +1,12 @@
 """Glue: BRIDGE schedule synthesis -> collective implementation choice.
 
-`plan_gradient_sync` is the deployment entry point: given the data-parallel
+`gradient_sync_plan` is the deployment entry point: given the data-parallel
 axis size and the gradient payload, it plans the paper's Section 3.6
 composite AllReduce under the hardware cost model and returns which
 collective implementation the training step should lower (and with which
-reconfiguration schedules).
+reconfiguration schedules).  `plan_gradient_sync` is the deprecated legacy
+alias (it warns; the README "Deprecated entry points" section documents the
+removal path).
 
 It is a documented thin wrapper over the unified planner: it issues one
 `repro.planner.PlanRequest` with the composite kind ``ar`` (= RS phase + AG
@@ -22,9 +24,11 @@ paper's model scores (DESIGN.md Section 3):
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 from repro.core import CostModel
 from repro.core.cost_model import TPU_V5E
+from repro.core.jsonio import FabricKind
 from repro.core.schedules import Schedule
 from repro.planner import PlanRequest, default_planner, default_strategy_names
 
@@ -38,28 +42,28 @@ class CollectivePlan:
     alternatives: dict[str, float]
 
 
-def plan_gradient_sync(
+def gradient_sync_plan(
     n: int,
     m_bytes: float,
     cm: CostModel | None = None,
     allow: tuple[str, ...] = ("bruck", "ring"),
-    fabric: str = "static",
+    fabric: FabricKind = FabricKind.STATIC,
 ) -> CollectivePlan:
     """Pick the best gradient-allreduce strategy for n devices / m bytes.
 
-    fabric='static' (TPU ICI): Bruck is costed with *static* semantics — a
+    fabric=STATIC (TPU ICI): Bruck is costed with *static* semantics — a
     step at offset 2^k pays h = c = 2^k regardless of schedule (there is no
     OCS to rewire; DESIGN.md S3) and the returned schedules are None so the
-    lowering emits one ppermute per Bruck step.  fabric='ocs' uses the
+    lowering emits one ppermute per Bruck step.  fabric=OCS uses the
     paper's model where reconfigurations reset hop distances, and the
     returned schedules drive the optical fabric.
 
     Thin wrapper over ``default_planner().plan(PlanRequest(kind='ar', ...))``
     (the shared LRU-cached serving path — a training loop re-planning the
-    same gradient sync every step gets an amortized-O(1) answer); signature
-    and behavior are unchanged from the pre-planner version.
+    same gradient sync every step gets an amortized-O(1) answer).
     """
     cm = cm or TPU_V5E
+    fabric = FabricKind.coerce(fabric, warn=False)
     names: tuple[str, ...] = ()
     if "bruck" in allow:
         names += default_strategy_names()
@@ -76,7 +80,7 @@ def plan_gradient_sync(
     for a in res.alternatives:
         t = alts.get(a.impl)
         alts[a.impl] = a.predicted_time if t is None else min(t, a.predicted_time)
-    use_schedules = res.impl == "bruck" and fabric == "ocs"
+    use_schedules = res.impl == "bruck" and fabric == FabricKind.OCS
     return CollectivePlan(
         impl=res.impl,
         rs_schedule=res.rs_schedule if use_schedules else None,
@@ -84,3 +88,27 @@ def plan_gradient_sync(
         predicted_time=res.predicted_time,
         alternatives=alts,
     )
+
+
+def plan_gradient_sync(
+    n: int,
+    m_bytes: float,
+    cm: CostModel | None = None,
+    allow: tuple[str, ...] = ("bruck", "ring"),
+    fabric: str = "static",
+) -> CollectivePlan:
+    """Deprecated legacy alias of `gradient_sync_plan`.
+
+    .. deprecated::
+        Emits a `DeprecationWarning`; call `gradient_sync_plan` (or build a
+        `PlanRequest(kind="ar", ...)` directly).  README "Deprecated entry
+        points" documents the removal path.
+    """
+    warnings.warn(
+        "collectives.plan_gradient_sync is deprecated; call "
+        "collectives.gradient_sync_plan or construct a "
+        "PlanRequest(kind='ar', ...) and call repro.planner.Planner.plan "
+        "(see README 'Deprecated entry points' for the removal path)",
+        DeprecationWarning, stacklevel=2)
+    return gradient_sync_plan(n, m_bytes, cm, allow,
+                              FabricKind.coerce(fabric, warn=False))

@@ -624,10 +624,17 @@ def plan(
         point for all four collectives; use it directly for alternatives
         tables, constraints, fabric/objective selection, and serialization.
         Routes through `default_planner()` so repeated calls hit the shared
-        LRU plan cache.
+        LRU plan cache.  Emits a `DeprecationWarning`; removal path is
+        documented in the README ("Deprecated entry points").
     """
+    import warnings
+
     from repro.planner import PlanRequest, default_planner  # local: no cycle
 
+    warnings.warn(
+        "core.schedules.plan is deprecated; construct a PlanRequest and call "
+        "repro.planner.Planner.plan (see README 'Deprecated entry points' "
+        "for the removal path)", DeprecationWarning, stacklevel=2)
     res = default_planner().plan(PlanRequest(
         kind=kind, n=n, m_bytes=float(m), cost_model=cm, r=r,
         paper_faithful=paper_faithful))

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from repro import configs
 from repro.checkpoint import latest_step, restore_into, save
 from repro.collectives import (bruck_all_reduce, compressed_all_reduce,
-                               make_error_feedback_state, plan_gradient_sync)
+                               gradient_sync_plan, make_error_feedback_state)
 from repro.collectives._compat import shard_map as _shard_map
 from repro.data import SyntheticLM
 from repro.models import init_params, loss_fn
@@ -92,7 +92,7 @@ def make_train_step(cfg, tc: TrainConfig, mesh):
             if compressed:
                 grads, ef2 = compressed_all_reduce(grads, ef, axis)
             else:
-                plan = plan_gradient_sync(
+                plan = gradient_sync_plan(
                     n_dp, sum(g.size * g.dtype.itemsize
                               for g in jax.tree.leaves(grads)))
                 if plan.impl == "bruck":

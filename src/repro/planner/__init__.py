@@ -3,7 +3,7 @@
 One entry point for all four collectives — All-to-All, Reduce-Scatter,
 AllGather, and the composite AllReduce (``ar`` = RS + AG):
 
-    from repro.planner import Planner, PlanRequest
+    from repro.planner import FabricKind, Planner, PlanRequest
 
     res = Planner().plan(PlanRequest(kind="rs", n=96, m_bytes=16 * 2**20, r=3))
     res.schedule, res.predicted_time, res.breakdown, res.alternatives
@@ -13,7 +13,7 @@ Event-scored planning and the cached serving path:
 
     planner = default_planner()                    # process-wide, LRU-cached
     res = planner.plan(PlanRequest(kind="a2a", n=96, m_bytes=2**24,
-                                   fabric="ocs-sim"))   # batched event scores
+                                   fabric=FabricKind.OCS_SIM))  # event scores
     results = planner.plan_batch(requests)         # dedupes repeated traffic
     planner.cache_info()                           # hits / misses / size
 
@@ -24,8 +24,8 @@ and `repro.collectives.plan_gradient_sync` entry points are thin shims over
 this package.
 """
 from . import strategies  # noqa: F401  (registers the built-in families)
-from .api import (Candidate, PlanRequest, PlanResult,  # noqa: F401
-                  RankedAlternative)
+from .api import (Candidate, FabricKind, PlanRequest,  # noqa: F401
+                  PlanResult, RankedAlternative, SharingMode)
 from .planner import PlanCacheInfo, Planner, default_planner  # noqa: F401
 from .registry import (StrategyInfo, available_strategies,  # noqa: F401
                        default_strategy_names, get_strategy,
@@ -33,7 +33,8 @@ from .registry import (StrategyInfo, available_strategies,  # noqa: F401
                        unregister_strategy)
 
 __all__ = [
-    "Candidate", "PlanRequest", "PlanResult", "RankedAlternative",
+    "Candidate", "FabricKind", "PlanRequest", "PlanResult",
+    "RankedAlternative", "SharingMode",
     "PlanCacheInfo", "Planner", "default_planner",
     "StrategyInfo", "available_strategies", "default_strategy_names",
     "get_strategy", "register_strategy", "select_strategies",

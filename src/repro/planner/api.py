@@ -11,6 +11,13 @@ disk and shipped as benchmark artifacts.
 All floats survive the JSON round trip bit-exactly (json uses repr), and
 schedules are plain (kind, n, x, r) tuples, so
 ``PlanResult.from_json(res.to_json())`` reconstructs bit-identical schedules.
+
+Fabrics are selected with the typed `FabricKind` enum (re-exported here from
+`core.jsonio` together with the multi-tenant `SharingMode`); bare strings
+like ``fabric="ocs"`` keep working through a coercion shim but emit a
+`DeprecationWarning` — new call sites should write
+``fabric=FabricKind.OCS``.  JSON loaders round-trip the enums losslessly
+(`to_dict` stores the plain value, `from_dict` re-coerces silently).
 """
 from __future__ import annotations
 
@@ -19,20 +26,29 @@ import json
 from typing import Literal
 
 from repro.core.cost_model import CostModel, PAPER_DEFAULT
-from repro.core.jsonio import require_keys, require_positive_payload
+from repro.core.jsonio import (FabricKind, RequestBase, SharingMode,
+                               cost_model_from_dict, cost_model_to_dict,
+                               require_keys, require_positive_payload)
 from repro.core.schedules import Schedule
 from repro.core.simulator import TimeBreakdown
 
 PlanKind = Literal["a2a", "rs", "ag", "ar"]
 PLAN_KINDS = ("a2a", "rs", "ag", "ar")
-Fabric = Literal["static", "ocs", "ocs-overlap", "ocs-sim"]
-FABRICS = ("static", "ocs", "ocs-overlap", "ocs-sim")
+#: typed fabric selector (the old ``Fabric`` string-literal alias)
+Fabric = FabricKind
+FABRICS = tuple(f.value for f in FabricKind)
 Objective = Literal["time", "latency", "transmission"]
 OBJECTIVES = ("time", "latency", "transmission")
 
+__all__ = [
+    "Candidate", "FABRICS", "Fabric", "FabricKind", "OBJECTIVES",
+    "PLAN_KINDS", "PlanKind", "PlanRequest", "PlanResult",
+    "RankedAlternative", "SharingMode",
+]
+
 
 @dataclasses.dataclass(frozen=True)
-class PlanRequest:
+class PlanRequest(RequestBase):
     """One planning problem for the unified `Planner`.
 
     kind          : 'a2a' | 'rs' | 'ag' | 'ar' (composite AllReduce = RS+AG).
@@ -80,6 +96,15 @@ class PlanRequest:
                     Part of the request's canonical JSON, so the plan cache
                     never serves a plan computed under a different inherited
                     fabric state (requires a reconfigurable fabric).
+    tenant        : identity of the tenant this plan is for (multi-tenant
+                    fabric sharing, `repro.workloads.tenancy`).  Planning is
+                    tenant-independent for identical geometry, but the field
+                    is part of the canonical request JSON — and therefore
+                    the plan-cache key — so two tenants can never share a
+                    cached plan: a later tenant-specific pricing change
+                    (per-tenant budgets already differ) must never be served
+                    another tenant's stale entry (the same stale-hit bug
+                    class `init_g` fixed for carryover state).
     """
 
     kind: PlanKind
@@ -87,7 +112,7 @@ class PlanRequest:
     m_bytes: float
     cost_model: CostModel = PAPER_DEFAULT
     r: int = 2
-    fabric: Fabric = "ocs"
+    fabric: FabricKind = FabricKind.OCS
     overlap: float = 0.0
     objective: Objective = "time"
     paper_faithful: bool = False
@@ -96,54 +121,32 @@ class PlanRequest:
     delta_budget: float | None = None
     ports: int | None = None
     init_g: int | None = None
+    tenant: str | None = None
 
     def __post_init__(self):
         if self.kind not in PLAN_KINDS:
             raise ValueError(f"kind must be one of {PLAN_KINDS}, got {self.kind!r}")
-        if self.n < 2:
-            raise ValueError(f"need at least 2 nodes, got n={self.n}")
-        if self.r < 2:
-            raise ValueError(f"radix must be >= 2, got r={self.r}")
-        if self.m_bytes < 0:
-            raise ValueError(f"payload must be >= 0, got m_bytes={self.m_bytes}")
-        if self.fabric not in FABRICS:
-            raise ValueError(f"fabric must be one of {FABRICS}, got {self.fabric!r}")
-        if not 0.0 <= self.overlap <= 1.0:
-            raise ValueError(f"overlap must be in [0, 1], got {self.overlap}")
-        if self.overlap > 0.0 and self.fabric not in ("ocs-overlap", "ocs-sim"):
-            raise ValueError(
-                f"overlap={self.overlap} requires fabric='ocs-overlap' or "
-                f"'ocs-sim', got fabric={self.fabric!r}")
+        # shared n / r / m_bytes / delta_budget / fabric (coerced, bare
+        # strings warn) / overlap / init_g validation (core.jsonio)
+        self._validate_base()
         if self.objective not in OBJECTIVES:
             raise ValueError(
                 f"objective must be one of {OBJECTIVES}, got {self.objective!r}")
-        if self.fabric == "ocs-sim" and self.objective != "time":
+        if self.fabric == FabricKind.OCS_SIM and self.objective != "time":
             raise ValueError(
                 f"fabric='ocs-sim' event-scores total completion time only; "
                 f"objective must be 'time', got {self.objective!r}")
-        if self.fabric == "ocs-sim" and self.ports is not None:
+        if self.fabric == FabricKind.OCS_SIM and self.ports is not None:
             raise ValueError(
                 "fabric='ocs-sim' simulates a full-port OCS (the batch "
                 "engine has no Section 3.7 blocked-ring model); drop ports "
                 "or use the analytic 'ocs'/'ocs-overlap' fabrics")
         if self.max_R is not None and self.max_R < 0:
             raise ValueError(f"max_R must be >= 0, got {self.max_R}")
-        if self.delta_budget is not None and self.delta_budget < 0:
-            raise ValueError(f"delta_budget must be >= 0, got {self.delta_budget}")
         if self.ports is not None and self.ports < 1:
             raise ValueError(f"ports must be >= 1, got {self.ports}")
-        if self.init_g is not None:
-            if self.fabric == "static":
-                raise ValueError(
-                    "init_g (inherited fabric state) requires a "
-                    "reconfigurable fabric; a static fabric has no circuits "
-                    "to carry over")
-            if self.init_g < 1:
-                raise ValueError(
-                    f"init_g must be a positive link offset, got {self.init_g}")
         if self.strategies is not None and not isinstance(self.strategies, tuple):
             object.__setattr__(self, "strategies", tuple(self.strategies))
-        object.__setattr__(self, "m_bytes", float(self.m_bytes))
 
     def effective_max_R(self) -> int | None:
         """Tightest reconfiguration cap implied by max_R and delta_budget."""
@@ -159,13 +162,14 @@ class PlanRequest:
     def to_dict(self) -> dict:
         return {
             "kind": self.kind, "n": self.n, "m_bytes": self.m_bytes,
-            "cost_model": _cost_model_to_dict(self.cost_model),
-            "r": self.r, "fabric": self.fabric, "overlap": self.overlap,
+            "cost_model": cost_model_to_dict(self.cost_model),
+            "r": self.r, "fabric": self.fabric.value, "overlap": self.overlap,
             "objective": self.objective,
             "paper_faithful": self.paper_faithful,
             "strategies": list(self.strategies) if self.strategies is not None else None,
             "max_R": self.max_R, "delta_budget": self.delta_budget,
             "ports": self.ports, "init_g": self.init_g,
+            "tenant": self.tenant,
         }
 
     @staticmethod
@@ -174,23 +178,22 @@ class PlanRequest:
             d, required=("kind", "n", "m_bytes", "cost_model"),
             optional=("r", "fabric", "overlap", "objective",
                       "paper_faithful", "strategies", "max_R",
-                      "delta_budget", "ports", "init_g"),
+                      "delta_budget", "ports", "init_g", "tenant"),
             what="PlanRequest")
-        require_keys(d["cost_model"],
-                     required=("alpha_s", "alpha_h", "bandwidth", "delta"),
-                     what="PlanRequest.cost_model")
         strategies = d.get("strategies")
         return PlanRequest(
             kind=d["kind"], n=d["n"],
             m_bytes=require_positive_payload(d["m_bytes"], "PlanRequest"),
-            cost_model=CostModel(**d["cost_model"]),
-            r=d.get("r", 2), fabric=d.get("fabric", "ocs"),
+            cost_model=cost_model_from_dict(d["cost_model"], "PlanRequest"),
+            r=d.get("r", 2),
+            fabric=FabricKind.coerce(d.get("fabric", "ocs"), warn=False),
             overlap=d.get("overlap", 0.0),
             objective=d.get("objective", "time"),
             paper_faithful=d.get("paper_faithful", False),
             strategies=tuple(strategies) if strategies is not None else None,
             max_R=d.get("max_R"), delta_budget=d.get("delta_budget"),
             ports=d.get("ports"), init_g=d.get("init_g"),
+            tenant=d.get("tenant"),
         )
 
 
@@ -309,11 +312,6 @@ class PlanResult:
     @staticmethod
     def from_json(s: str) -> "PlanResult":
         return PlanResult.from_dict(json.loads(s))
-
-
-def _cost_model_to_dict(cm: CostModel) -> dict:
-    return {"alpha_s": cm.alpha_s, "alpha_h": cm.alpha_h,
-            "bandwidth": cm.bandwidth, "delta": cm.delta}
 
 
 def _schedule_to_dict(s: Schedule | None) -> dict | None:

@@ -57,7 +57,8 @@ from repro.core.simulator import (TimeBreakdown, allreduce_time,
                                   allreduce_time_overlap, collective_time,
                                   collective_time_overlap)
 
-from .api import Candidate, PlanRequest, PlanResult, RankedAlternative
+from .api import (Candidate, FabricKind, PlanRequest, PlanResult,
+                  RankedAlternative)
 from .registry import select_strategies
 
 
@@ -191,7 +192,7 @@ class Planner:
                 if sched is not None:
                     if max_R is not None and sched.R > max_R:
                         continue
-                    if req.fabric == "static" and sched.R > 0:
+                    if req.fabric == FabricKind.STATIC and sched.R > 0:
                         continue  # no OCS to rewire mid-collective
                 yield cand
 
@@ -199,7 +200,7 @@ class Planner:
         if cand.impl == "ring":
             return baselines.ring(kind, req.n, req.m_bytes, req.cost_model)
         assert cand.schedule is not None
-        if req.fabric in ("ocs-overlap", "ocs-sim"):
+        if req.fabric in (FabricKind.OCS_OVERLAP, FabricKind.OCS_SIM):
             # for ocs-sim this is the reported analytic decomposition; the
             # score itself comes from the batched event simulation
             return collective_time_overlap(cand.schedule, req.m_bytes,
@@ -249,7 +250,7 @@ class Planner:
                 f"no strategy produced a candidate for {req.kind} "
                 f"(strategies={req.strategies}, constraints may be infeasible)")
         sim_scores = (self._sim_scores(req, cands)
-                      if req.fabric == "ocs-sim" else {})
+                      if req.fabric == FabricKind.OCS_SIM else {})
 
         best: tuple[float, Candidate, TimeBreakdown, float] | None = None
         ranked: list[RankedAlternative] = []
@@ -281,7 +282,7 @@ class Planner:
     def _allreduce_bd(self, req: PlanRequest, rs_sched: Schedule,
                       ag_sched: Schedule) -> TimeBreakdown:
         """Combined RS+AG breakdown under the request's fabric semantics."""
-        if req.fabric in ("ocs-overlap", "ocs-sim"):
+        if req.fabric in (FabricKind.OCS_OVERLAP, FabricKind.OCS_SIM):
             return allreduce_time_overlap(rs_sched, ag_sched, req.m_bytes,
                                           req.cost_model, req.overlap,
                                           ports=req.ports)
@@ -297,7 +298,7 @@ class Planner:
         completions; the RS->AG topology transition is charged as a sparse
         swap exactly as `allreduce_time_overlap` does.
         """
-        if req.fabric != "ocs-sim":
+        if req.fabric != FabricKind.OCS_SIM:
             return _objective_score(bd, req.objective)
         rs_final = rs_res.schedule.link_offsets()[-1]
         ag_first = ag_res.schedule.link_offsets()[0]
@@ -350,7 +351,7 @@ class Planner:
                               Schedule | None, Schedule | None]] = []
         if want_bruck:
             rs_res = ag_res = None
-            if req.fabric != "static":
+            if req.fabric != FabricKind.STATIC:
                 rs_res, ag_res = self._plan_rs_ag_phases(req, sched_names)
                 rs_sched, ag_sched = rs_res.schedule, ag_res.schedule
                 name = f"bruck[{rs_res.strategy} + {ag_res.strategy}]"
@@ -363,7 +364,7 @@ class Planner:
             assert rs_sched is not None and ag_sched is not None
             bd = self._allreduce_bd(req, rs_sched, ag_sched)
             entry = self._entry_cost(req, rs_sched)
-            if req.fabric == "ocs-sim":
+            if req.fabric == FabricKind.OCS_SIM:
                 score = predicted = (
                     self._allreduce_score(req, rs_res, ag_res, bd) + entry)
             else:

@@ -14,7 +14,7 @@ from __future__ import annotations
 from repro.core import schedules as core_schedules
 from repro.core.schedules import every_step_schedule, static_schedule
 
-from .api import Candidate, PlanRequest
+from .api import Candidate, FabricKind, PlanRequest
 from .registry import register_strategy
 
 
@@ -69,7 +69,7 @@ def overlap_family(req: PlanRequest, kind: str):
     (or the batch engine) on these fabrics, so this family's role is to
     guarantee the schedule tables are in the candidate set even under an
     explicit ``strategies=("overlap",)`` subset."""
-    if req.fabric not in ("ocs-overlap", "ocs-sim"):
+    if req.fabric not in (FabricKind.OCS_OVERLAP, FabricKind.OCS_SIM):
         return
     for R, sched in enumerate(core_schedules.periodic_all(kind, req.n, req.r)):
         yield Candidate(f"overlap[periodic](R={R})", sched)

@@ -27,6 +27,11 @@ reuse argument one level:
   - `serve`         — `PlanService` answers windowed plan requests through
                       a serving LRU (carryover state in the key) with
                       `request_storm` measuring plans/sec and hit rate;
+  - `tenancy`       — multi-tenant fabric sharing: `plan_shared` allocates
+                      one fabric across K tenants by disjoint port
+                      partitions or whole-collective time slices, with
+                      per-tenant SLA weights, delta budgets, and measured
+                      isolation bounds;
   - `recovery`      — the failure → snapshot → re-plan → verify loop:
                       `run_with_recovery` maps a `core.faults.DegradedState`
                       back to whole events, re-plans the remainder at the
@@ -46,6 +51,9 @@ from .recovery import (RecoveryResult, reduced_trace, replan_after_fault,
                        run_with_recovery, split_events)
 from .serve import (PlanService, ServeCacheInfo, ServeRequest, ServedPlan,
                     StormResult, build_request_pool, request_storm)
+from .tenancy import (SharedFabricRequest, SharedPhase, SharedPlan,
+                      TenantPlan, TenantSpec, candidate_orders, plan_shared,
+                      score_shared_plans, shared_window_dp)
 from .trace_planner import (PhaseCandidate, PhasePlan, TRACE_PLAN_MODES,
                             TracePlan, phase_candidates, plan_trace,
                             window_dp)
@@ -63,4 +71,7 @@ __all__ = [
     "run_with_recovery", "split_events",
     "PlanService", "ServeCacheInfo", "ServeRequest", "ServedPlan",
     "StormResult", "build_request_pool", "request_storm",
+    "SharedFabricRequest", "SharedPhase", "SharedPlan", "TenantPlan",
+    "TenantSpec", "candidate_orders", "plan_shared", "score_shared_plans",
+    "shared_window_dp",
 ]

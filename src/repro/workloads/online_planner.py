@@ -37,6 +37,7 @@ from collections import deque
 from typing import Iterable, Sequence
 
 from repro.core.cost_model import CostModel, PAPER_DEFAULT
+from repro.core.jsonio import FabricKind
 
 from .trace_planner import (TRACE_FABRICS, PhaseCandidate, PhasePlan,
                             TracePlan, _finish, _phase_plan, phase_candidates,
@@ -105,7 +106,8 @@ class OnlinePlanner:
     """
 
     def __init__(self, n: int, *, r: int = 2, cm: CostModel = PAPER_DEFAULT,
-                 window: int = 4, fabric: str = "ocs", overlap: float = 0.0,
+                 window: int = 4, fabric: FabricKind = FabricKind.OCS,
+                 overlap: float = 0.0, tenant: str | None = None,
                  delta_budget: float | None = None, init_g: int | None = None,
                  init_spent: int = 0, planner=None, verify: bool = True):
         if n < 2:
@@ -114,10 +116,12 @@ class OnlinePlanner:
             raise ValueError(f"radix must be >= 2, got r={r}")
         if window < 1:
             raise ValueError(f"window must be >= 1, got {window}")
+        fabric = FabricKind.coerce(fabric)
         if fabric not in TRACE_FABRICS:
             raise ValueError(
-                f"fabric must be one of {TRACE_FABRICS}, got {fabric!r}")
-        if overlap and fabric != "ocs-overlap":
+                f"fabric must be one of {tuple(map(str, TRACE_FABRICS))}, "
+                f"got {str(fabric)!r}")
+        if overlap and fabric != FabricKind.OCS_OVERLAP:
             raise ValueError(f"overlap={overlap} requires fabric='ocs-overlap'")
         if delta_budget is not None and delta_budget < 0:
             raise ValueError(f"delta_budget must be >= 0, got {delta_budget}")
@@ -129,6 +133,7 @@ class OnlinePlanner:
             planner = default_planner()
         self.n, self.r = int(n), int(r)
         self.cm, self.fabric, self.overlap = cm, fabric, float(overlap)
+        self.tenant = tenant
         self.delta_budget = delta_budget
         self.window = int(window)
         self.planner = planner
@@ -247,7 +252,7 @@ class OnlinePlanner:
         phases = _flatten(window)
         cand_lists = [
             phase_candidates(kind, self.n, self.r, m, self.cm, self.fabric,
-                             self.overlap, self.planner)
+                             self.overlap, self.planner, tenant=self.tenant)
             for kind, m, _ in phases]
         self._plan = window_dp(
             self.n, cand_lists, self.cm, overlap=self.overlap,

@@ -39,6 +39,7 @@ import dataclasses
 
 from repro.core.cost_model import CostModel, PAPER_DEFAULT
 from repro.core.fabricsim import FabricSim, TraceFabricResult
+from repro.core.jsonio import FabricKind
 from repro.core.faults import DegradedState, FaultTimeline
 
 from .online_planner import OnlinePlanner, OnlineStats
@@ -88,7 +89,8 @@ def reduced_trace(trace: Trace, degraded: DegradedState) -> Trace:
 
 def replan_after_fault(trace: Trace, degraded: DegradedState,
                        cm: CostModel = PAPER_DEFAULT, *,
-                       fabric: str = "ocs", overlap: float = 0.0,
+                       fabric: FabricKind = FabricKind.OCS,
+                       overlap: float = 0.0,
                        delta_budget: float | None = None, planner=None,
                        verify: bool = True) -> tuple[TracePlan, OnlineStats]:
     """Re-plan the remaining stream over the surviving world.
@@ -160,7 +162,8 @@ class RecoveryResult:
 
 
 def run_with_recovery(trace: Trace, cm: CostModel = PAPER_DEFAULT, *,
-                      faults: FaultTimeline, fabric: str = "ocs",
+                      faults: FaultTimeline,
+                      fabric: FabricKind = FabricKind.OCS,
                       overlap: float = 0.0,
                       delta_budget: float | None = None, planner=None,
                       engine_mode: str = "sparse", chunks_per_msg: int = 8,

@@ -37,7 +37,7 @@ from collections import OrderedDict
 from typing import NamedTuple, Sequence
 
 from repro.core.cost_model import CostModel, PAPER_DEFAULT
-from repro.core.jsonio import require_keys
+from repro.core.jsonio import FabricKind, RequestBase, require_keys
 from repro.core.schedules import changed_links
 
 from .trace_planner import (TRACE_FABRICS, PhasePlan, phase_candidates,
@@ -64,40 +64,40 @@ class ServeCacheInfo(NamedTuple):
 
 
 @dataclasses.dataclass(frozen=True)
-class ServeRequest:
+class ServeRequest(RequestBase):
     """One job's windowed plan request.
 
     events : the job's visible window of upcoming collectives (>= 1).
     n, r   : fabric world size and Bruck radix.
     init_g : link offset the job's previous collective left the fabric at
              (None = fresh fabric, no entry boundary).
+    tenant : requesting tenant's identity (multi-tenant serving).  Part of
+             the request key: two tenants with identical windows must never
+             share a cached `ServedPlan` (same stale-hit class as init_g —
+             a tenant's entry may be priced for another tenant's state).
     """
 
     events: tuple[CollectiveEvent, ...]
     n: int
     r: int = 2
     init_g: int | None = None
+    tenant: str | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "events", tuple(self.events))
         if not self.events:
             raise ValueError("a serve request needs at least one event")
-        if self.n < 2:
-            raise ValueError(f"need at least 2 nodes, got n={self.n}")
-        if self.r < 2:
-            raise ValueError(f"radix must be >= 2, got r={self.r}")
-        if self.init_g is not None and self.init_g < 1:
-            raise ValueError(
-                f"init_g must be a positive link offset, got {self.init_g}")
+        self._validate_base()
 
     def to_dict(self) -> dict:
         return {"events": [ev.to_dict() for ev in self.events],
-                "n": self.n, "r": self.r, "init_g": self.init_g}
+                "n": self.n, "r": self.r, "init_g": self.init_g,
+                "tenant": self.tenant}
 
-    @staticmethod
-    def from_dict(d: dict) -> "ServeRequest":
-        require_keys(d, required=("events", "n"), optional=("r", "init_g"),
-                     what="ServeRequest")
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServeRequest":
+        require_keys(d, required=("events", "n"),
+                     optional=("r", "init_g", "tenant"), what="ServeRequest")
         init_g = d.get("init_g")
         if init_g is not None and not 1 <= init_g < d["n"]:
             raise ValueError(
@@ -105,7 +105,8 @@ class ServeRequest:
                 f"init_g={init_g} with n={d['n']}")
         return ServeRequest(
             events=tuple(CollectiveEvent.from_dict(e) for e in d["events"]),
-            n=d["n"], r=d.get("r", 2), init_g=init_g)
+            n=d["n"], r=d.get("r", 2), init_g=init_g,
+            tenant=d.get("tenant"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,14 +172,17 @@ class PlanService:
                  surfaced in `cache_info`.
     """
 
-    def __init__(self, *, cm: CostModel = PAPER_DEFAULT, fabric: str = "ocs",
+    def __init__(self, *, cm: CostModel = PAPER_DEFAULT,
+                 fabric: FabricKind = FabricKind.OCS,
                  overlap: float = 0.0, cache_size: int = 512, planner=None,
                  verify: bool = True, max_retries: int = 1,
                  retry_backoff_s: float = 0.0):
+        fabric = FabricKind.coerce(fabric)
         if fabric not in TRACE_FABRICS:
             raise ValueError(
-                f"fabric must be one of {TRACE_FABRICS}, got {fabric!r}")
-        if overlap and fabric != "ocs-overlap":
+                f"fabric must be one of {tuple(map(str, TRACE_FABRICS))}, "
+                f"got {str(fabric)!r}")
+        if overlap and fabric != FabricKind.OCS_OVERLAP:
             raise ValueError(f"overlap={overlap} requires fabric='ocs-overlap'")
         if cache_size < 0:
             raise ValueError(f"cache_size must be >= 0, got {cache_size}")
@@ -278,7 +282,7 @@ class PlanService:
         phases = _flatten(req.events)
         cand_lists = [
             phase_candidates(kind, req.n, req.r, m, self.cm, self.fabric,
-                             self.overlap, self.planner)
+                             self.overlap, self.planner, tenant=req.tenant)
             for kind, m, _ in phases]
         chosen = window_dp(req.n, cand_lists, self.cm, overlap=self.overlap,
                            init_g=req.init_g,

@@ -36,13 +36,16 @@ import json
 from typing import Sequence
 
 from repro.core.cost_model import CostModel, PAPER_DEFAULT
+from repro.core.jsonio import FabricKind
 from repro.core.schedules import Schedule, changed_links, static_schedule
 from repro.core.simulator import collective_time, collective_time_overlap
 
 from .traces import Trace
 
 TRACE_PLAN_MODES = ("carryover", "cold", "static")
-TRACE_FABRICS = ("ocs", "ocs-overlap")
+#: fabrics a trace/window DP can price analytically (enum members; bare
+#: strings compare equal, so legacy membership checks keep working)
+TRACE_FABRICS = (FabricKind.OCS, FabricKind.OCS_OVERLAP)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,7 +86,7 @@ class TracePlan:
 
     trace: Trace
     mode: str
-    fabric: str
+    fabric: FabricKind
     overlap: float
     delta_budget: float | None
     phases: tuple[PhasePlan, ...]
@@ -119,7 +122,7 @@ class TracePlan:
         return {
             "version": 1,
             "trace": self.trace.to_dict(),
-            "mode": self.mode, "fabric": self.fabric,
+            "mode": self.mode, "fabric": str(self.fabric),
             "overlap": self.overlap, "delta_budget": self.delta_budget,
             "phases": [p.to_dict() for p in self.phases],
             "boundary_changed": list(self.boundary_changed),
@@ -131,7 +134,8 @@ class TracePlan:
     def from_dict(d: dict) -> "TracePlan":
         return TracePlan(
             trace=Trace.from_dict(d["trace"]),
-            mode=d["mode"], fabric=d["fabric"], overlap=d["overlap"],
+            mode=d["mode"], fabric=FabricKind.coerce(d["fabric"], warn=False),
+            overlap=d["overlap"],
             delta_budget=d["delta_budget"],
             phases=tuple(PhasePlan.from_dict(p) for p in d["phases"]),
             boundary_changed=tuple(d["boundary_changed"]),
@@ -173,17 +177,22 @@ def _phase_time(sched: Schedule, m: float, cm: CostModel, fabric: str,
 
 
 def phase_candidates(kind: str, n: int, r: int, m: float, cm: CostModel,
-                     fabric: str, overlap: float,
-                     planner) -> list[PhaseCandidate]:
+                     fabric: FabricKind, overlap: float,
+                     planner, tenant: str | None = None
+                     ) -> list[PhaseCandidate]:
     """Full all-R candidate table of one phase, from the planner's ranked
     alternatives (ring-impl rows carry no schedule and are skipped).  Goes
     through the planner's plan cache, so repeated (kind, m) phases — and the
     online planner's re-plans over a shifted window — pay for the table once.
+    ``tenant`` tags the underlying `PlanRequest` (and therefore the plan-
+    cache key) with the requesting tenant's identity, so multi-tenant
+    serving never shares cached tables across tenants.
     """
     from repro.planner import PlanRequest  # deferred: planner imports core
 
     res = planner.plan(PlanRequest(kind=kind, n=n, m_bytes=m, cost_model=cm,
-                                   r=r, fabric=fabric, overlap=overlap))
+                                   r=r, fabric=FabricKind.coerce(fabric),
+                                   overlap=overlap, tenant=tenant))
     out = []
     for alt in res.alternatives:
         if alt.x is None:
@@ -295,9 +304,9 @@ def _finish(trace: Trace, mode: str, fabric: str, overlap: float,
 
 
 def plan_trace(trace: Trace, cm: CostModel = PAPER_DEFAULT, *,
-               mode: str = "carryover", fabric: str = "ocs",
+               mode: str = "carryover", fabric: FabricKind = FabricKind.OCS,
                overlap: float = 0.0, delta_budget: float | None = None,
-               planner=None) -> TracePlan:
+               planner=None, tenant: str | None = None) -> TracePlan:
     """Plan every collective of ``trace`` under one of the three modes.
 
     fabric       : 'ocs' (flat delta per intra-collective reconfiguration)
@@ -311,14 +320,17 @@ def plan_trace(trace: Trace, cm: CostModel = PAPER_DEFAULT, *,
                    carryover surcharge and are not counted against it.
     planner      : a `repro.planner.Planner` (defaults to the process-wide
                    `default_planner()`, sharing its plan cache).
+    tenant       : requesting tenant's identity; tags every underlying
+                   `PlanRequest` so the shared plan cache is tenant-keyed.
     """
     if mode not in TRACE_PLAN_MODES:
         raise ValueError(f"mode must be one of {TRACE_PLAN_MODES}, got {mode!r}")
+    fabric = FabricKind.coerce(fabric)
     if fabric not in TRACE_FABRICS:
         raise ValueError(
-            f"fabric must be one of {TRACE_FABRICS}, got {fabric!r} "
-            f"(event-level scoring of a planned trace goes through "
-            f"FabricSim.run_trace)")
+            f"fabric must be one of {tuple(map(str, TRACE_FABRICS))}, "
+            f"got {str(fabric)!r} (event-level scoring of a planned trace "
+            f"goes through FabricSim.run_trace)")
     if overlap and fabric != "ocs-overlap":
         raise ValueError(f"overlap={overlap} requires fabric='ocs-overlap'")
     if delta_budget is not None and delta_budget < 0:
@@ -351,7 +363,8 @@ def plan_trace(trace: Trace, cm: CostModel = PAPER_DEFAULT, *,
         for kind, m, tag in phases:
             res = planner.plan(PlanRequest(
                 kind=kind, n=n, m_bytes=m, cost_model=cm, r=r, fabric=fabric,
-                overlap=overlap, delta_budget=per_phase_budget))
+                overlap=overlap, delta_budget=per_phase_budget,
+                tenant=tenant))
             sched = res.schedule
             assert sched is not None
             plans.append(PhasePlan(
@@ -367,7 +380,8 @@ def plan_trace(trace: Trace, cm: CostModel = PAPER_DEFAULT, *,
     cap: int | None = None
     if delta_budget is not None and unit > 0:
         cap = int(delta_budget / unit + 1e-12)
-    cand_lists = [phase_candidates(kind, n, r, m, cm, fabric, overlap, planner)
+    cand_lists = [phase_candidates(kind, n, r, m, cm, fabric, overlap, planner,
+                                   tenant=tenant)
                   for kind, m, _ in phases]
     chosen = window_dp(n, cand_lists, cm, overlap=overlap, cap=cap,
                        label=f"trace {trace.name!r}")

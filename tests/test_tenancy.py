@@ -1,0 +1,366 @@
+"""Multi-tenant fabric sharing (repro.workloads.tenancy): port-partition
+disjointness, shared <= serialized on a seeded grid, full-pause bit-equality
+with naive serialization, tenant-keyed plan-cache isolation, the typed
+FabricKind/SharingMode API with its deprecation shims, and lossless JSON
+round trips.
+
+The hypothesis properties (weight monotonicity of the optimal weighted
+objective, per-tenant completion never past the serialized baseline) run
+when hypothesis is installed (CI installs it).
+"""
+import json
+import warnings
+
+import pytest
+
+from repro.analysis import verify_shared_plan
+from repro.core import FabricSim, PAPER_DEFAULT
+from repro.planner import FabricKind, Planner, PlanRequest, SharingMode
+from repro.workloads import (CollectiveEvent, PlanService, ServeRequest,
+                             SharedFabricRequest, SharedPlan, TenantSpec,
+                             decode_ag_trace, mixed_trace, moe_a2a_trace,
+                             plan_shared, score_shared_plans)
+
+
+def _cm(delta):
+    return PAPER_DEFAULT.replace(delta=delta)
+
+
+def _tenants(k, world, *, shares=False, seed=0, weights=(2.0, 1.0, 1.5)):
+    gens = (
+        lambda n, s: mixed_trace(n, seed=s),
+        lambda n, s: decode_ag_trace(n, decode_steps=3, seed=s, jitter=0.25),
+        lambda n, s: moe_a2a_trace(n, layers=2, seed=s),
+    )
+    return tuple(
+        TenantSpec(name=f"t{i}", trace=gens[i % len(gens)](world, seed + i),
+                   weight=weights[i % len(weights)],
+                   port_share=(1.0 / k if shares else None))
+        for i in range(k))
+
+
+# --- port partition: disjoint ranges, perfect isolation ------------------------
+
+
+def test_port_partition_disjoint_and_verified():
+    """K=3 port-partitioned tenants get pairwise-disjoint in-range port
+    ranges sized to their worlds, isolate perfectly (ratio exactly 1.0),
+    and the whole artifact passes the tenant/* verifier rules."""
+    req = SharedFabricRequest(tenants=_tenants(3, 4, shares=True), n=12,
+                              cost_model=_cm(1e-3),
+                              sharing=SharingMode.PORT_PARTITION)
+    sp = plan_shared(req)
+    ranges = [t.ports for t in sp.tenants]
+    for lo, hi in ranges:
+        assert 0 <= lo < hi <= req.n
+    for i, (lo, hi) in enumerate(ranges):
+        assert hi - lo == sp.request.tenants[i].trace.n
+        for lo2, hi2 in ranges[i + 1:]:
+            assert hi <= lo2 or hi2 <= lo
+    for t in sp.tenants:
+        assert t.isolation == pytest.approx(1.0, abs=1e-12)
+        assert t.plan is not None and t.plan.total_time == t.completion_s
+    assert sp.phases == () and sp.order == ()
+    assert verify_shared_plan(sp) == []
+
+
+def test_port_partition_must_fit():
+    with pytest.raises(ValueError, match="does not fit"):
+        SharedFabricRequest(tenants=_tenants(3, 8), n=16,
+                            sharing=SharingMode.PORT_PARTITION)
+    with pytest.raises(ValueError, match="exceeds its port share"):
+        SharedFabricRequest(
+            tenants=(TenantSpec(name="a", trace=mixed_trace(8, seed=0),
+                                port_share=0.25),),
+            n=16, sharing=SharingMode.PORT_PARTITION)
+
+
+# --- shared never worse than naive serialization -------------------------------
+
+
+@pytest.mark.parametrize("delta", [10e-6, 1e-3, 15e-3])
+@pytest.mark.parametrize("k", [2, 3])
+@pytest.mark.parametrize("sharing", [SharingMode.TIME_SLICE,
+                                     SharingMode.PORT_PARTITION])
+def test_shared_never_worse_than_serialized(sharing, k, delta):
+    """The structural gate: on every grid point the shared plan beats (or
+    ties) playing the tenants' independent plans back-to-back with a
+    full-fabric swap per hand-off — on makespan AND weighted completion —
+    and every tenant stays within its structural isolation bound."""
+    n = 12
+    world = n if sharing == SharingMode.TIME_SLICE else n // k
+    req = SharedFabricRequest(
+        tenants=_tenants(k, world, shares=(sharing
+                                           == SharingMode.PORT_PARTITION)),
+        n=n, cost_model=_cm(delta), sharing=sharing)
+    sp = plan_shared(req)
+    tol = 1 + 1e-9
+    assert sp.makespan_s <= sp.serialized_s * tol
+    assert sp.weighted_completion_s <= sp.serialized_weighted_s * tol
+    for t in sp.tenants:
+        assert t.completion_s <= sp.makespan_s * tol
+        assert t.isolation <= t.isolation_bound * tol
+    assert verify_shared_plan(sp) == []
+
+
+def test_global_budget_split_and_caps():
+    """A global delta budget splits weight-proportionally across tenants
+    without their own budget; an explicit per-tenant budget wins; the paid
+    intra-collective stall respects every cap."""
+    tenants = (
+        TenantSpec(name="a", trace=mixed_trace(12, seed=0), weight=3.0),
+        TenantSpec(name="b", trace=mixed_trace(12, seed=1), weight=1.0,
+                   delta_budget=0.002),
+    )
+    req = SharedFabricRequest(tenants=tenants, n=12, cost_model=_cm(15e-3),
+                              delta_budget=0.01)
+    budgets = req.resolved_budgets()
+    assert budgets["b"] == 0.002
+    assert budgets["a"] == pytest.approx(0.008)  # the rest of the pool
+    sp = plan_shared(req)
+    unit = _cm(15e-3).delta_sparse(12, 0.0)
+    for t in sp.tenants:
+        assert t.paid_reconfigs * unit <= budgets[t.name] + unit * 1e-9
+    assert verify_shared_plan(sp) == []
+
+
+# --- full-pause playback vs serialization --------------------------------------
+
+
+def test_time_slice_full_pause_bit_equal_to_sum_of_independents():
+    """Under a full-pause fabric every phase pays the full swap, so playing
+    the interleaved tape equals accumulating each phase's independent run
+    left-to-right — bit-for-bit, not approximately: time-slicing's win
+    comes only from sparse (changed==0) hand-offs, which full-pause
+    playback does not price."""
+    req = SharedFabricRequest(tenants=_tenants(2, 12), n=12,
+                              cost_model=_cm(1e-3))
+    sp = plan_shared(req)
+    tape = sp.fabric_phases()
+    assert len(tape) == len(sp.phases) > 0
+    sim = FabricSim(chunks_per_msg=4, mode="full-pause")
+    whole = sim.run_trace(tape, req.cost_model).completion
+    total = 0.0
+    for phase in tape:
+        total += sim.run_trace([phase], req.cost_model).completion
+    assert whole == total  # bit-equal, by construction of full-pause mode
+
+
+def test_sparse_playback_matches_batch_scoring():
+    """`score_shared_plans` (batch engine) agrees with scalar sparse
+    FabricSim playback of the same interleaved tape."""
+    req = SharedFabricRequest(tenants=_tenants(2, 12), n=12,
+                              cost_model=_cm(1e-3))
+    sp = plan_shared(req)
+    batch = score_shared_plans([sp], req.cost_model, chunks_per_msg=4)
+    sim = FabricSim(chunks_per_msg=4, mode="sparse")
+    scalar = sim.run_trace(sp.fabric_phases(), req.cost_model).completion
+    assert batch[0] == pytest.approx(scalar, rel=1e-9)
+
+
+def test_fabric_phases_rejects_port_partition():
+    req = SharedFabricRequest(tenants=_tenants(2, 6, shares=True), n=12,
+                              sharing=SharingMode.PORT_PARTITION)
+    sp = plan_shared(req)
+    with pytest.raises(ValueError, match="port-partitioned"):
+        sp.fabric_phases()
+
+
+# --- tenant-keyed plan caches (stale-hit regression) ---------------------------
+
+
+def test_planner_cache_is_tenant_keyed():
+    """Two tenants with identical geometry must never share a Planner LRU
+    entry: a tenant-specific pricing change (per-tenant budgets already
+    differ) must not be served another tenant's stale plan."""
+    planner = Planner(verify=False)
+    base = dict(kind="a2a", n=8, m_bytes=1 << 20, cost_model=_cm(1e-3))
+    req_a = PlanRequest(tenant="tenant-a", **base)
+    req_b = PlanRequest(tenant="tenant-b", **base)
+    assert Planner.cache_key(req_a) != Planner.cache_key(req_b)
+    planner.plan(req_a)
+    planner.plan(req_b)
+    assert planner.cache_info().hits == 0
+    assert planner.cache_info().misses == 2
+    planner.plan(req_a)  # same tenant: a genuine hit
+    assert planner.cache_info().hits == 1
+
+
+def test_planner_cache_keys_per_tenant_budget():
+    base = dict(kind="rs", n=8, m_bytes=1 << 20, cost_model=_cm(15e-3))
+    with_budget = PlanRequest(delta_budget=0.001, **base)
+    without = PlanRequest(**base)
+    assert Planner.cache_key(with_budget) != Planner.cache_key(without)
+
+
+def test_serve_cache_is_tenant_keyed():
+    service = PlanService(cm=_cm(1e-3), verify=False)
+    events = (CollectiveEvent("a2a", 1 << 20, "x"),
+              CollectiveEvent("ag", 1 << 19, "y"))
+    req_a = ServeRequest(n=8, events=events, tenant="tenant-a")
+    req_b = ServeRequest(n=8, events=events, tenant="tenant-b")
+    assert PlanService.request_key(req_a) != PlanService.request_key(req_b)
+    service.serve(req_a)
+    service.serve(req_b)
+    assert service.cache_info().hits == 0
+    assert service.cache_info().misses == 2
+    service.serve(req_b)
+    assert service.cache_info().hits == 1
+
+
+# --- typed enums, deprecation shims, JSON round trips --------------------------
+
+
+def test_fabric_kind_coercion_warns_and_is_lossless():
+    with pytest.warns(DeprecationWarning, match="bare string"):
+        assert FabricKind.coerce("ocs") is FabricKind.OCS
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert FabricKind.coerce(FabricKind.OCS_SIM) is FabricKind.OCS_SIM
+        assert FabricKind.coerce("static", warn=False) is FabricKind.STATIC
+    with pytest.raises(ValueError, match="fabric"):
+        FabricKind.coerce("optical-teleport")
+
+
+def test_sharing_mode_coercion_warns_and_is_lossless():
+    with pytest.warns(DeprecationWarning, match="bare string"):
+        assert SharingMode.coerce("time-slice") is SharingMode.TIME_SLICE
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert (SharingMode.coerce("port-partition", warn=False)
+                is SharingMode.PORT_PARTITION)
+    with pytest.raises(ValueError, match="sharing"):
+        SharingMode.coerce("round-robin")
+
+
+def test_enums_compare_and_serialize_as_strings():
+    """str-subclass enums keep every legacy call site working: equality with
+    the bare string, str() round trip, and plain-string JSON payloads."""
+    assert FabricKind.OCS == "ocs" and str(FabricKind.OCS) == "ocs"
+    assert SharingMode.TIME_SLICE == "time-slice"
+    assert json.loads(json.dumps({"fabric": str(FabricKind.OCS_OVERLAP)})) \
+        == {"fabric": "ocs-overlap"}
+
+
+def test_plan_request_bare_string_warns_and_round_trips():
+    with pytest.warns(DeprecationWarning, match="bare string"):
+        req = PlanRequest(kind="a2a", n=8, m_bytes=1 << 20, fabric="ocs")
+    assert req.fabric is FabricKind.OCS
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # loaders must round-trip silently
+        back = PlanRequest.from_json(req.to_json())
+    assert back == req and back.fabric is FabricKind.OCS
+
+
+def test_shared_request_bare_string_warns_and_round_trips():
+    with pytest.warns(DeprecationWarning, match="bare string"):
+        req = SharedFabricRequest(tenants=_tenants(2, 12), n=12,
+                                  sharing="time-slice")
+    assert req.sharing is SharingMode.TIME_SLICE
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        back = SharedFabricRequest.from_dict(req.to_dict())
+    assert back == req
+    assert back.sharing is SharingMode.TIME_SLICE
+    assert back.fabric is FabricKind.OCS
+
+
+def test_shared_plan_json_round_trip_lossless():
+    req = SharedFabricRequest(tenants=_tenants(2, 12), n=12,
+                              cost_model=_cm(15e-3), delta_budget=0.01)
+    sp = plan_shared(req)
+    back = SharedPlan.from_json(sp.to_json())
+    assert back == sp
+    assert back.to_dict() == sp.to_dict()
+    assert verify_shared_plan(back) == []
+
+
+def test_deprecated_entry_points_warn():
+    from repro.collectives import gradient_sync_plan, plan_gradient_sync
+    from repro.core import schedules
+
+    with pytest.warns(DeprecationWarning, match="plan_gradient_sync"):
+        plan_gradient_sync(8, 1 << 20)
+    with pytest.warns(DeprecationWarning, match="core.schedules.plan"):
+        schedules.plan("a2a", 8, 1 << 20, PAPER_DEFAULT)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # the replacement is warning-free
+        gradient_sync_plan(8, 1 << 20)
+
+
+def test_tenant_spec_validation():
+    with pytest.raises(ValueError, match="weight"):
+        TenantSpec(name="a", trace=mixed_trace(8, seed=0), weight=0.0)
+    with pytest.raises(ValueError, match="non-empty"):
+        TenantSpec(name="", trace=mixed_trace(8, seed=0))
+    with pytest.raises(ValueError, match="unique"):
+        SharedFabricRequest(
+            tenants=(TenantSpec(name="a", trace=mixed_trace(8, seed=0)),
+                     TenantSpec(name="a", trace=mixed_trace(8, seed=1))),
+            n=8)
+
+
+# --- hypothesis properties (skipped when hypothesis is absent) -----------------
+
+
+def test_weighted_objective_monotone_in_sla_weight():
+    """Raising any tenant's SLA weight can only raise the optimal weighted
+    objective (every schedule's objective rises pointwise, so the min over
+    schedules rises), while the makespan gate keeps holding."""
+    hypothesis = pytest.importorskip("hypothesis")  # noqa: F841
+    from hypothesis import given, settings  # noqa: E402
+    from hypothesis import strategies as st  # noqa: E402
+
+    weights = st.tuples(st.floats(0.5, 4.0), st.floats(0.5, 4.0))
+
+    @settings(max_examples=8, deadline=None)
+    @given(w=weights, bump=st.floats(0.1, 2.0),
+           which=st.integers(min_value=0, max_value=1))
+    def prop(w, bump, which):
+        def solve(wa, wb):
+            tenants = (
+                TenantSpec(name="a", trace=mixed_trace(8, seed=0), weight=wa),
+                TenantSpec(name="b", trace=decode_ag_trace(
+                    8, decode_steps=3, seed=1), weight=wb),
+            )
+            return plan_shared(SharedFabricRequest(
+                tenants=tenants, n=8, cost_model=_cm(15e-3)))
+        base = solve(*w)
+        bumped = solve(w[0] + (bump if which == 0 else 0.0),
+                       w[1] + (bump if which == 1 else 0.0))
+        assert bumped.weighted_completion_s >= \
+            base.weighted_completion_s * (1 - 1e-9)
+        for sp in (base, bumped):
+            assert sp.makespan_s <= sp.serialized_s * (1 + 1e-9)
+
+    prop()
+
+
+def test_every_tenant_completion_within_serialized():
+    """No tenant ever finishes later than the naive serialization of the
+    whole mix — sharing a fabric can cost a tenant at most its structural
+    isolation bound, for any weighting."""
+    hypothesis = pytest.importorskip("hypothesis")  # noqa: F841
+    from hypothesis import given, settings  # noqa: E402
+    from hypothesis import strategies as st  # noqa: E402
+
+    @settings(max_examples=8, deadline=None)
+    @given(w=st.lists(st.floats(0.5, 4.0), min_size=2, max_size=3),
+           delta=st.sampled_from([10e-6, 1e-3, 15e-3]))
+    def prop(w, delta):
+        gens = (
+            lambda n, s: mixed_trace(n, seed=s),
+            lambda n, s: decode_ag_trace(n, decode_steps=3, seed=s),
+            lambda n, s: moe_a2a_trace(n, layers=2, seed=s),
+        )
+        tenants = tuple(
+            TenantSpec(name=f"t{i}", trace=gens[i % len(gens)](8, i),
+                       weight=wi) for i, wi in enumerate(w))
+        sp = plan_shared(SharedFabricRequest(
+            tenants=tenants, n=8, cost_model=_cm(delta)))
+        tol = 1 + 1e-9
+        for t in sp.tenants:
+            assert t.completion_s <= sp.serialized_s * tol
+            assert t.isolation <= t.isolation_bound * tol
+
+    prop()
